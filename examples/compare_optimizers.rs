@@ -1,0 +1,83 @@
+//! Scenario: the paper's core comparison on one task — FZOO vs MeZO vs
+//! Adam on the SNLI stand-in (RoBERTa-proxy, k=16), writing loss-vs-
+//! forward-pass curves to CSV (the Fig. 1 axes).
+//!
+//! ```sh
+//! cargo run --release --example compare_optimizers [steps_fzoo]
+//! ```
+
+use anyhow::Result;
+use fzoo::coordinator::{TrainOpts, Trainer};
+use fzoo::data::TaskKind;
+use fzoo::optim::OptimizerKind;
+use fzoo::runtime::{Runtime, Session};
+use fzoo::xp::hparams;
+
+fn main() -> Result<()> {
+    let steps_fzoo: u64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(400);
+    let rt = Runtime::load("artifacts")?;
+    std::fs::create_dir_all("reports")?;
+
+    let runs: Vec<(&str, OptimizerKind, u64)> = vec![
+        ("fzoo", hparams::kind("FZOO", false), steps_fzoo),
+        ("mezo", hparams::kind("MeZO", false), steps_fzoo * 4),
+        ("adam", hparams::kind("Adam", false), (steps_fzoo / 2).max(50)),
+    ];
+
+    let mut summary = Vec::new();
+    for (name, kind, steps) in runs {
+        let mut session = Session::open_pretrained(&rt, "roberta-prox")?;
+        let task = TaskKind::Snli
+            .instantiate(session.model_config(), 0)?
+            .with_k_shot(16);
+        let opts = TrainOpts {
+            steps,
+            eval_every: 0,
+            eval_batches: 12,
+            verbose: false,
+            ..Default::default()
+        };
+        let mut trainer = Trainer::with_opts(&rt, &mut session, task, kind, opts);
+        let h = trainer.train(steps)?;
+
+        let path = format!("reports/compare_snli_{name}.csv");
+        let mut csv = String::from("forward_equivalents,loss_ema\n");
+        let mut ema: Option<f64> = None;
+        for r in &h.records {
+            let sm = match ema {
+                None => r.loss as f64,
+                Some(p) => 0.9 * p + 0.1 * r.loss as f64,
+            };
+            ema = Some(sm);
+            csv.push_str(&format!("{},{sm:.5}\n", r.forward_equiv));
+        }
+        std::fs::write(&path, csv)?;
+        println!(
+            "{name:>5}: {steps} steps, final loss {:.4}, acc {:.3}, \
+             {:.0} fwd-equiv, {:.1} ms/step -> {path}",
+            h.last_loss(),
+            h.final_accuracy().unwrap_or(f64::NAN),
+            h.records.last().map(|r| r.forward_equiv).unwrap_or(0.0),
+            h.mean_step_wall_ms()
+        );
+        summary.push((name, h));
+    }
+
+    // who reached the lowest common loss first?
+    let common = summary
+        .iter()
+        .map(|(_, h)| h.loss_vs_forwards(0.9).last().unwrap().1)
+        .fold(f64::MIN, f64::max)
+        * 1.05;
+    println!("\nforward-equivalents to reach loss {common:.3}:");
+    for (name, h) in &summary {
+        match h.forwards_to_loss(common, 0.9) {
+            Some(f) => println!("  {name:>5}: {f:.0}"),
+            None => println!("  {name:>5}: not reached"),
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! Scenario (§4.3): training with a NON-DIFFERENTIABLE objective.
+//!
+//! The loss is `1 - token_F1(argmax span, gold span)` — it has no gradient
+//! anywhere (argmax), so first-order methods cannot touch it; FZOO only
+//! needs function values. This example trains the SQuAD-proxy span model
+//! on raw F1 and shows first-order Adam refusing the objective.
+//!
+//! ```sh
+//! cargo run --release --example nondiff_f1
+//! ```
+
+use anyhow::Result;
+use fzoo::coordinator::{TrainOpts, Trainer};
+use fzoo::data::TaskKind;
+use fzoo::optim::{Objective, OptimizerKind};
+use fzoo::runtime::{Runtime, Session};
+use fzoo::xp::hparams;
+
+fn main() -> Result<()> {
+    let rt = Runtime::load("artifacts")?;
+
+    // first-order on a non-differentiable objective: rejected by design
+    let mut session = Session::open_pretrained(&rt, "opt125-span")?;
+    let task = TaskKind::Squad.instantiate(session.model_config(), 0)?;
+    let kind = hparams::kind("Adam", false).with_objective(Objective::F1);
+    let mut t = Trainer::new(&rt, &mut session, task.clone(), kind);
+    match t.train(1) {
+        Err(e) => println!("Adam on 1-F1 correctly refused: {e}"),
+        Ok(_) => println!("!? Adam accepted a non-differentiable objective"),
+    }
+
+    // FZOO optimizes it directly
+    for method in ["MeZO", "FZOO"] {
+        let mut session = Session::open_pretrained(&rt, "opt125-span")?;
+        let task = TaskKind::Squad.instantiate(session.model_config(), 0)?;
+        let before = {
+            let tr = Trainer::new(
+                &rt,
+                &mut session,
+                task.clone(),
+                OptimizerKind::fzoo(0.0, 1e-3),
+            );
+            tr.evaluate()?.f1
+        };
+        let kind = hparams::kind(method, false).with_objective(Objective::F1);
+        let steps = if method == "FZOO" { 600 } else { 2400 };
+        let opts = TrainOpts {
+            steps,
+            eval_every: 0,
+            eval_batches: 12,
+            ..Default::default()
+        };
+        let mut trainer = Trainer::with_opts(&rt, &mut session, task, kind, opts);
+        let h = trainer.train(steps)?;
+        println!(
+            "{method:>5}: F1 {before:.3} -> {:.3} ({} steps on raw 1-F1, {:.0} forwards)",
+            h.final_f1().unwrap_or(f64::NAN),
+            h.steps_run,
+            h.records.last().map(|r| r.forwards).unwrap_or(0.0),
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,56 @@
+//! Quickstart: fine-tune a tiny encoder on the SST-2 stand-in with FZOO.
+//!
+//! ```sh
+//! make artifacts          # once: AOT-compile the models
+//! cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use fzoo::coordinator::{TrainOpts, Trainer};
+use fzoo::data::TaskKind;
+use fzoo::optim::OptimizerKind;
+use fzoo::runtime::{Runtime, Session};
+
+fn main() -> Result<()> {
+    // 1. load the AOT artifacts and start the PJRT CPU client
+    let rt = Runtime::load("artifacts")?;
+    println!("platform: {}", rt.platform());
+
+    // 2. open a model on its pretrained checkpoint (trained + cached on
+    //    first use — ZO fine-tuning needs a pretrained landscape)
+    let mut session = Session::open_pretrained(&rt, "tiny-enc")?;
+    println!("model: tiny-enc, d = {} parameters", session.d_trainable());
+
+    // 3. bind a task and train with FZOO (Algorithm 1: batched one-sided
+    //    estimates, sigma-normalized adaptive steps)
+    let task = TaskKind::Sst2.instantiate(session.model_config(), 0)?;
+    let opts = TrainOpts {
+        steps: 800,
+        eval_every: 200,
+        eval_batches: 8,
+        verbose: true,
+        ..Default::default()
+    };
+    let mut trainer = Trainer::with_opts(
+        &rt,
+        &mut session,
+        task,
+        OptimizerKind::fzoo(1e-2, 1e-3),
+        opts,
+    );
+    let history = trainer.train(800)?;
+
+    println!(
+        "\nfinal loss {:.4} | accuracy {:.3} | {:.0} forward passes | {:.2} ms/step",
+        history.last_loss(),
+        history.final_accuracy().unwrap_or(f64::NAN),
+        history.records.last().map(|r| r.forwards).unwrap_or(0.0),
+        history.mean_step_wall_ms(),
+    );
+    println!(
+        "sigma_t (adaptive step diagnostic) first/last: {:.4} / {:.4}",
+        history.records.first().and_then(|r| r.sigma).unwrap_or(0.0),
+        history.records.last().and_then(|r| r.sigma).unwrap_or(0.0),
+    );
+    Ok(())
+}

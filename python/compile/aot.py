@@ -1,0 +1,149 @@
+"""AOT pipeline: lower every step graph to HLO **text** + write the manifest.
+
+HLO text (NOT ``lowered.compiler_ir(...).serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which
+the xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Usage:
+    python -m compile.aot --out ../artifacts                  # DEFAULT_SET
+    python -m compile.aot --out ../artifacts --models all     # FULL_SET
+    python -m compile.aot --out ../artifacts --models e2e-10m,e2e-100m
+
+Incremental: a model's artifacts are skipped when its manifest block exists
+and every HLO file is newer than the compile/ sources.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .configs import CONFIGS, DEFAULT_SET, FULL_SET, config_dict
+from .params import init_params, init_prefix, layout, prefix_dim
+from .steps import executables
+
+DTYPE_NAMES = {"float32": "f32", "int32": "i32", "uint32": "u32"}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec_json(name, sds):
+    return {"name": name,
+            "dtype": DTYPE_NAMES[str(sds.dtype)],
+            "shape": list(sds.shape)}
+
+
+def lower_model(cfg, out_dir: str, manifest: dict, verbose=True):
+    mdir = os.path.join(out_dir, cfg.name)
+    os.makedirs(mdir, exist_ok=True)
+    lay = layout(cfg)
+
+    entry = {
+        "config": config_dict(cfg),
+        "d": lay.d,
+        "d_prefix": prefix_dim(cfg),
+        "layout": [{"name": l.name, "shape": list(l.shape), "offset": l.offset}
+                   for l in lay.leaves],
+        "executables": {},
+        "init": f"{cfg.name}/init.bin",
+    }
+
+    theta0 = init_params(cfg)
+    theta0.tofile(os.path.join(mdir, "init.bin"))
+    if cfg.n_prefix > 0:
+        init_prefix(cfg).tofile(os.path.join(mdir, "init_prefix.bin"))
+        entry["init_prefix"] = f"{cfg.name}/init_prefix.bin"
+
+    for exe_name, (fn, specs) in executables(cfg).items():
+        t0 = time.time()
+        args = [s for _, s in specs]
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{cfg.name}/{exe_name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        # output specs from the lowered signature
+        outs = jax.eval_shape(fn, *args)
+        entry["executables"][exe_name] = {
+            "file": fname,
+            "inputs": [spec_json(n, s) for n, s in specs],
+            "outputs": [spec_json(f"out{i}", o) for i, o in enumerate(outs)],
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+        }
+        if verbose:
+            print(f"  {cfg.name}/{exe_name}: {len(text)//1024}KB "
+                  f"({time.time()-t0:.1f}s)", flush=True)
+    manifest["models"][cfg.name] = entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default="default",
+                    help="'default', 'all', or comma-separated model names")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    if args.models == "default":
+        names = DEFAULT_SET
+    elif args.models == "all":
+        names = FULL_SET
+    else:
+        names = [n.strip() for n in args.models.split(",") if n.strip()]
+    for n in names:
+        if n not in CONFIGS:
+            sys.exit(f"unknown model config: {n} (have {sorted(CONFIGS)})")
+
+    out_dir = os.path.abspath(args.out)
+    os.makedirs(out_dir, exist_ok=True)
+    mpath = os.path.join(out_dir, "manifest.json")
+    manifest = {"version": 1, "models": {}}
+    if os.path.exists(mpath) and not args.force:
+        with open(mpath) as f:
+            manifest = json.load(f)
+        manifest.setdefault("models", {})
+
+    src_mtime = max(
+        os.path.getmtime(os.path.join(r, f))
+        for r, _, fs in os.walk(os.path.dirname(os.path.abspath(__file__)))
+        for f in fs if f.endswith(".py"))
+
+    for name in names:
+        cfg = CONFIGS[name]
+        entry = manifest["models"].get(name)
+        if entry and not args.force:
+            files = [os.path.join(out_dir, e["file"])
+                     for e in entry["executables"].values()]
+            files += [os.path.join(out_dir, entry["init"])]
+            if all(os.path.exists(f) and os.path.getmtime(f) >= src_mtime
+                   for f in files):
+                print(f"  {name}: up to date", flush=True)
+                continue
+        print(f"{name}:", flush=True)
+        lower_model(cfg, out_dir, manifest)
+        with open(mpath, "w") as f:
+            json.dump(manifest, f, indent=1)
+
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {mpath} ({len(manifest['models'])} models)")
+
+
+if __name__ == "__main__":
+    main()

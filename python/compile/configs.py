@@ -1,0 +1,118 @@
+"""Model configurations for the AOT pipeline.
+
+Every entry here becomes a directory of HLO-text artifacts plus a manifest
+block that the Rust coordinator reads. The *-prox models are laptop-scale
+proxies for the paper's model zoo (see DESIGN.md §6 Substitutions): same
+architecture family (encoder "RoBERTa-like" vs decoder "OPT/Llama/Phi-like")
+with sizes ordered like the paper's, so optimizer-vs-optimizer convergence
+ratios carry over while a single CPU can run the full experiment grid.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch: str            # 'encoder' | 'decoder'
+    vocab: int
+    dim: int
+    layers: int
+    heads: int
+    seq: int
+    n_classes: int       # classifier width (tasks use a prefix of classes)
+    head: str            # 'cls' | 'span'
+    batch: int
+    n_pert: int          # N — perturbation streams per FZOO step
+    mlp_ratio: int = 4
+    n_prefix: int = 0    # >0: prefix-tuning family (trainable prefix only)
+    extra_n: tuple = ()  # additional fzoo_losses variants (N ablation)
+
+    @property
+    def hdim(self) -> int:
+        return self.dim // self.heads
+
+
+# ---------------------------------------------------------------------------
+# Registry. `make artifacts` builds DEFAULT_SET; `make artifacts-all` builds
+# everything (the xp harness checks and tells you which set it needs).
+# ---------------------------------------------------------------------------
+
+# Proxy geometry note: table experiments sweep (task x optimizer x seed)
+# grids with thousands of ZO steps per cell on a CPU PJRT backend, so the
+# proxies are sized for ~50-200ms per FZOO step (measured) while keeping
+# the paper's *ordering* of model scales. See DESIGN.md §6.
+
+def _enc(name, **kw):
+    base = dict(arch="encoder", vocab=1024, dim=64, layers=3, heads=4,
+                seq=48, n_classes=8, head="cls", batch=8, n_pert=8)
+    base.update(kw)
+    return ModelConfig(name=name, **base)
+
+
+def _dec(name, **kw):
+    base = dict(arch="decoder", vocab=1024, dim=64, layers=3, heads=4,
+                seq=48, n_classes=8, head="cls", batch=8, n_pert=8)
+    base.update(kw)
+    return ModelConfig(name=name, **base)
+
+
+CONFIGS = {c.name: c for c in [
+    # -- tiny: unit/integration tests (both archs + span + prefix) ----------
+    _enc("tiny-enc", vocab=128, dim=32, layers=2, heads=2, seq=16,
+         n_classes=4, batch=4, n_pert=4),
+    _dec("tiny-dec", vocab=128, dim=32, layers=2, heads=2, seq=16,
+         n_classes=4, batch=4, n_pert=4),
+    _enc("tiny-enc-span", vocab=128, dim=32, layers=2, heads=2, seq=16,
+         n_classes=4, batch=4, n_pert=4, head="span"),
+    _enc("tiny-enc-prefix", vocab=128, dim=32, layers=2, heads=2, seq=16,
+         n_classes=4, batch=4, n_pert=4, n_prefix=4),
+
+    # -- paper proxies: masked-LM family (RoBERTa-large) --------------------
+    _enc("roberta-prox"),
+    _enc("roberta-prox-prefix", n_prefix=5),
+
+    # -- paper proxies: autoregressive family (OPT/Phi/Llama) ---------------
+    _dec("opt125-prox", dim=48, layers=2, extra_n=(2, 4, 16, 32)),
+    _dec("opt1b-prox", dim=64, layers=3),
+    _dec("opt2b-prox", dim=80, layers=3),
+    _dec("opt6b-prox", dim=96, layers=4),
+    _dec("opt13-prox", dim=112, layers=4),
+    _dec("opt30-prox", dim=128, layers=5),
+    _dec("opt66-prox", dim=160, layers=5),
+    _dec("phi2-prox", dim=80, layers=4),
+    _dec("llama3-prox", dim=96, layers=4),
+    _dec("opt1b-prox-prefix", dim=64, layers=3, n_prefix=5),
+    _dec("opt13-prox-prefix", dim=112, layers=4, n_prefix=5),
+
+    # -- span-head variants (SQuAD/DROP + non-differentiable F1, Table 4) ---
+    _dec("opt125-span", dim=48, layers=2, head="span"),
+    _dec("opt1b-span", dim=64, layers=3, head="span"),
+    _dec("opt2b-span", dim=80, layers=3, head="span"),
+    _dec("opt6b-span", dim=96, layers=4, head="span"),
+    _dec("opt13-span", dim=112, layers=4, head="span"),
+    _enc("roberta-span", head="span"),
+    _dec("phi2-span", dim=80, layers=4, head="span"),
+    _dec("llama3-span", dim=96, layers=4, head="span"),
+
+    # -- end-to-end driver: ~100M-parameter decoder LM ----------------------
+    _dec("e2e-100m", vocab=32768, dim=768, layers=12, heads=12, seq=128,
+         batch=8, n_pert=8),
+    # a mid-size model the e2e example can also run quickly
+    _dec("e2e-10m", vocab=8192, dim=256, layers=8, heads=8, seq=128,
+         batch=8, n_pert=8),
+]}
+
+# Built by plain `make artifacts` (everything the xp harness needs);
+# e2e-* models are built on demand (`make artifacts MODELS=e2e-100m`).
+DEFAULT_SET = [n for n in CONFIGS if not n.startswith("e2e")]
+
+FULL_SET = [n for n in CONFIGS if not n.startswith("e2e")]
+
+
+def config_dict(cfg: ModelConfig) -> dict:
+    d = asdict(cfg)
+    d["extra_n"] = list(cfg.extra_n)
+    return d

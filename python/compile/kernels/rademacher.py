@@ -1,0 +1,75 @@
+"""Counter-based Rademacher (+/-1) generator shared by every ZO graph.
+
+The FZOO memory trick: a perturbation direction ``u_i in {+/-1}^d`` over all
+``d`` model parameters is never materialised in HBM. Both the perturbed
+forward pass and the parameter update regenerate the signs from a
+``(seed, global_param_index)`` counter hash. The same hash is implemented
+bit-for-bit in ``rust/src/zorng`` (golden-vector parity tested on both
+sides), so the Rust coordinator can reason about directions without ever
+shipping them across the PJRT boundary.
+
+Hash: murmur3 finalizer over ``idx * GOLDEN + seed`` (uint32 lattice). This
+is the standard counter-based construction (cf. squares / philox-lite): the
+finalizer is a bijection on uint32 with full avalanche, so distinct indices
+give uncorrelated low bits and the +/-1 stream passes the empirical
+mean/covariance checks in ``python/tests/test_rademacher.py``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# numpy uint32 scalars (not jnp arrays): keep uint32 dtype with wraparound
+# AND avoid materialising captured constants inside Pallas kernels (pallas
+# rejects kernels that close over jnp arrays; >2^31 python ints overflow
+# jnp's weak int32 literals).
+import numpy as np
+
+GOLDEN = np.uint32(0x9E3779B1)
+C1 = np.uint32(0x85EBCA6B)
+C2 = np.uint32(0xC2B2AE35)
+
+
+def mix32(x: jnp.ndarray) -> jnp.ndarray:
+    """Murmur3 fmix32 finalizer on uint32 values (wrap-around arithmetic)."""
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * C1
+    x = x ^ (x >> 13)
+    x = x * C2
+    x = x ^ (x >> 16)
+    return x
+
+
+def hash_u32(seed, idx: jnp.ndarray) -> jnp.ndarray:
+    """Full-avalanche uint32 hash of ``(seed, idx)``."""
+    seed = jnp.asarray(seed, dtype=jnp.uint32)
+    idx = jnp.asarray(idx, dtype=jnp.uint32)
+    return mix32(idx * GOLDEN + seed)
+
+
+def rademacher(seed, idx: jnp.ndarray, dtype=jnp.float32) -> jnp.ndarray:
+    """+/-1 signs for global parameter indices ``idx`` under ``seed``.
+
+    ``sign = 1 - 2 * (hash & 1)``: the low bit of the mixed hash selects the
+    sign, exactly as the Rust side does.
+    """
+    h = hash_u32(seed, idx)
+    return (1.0 - 2.0 * (h & 1).astype(dtype)).astype(dtype)
+
+
+def rademacher_range(seed, offset, size: int, dtype=jnp.float32) -> jnp.ndarray:
+    """Signs for the contiguous flat-parameter range ``[offset, offset+size)``."""
+    idx = jnp.arange(size, dtype=jnp.uint32) + jnp.asarray(offset, jnp.uint32)
+    return rademacher(seed, idx, dtype)
+
+
+def stream_seed(seed_base, stream) -> jnp.ndarray:
+    """Per-perturbation-stream seed. Stream ``i`` (1-based over N directions)
+    uses ``mix32((seed_base + i) * GOLDEN)`` so streams are decorrelated even
+    for adjacent base seeds. Stream 0 is the clean (unperturbed) pass and
+    never consumes randomness. ``stream`` may be a traced index
+    (fori_loop in the update graphs)."""
+    s = (jnp.asarray(seed_base).astype(jnp.uint32)
+         + jnp.asarray(stream).astype(jnp.uint32))
+    return mix32(s * GOLDEN)

@@ -1,0 +1,86 @@
+"""L1 — rank-1 Rademacher perturbation: the performance-optimized hot path.
+
+The exact scheme in ``perturbed.py`` pays a full sign-matmul per stream
+(`x @ U_i^T`, O(M·K·O) FLOPs) — on a CUDA core that degenerates to adds,
+but on XLA-CPU and on the TPU MXU it costs the same as a dense matmul.
+The optimized scheme constrains each dense-leaf direction to a **rank-1
+sign outer product** ``U_i = r_i s_i^T`` with ``r_i ∈ {±1}^O``,
+``s_i ∈ {±1}^K``:
+
+    x @ U_i^T = (x @ s_i) ⊗ r_i          — O(M·(K+O)) FLOPs
+
+i.e. one reduction + one broadcast per stream: *structurally* free next to
+the shared matmul, on any backend. Vector leaves (biases, layernorm,
+embedding rows) keep the full elementwise signs.
+
+Estimator validity: the flattened direction ``u = vec(r s^T)`` has entries
+``u_{ok} = r_o·s_k ∈ {±1}`` with ``E[u_{ok}] = 0`` and
+``E[u_{ok} u_{o'k'}] = δ_{oo'}δ_{kk'}`` — identity covariance, exactly the
+property Prop 3.2 / Lemmas B.1–B.5 use (entries are pairwise uncorrelated,
+though not jointly independent; fourth-moment constants shift slightly,
+checked empirically in ``python/tests/test_rank1.py``). The update graph
+regenerates the same ``(r_i, s_i)`` from the seed, so the one-sided
+estimator and the σ-normalized step are unchanged.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .rademacher import rademacher
+
+# Disjoint index spaces for the row/col sign vectors of a leaf: row signs
+# hash (seed, offset + o) with a ROW tag, col signs (seed, offset + k) with
+# a COL tag. Tags keep r and s decorrelated even though both derive from
+# the leaf offset.
+ROW_TAG = 0x52300000  # 'R0'
+COL_TAG = 0x5C010000  # 'C1'
+
+
+def row_signs(seed, offset, out_dim: int, dtype=jnp.float32):
+    idx = (jnp.asarray(offset, jnp.uint32) + jnp.uint32(ROW_TAG)
+           + jnp.arange(out_dim, dtype=jnp.uint32))
+    return rademacher(seed, idx, dtype)
+
+
+def col_signs(seed, offset, in_dim: int, dtype=jnp.float32):
+    idx = (jnp.asarray(offset, jnp.uint32) + jnp.uint32(COL_TAG)
+           + jnp.arange(in_dim, dtype=jnp.uint32))
+    return rademacher(seed, idx, dtype)
+
+
+def rank1_sign_matmul(x, out_dim: int, seed, offset):
+    """x: [M, K] -> [M, out_dim] computing x @ (r s^T)^T = (x·s) r^T."""
+    k = x.shape[1]
+    s = col_signs(seed, offset, k, x.dtype)
+    r = row_signs(seed, offset, out_dim, x.dtype)
+    proj = x @ s  # [M]
+    return proj[:, None] * r[None, :]
+
+
+def rank1_matrix(seed, offset, out_dim: int, in_dim: int, dtype=jnp.float32):
+    """Materialised U = r s^T (oracle/tests/update graphs)."""
+    r = row_signs(seed, offset, out_dim, dtype)
+    s = col_signs(seed, offset, in_dim, dtype)
+    return r[:, None] * s[None, :]
+
+
+def fused_dense_rank1(xs, w, b, seeds, eps_s, w_offset, b_offset,
+                      perturb=True):
+    """Rank-1 analogue of ``perturbed.fused_dense``: ONE folded shared
+    matmul + O(M·(K+O)) sign work per stream. xs: [S, M, K] -> [S, M, O]."""
+    s_dim, m, k = xs.shape
+    o = w.shape[0]
+    shared = (xs.reshape(s_dim * m, k) @ w.T).reshape(s_dim, m, o) + b[None, None, :]
+    if not perturb:
+        return shared
+
+    def pert_one(i):
+        term = rank1_sign_matmul(xs[i], o, seeds[i], w_offset)
+        idx = jnp.asarray(b_offset, jnp.uint32) + jnp.arange(o, dtype=jnp.uint32)
+        u_b = rademacher(seeds[i], idx, xs.dtype)
+        return eps_s[i] * (term + u_b[None, :])
+
+    pert = [jnp.zeros((m, o), xs.dtype)]
+    pert += [pert_one(i) for i in range(1, s_dim)]
+    return shared + jnp.stack(pert, axis=0)

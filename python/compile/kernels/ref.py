@@ -1,0 +1,56 @@
+# Pure-jnp correctness oracle for the kernels.
+#
+# The oracle does the *naive* thing FZOO's fused kernel avoids: it
+# materialises the full Rademacher sign matrix U_i for every perturbation
+# stream and runs a separate perturbed matmul per stream. Tests assert that
+# the fused Pallas / fused-jnp implementations in ``perturbed.py`` match
+# this to float tolerance for every (shape, seed, eps) drawn by hypothesis.
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .rademacher import rademacher
+
+
+def sign_matrix(seed, offset, out_dim: int, in_dim: int, dtype=jnp.float32):
+    """Materialised U in {+/-1}^{out x in}; element (o, k) has global flat
+    parameter index ``offset + o*in_dim + k`` (row-major (out, in) packing,
+    matching ``compile.params``)."""
+    o = jnp.arange(out_dim, dtype=jnp.uint32)[:, None]
+    k = jnp.arange(in_dim, dtype=jnp.uint32)[None, :]
+    idx = jnp.asarray(offset, jnp.uint32) + o * jnp.uint32(in_dim) + k
+    return rademacher(seed, idx, dtype)
+
+
+def sign_vector(seed, offset, size: int, dtype=jnp.float32):
+    idx = jnp.asarray(offset, jnp.uint32) + jnp.arange(size, dtype=jnp.uint32)
+    return rademacher(seed, idx, dtype)
+
+
+def sign_matmul_ref(x, out_dim: int, seed, offset):
+    """Reference for the kernel's sign term. x: [M, K] -> [M, out_dim]:
+    the perturbation term x @ U^T with U materialised."""
+    _, k = x.shape
+    u = sign_matrix(seed, offset, out_dim, k, x.dtype)
+    return x @ u.T
+
+
+def perturbed_dense_ref(x, w, b, seed, eps, w_offset, b_offset):
+    """One perturbed stream, the naive way: materialise W' = W + eps*U and
+    b' = b + eps*u_b, then a plain dense. x: [M, K], w: [O, K], b: [O]."""
+    o, k = w.shape
+    u_w = sign_matrix(seed, w_offset, o, k, x.dtype)
+    u_b = sign_vector(seed, b_offset, o, x.dtype)
+    w_p = w + eps * u_w
+    b_p = b + eps * u_b
+    return x @ w_p.T + b_p
+
+
+def fused_dense_ref(xs, w, b, seeds, eps_s, w_offset, b_offset):
+    """All S streams via the naive per-stream path. xs: [S, M, K]."""
+    outs = [
+        perturbed_dense_ref(xs[s], w, b, seeds[s], eps_s[s], w_offset, b_offset)
+        for s in range(xs.shape[0])
+    ]
+    return jnp.stack(outs, axis=0)

@@ -1,0 +1,240 @@
+"""L2 — the JAX transformer with FZOO's multi-stream perturbed forward.
+
+One forward implementation serves every exported graph:
+
+* S = 1, no perturbation  -> clean forward (``fwd_loss``/``grad_loss``/eval)
+* S = N+1, theta-space perturbation -> FZOO's fused batched forward: stream
+  0 is the clean pass (l_0 of the one-sided estimator), streams 1..N carry
+  eps * u_i Rademacher weight perturbations applied via the L1 kernel
+  decomposition "shared matmul + on-the-fly sign term" (kernels/perturbed).
+* S streams of trainable *prefix* activations, base weights clean -> the
+  PEFT (prefix-tuning) family; the folded shared matmul still batches all
+  streams into single MXU calls.
+
+Activations are carried as [S, B*T, H] so every dense layer is ONE folded
+matmul across streams — this is the TPU analogue of the paper's fused CUDA
+launch (§3.3, DESIGN.md §Hardware-Adaptation).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels.perturbed import fused_dense
+from .kernels.rademacher import rademacher
+from .params import Layout, layout, unpack
+
+NEG = -1e9
+
+
+# ---------------------------------------------------------------------------
+# perturbation helpers
+# ---------------------------------------------------------------------------
+
+def _pert_vec(v, off, seeds, eps_s):
+    """Per-stream perturbed copy of a small vector leaf (layernorm, bias):
+    v_s = v + eps_s * u_s.  v: [n] -> [S, n]."""
+    if seeds is None:
+        return v[None, :]
+    s = seeds.shape[0]
+    n = v.shape[0]
+    idx = jnp.asarray(off, jnp.uint32) + jnp.arange(n, dtype=jnp.uint32)
+    rows = [jnp.zeros((n,), v.dtype)]
+    rows += [rademacher(seeds[i], idx, v.dtype) for i in range(1, s)]
+    return v[None, :] + eps_s[:, None] * jnp.stack(rows)
+
+
+def _pert_gather(emb, ids, off, hdim, seeds, eps_s):
+    """Embedding gather with per-stream perturbation of the *gathered rows*
+    only — the fused equivalent of perturbing the full embedding matrix.
+    emb: [V, H], ids: [B, T] -> [S, B, T, H]."""
+    e = emb[ids]                                    # [B, T, H]
+    s = 1 if seeds is None else seeds.shape[0]
+    x = jnp.broadcast_to(e[None], (s,) + e.shape)
+    if seeds is None:
+        return x
+    idx = (jnp.asarray(off, jnp.uint32)
+           + ids.astype(jnp.uint32)[..., None] * jnp.uint32(hdim)
+           + jnp.arange(hdim, dtype=jnp.uint32)[None, None, :])
+    pert = [jnp.zeros(e.shape, e.dtype)]
+    pert += [rademacher(seeds[i], idx, e.dtype) for i in range(1, s)]
+    return x + eps_s[:, None, None, None] * jnp.stack(pert)
+
+
+# ---------------------------------------------------------------------------
+# transformer blocks (all carry [S, B*T, H])
+# ---------------------------------------------------------------------------
+
+def _layernorm(x, g_s, b_s):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    xn = (x - mu) * jax.lax.rsqrt(var + 1e-5)
+    return xn * g_s[:, None, :] + b_s[:, None, :]
+
+
+def _attention(cfg, x, p, offs, li, mask2d, causal, seeds, eps_s, impl):
+    """x: [S, M, H] with M = B*T. mask2d: [B, T] (1 = valid)."""
+    s, m, h = x.shape
+    b, t = mask2d.shape
+    a, hd = cfg.heads, cfg.hdim
+    pfx = f"l{li}."
+
+    def dense(inp, wname, bname, out_dim):
+        return fused_dense(inp, p[wname], p[bname], seeds, eps_s,
+                           offs[wname], offs[bname], impl=impl,
+                           perturb=seeds is not None)
+
+    q = dense(x, pfx + "wq", pfx + "bq", h).reshape(s, b, t, a, hd)
+    k = dense(x, pfx + "wk", pfx + "bk", h).reshape(s, b, t, a, hd)
+    v = dense(x, pfx + "wv", pfx + "bv", h).reshape(s, b, t, a, hd)
+
+    scores = jnp.einsum("sbiah,sbjah->sbaij", q, k) / math.sqrt(hd)
+    bias = (1.0 - mask2d[None, :, None, None, :]) * NEG       # key padding
+    if causal:
+        tri = jnp.tril(jnp.ones((t, t), x.dtype))
+        bias = bias + (1.0 - tri)[None, None, None, :, :] * NEG
+    attn = jax.nn.softmax(scores + bias, axis=-1)
+    out = jnp.einsum("sbaij,sbjah->sbiah", attn, v).reshape(s, m, h)
+    return dense(out, pfx + "wo", pfx + "bo", h)
+
+
+def _block(cfg, x, p, offs, li, mask2d, causal, seeds, eps_s, impl):
+    pfx = f"l{li}."
+    g1 = _pert_vec(p[pfx + "ln1_g"], offs[pfx + "ln1_g"], seeds, eps_s)
+    b1 = _pert_vec(p[pfx + "ln1_b"], offs[pfx + "ln1_b"], seeds, eps_s)
+    x = x + _attention(cfg, _layernorm(x, g1, b1), p, offs, li, mask2d,
+                       causal, seeds, eps_s, impl)
+    g2 = _pert_vec(p[pfx + "ln2_g"], offs[pfx + "ln2_g"], seeds, eps_s)
+    b2 = _pert_vec(p[pfx + "ln2_b"], offs[pfx + "ln2_b"], seeds, eps_s)
+    y = _layernorm(x, g2, b2)
+    y = fused_dense(y, p[pfx + "w_up"], p[pfx + "b_up"], seeds, eps_s,
+                    offs[pfx + "w_up"], offs[pfx + "b_up"], impl=impl,
+                    perturb=seeds is not None)
+    y = jax.nn.gelu(y)
+    y = fused_dense(y, p[pfx + "w_down"], p[pfx + "b_down"], seeds, eps_s,
+                    offs[pfx + "w_down"], offs[pfx + "b_down"], impl=impl,
+                    perturb=seeds is not None)
+    return x + y
+
+
+# ---------------------------------------------------------------------------
+# full forward
+# ---------------------------------------------------------------------------
+
+def forward(cfg: ModelConfig, theta, ids, mask, *, seeds=None, eps_s=None,
+            prefix_s=None, impl="jnp"):
+    """Multi-stream forward.
+
+    theta: flat f32[d] (base/full parameters, *clean*).
+    ids:   i32[B, T], mask: f32[B, T] (1 = valid token).
+    seeds/eps_s: length-S arrays -> theta-space perturbation streams
+                 (stream 0 must have eps 0 — the clean pass).
+    prefix_s: [S, P, H] per-stream trainable prefixes (PEFT mode; theta
+              stays clean, perturbation rides on the prefix).
+    Returns (logits, pooled_mask_meta): logits [S, B, C] for cls heads,
+    (start, end) each [S, B, T_eff] for span heads.
+    """
+    lay = layout(cfg)
+    p = unpack(theta, lay)
+    offs = lay.offsets()
+    b, t = ids.shape
+    h = cfg.dim
+    causal = cfg.arch == "decoder"
+
+    x = _pert_gather(p["tok_emb"], ids, offs["tok_emb"], h, seeds, eps_s)
+    s = x.shape[0] if prefix_s is None else prefix_s.shape[0]
+    if prefix_s is not None:
+        x = jnp.broadcast_to(x, (s,) + x.shape[1:])
+        pfx = jnp.broadcast_to(prefix_s[:, None, :, :], (s, b, cfg.n_prefix, h))
+        x = jnp.concatenate([pfx, x], axis=2)                  # [S,B,P+T,H]
+        mask2d = jnp.concatenate(
+            [jnp.ones((b, cfg.n_prefix), mask.dtype), mask], axis=1)
+    else:
+        mask2d = mask
+    t_eff = x.shape[2]
+
+    pos = _pert_vec(p["pos_emb"].reshape(-1), offs["pos_emb"], seeds, eps_s)
+    pos = pos.reshape(s if seeds is not None else 1, -1, h)[:, :t_eff, :]
+    x = x + pos[:, None, :, :]
+
+    x = x.reshape(s, b * t_eff, h)
+    for li in range(cfg.layers):
+        x = _block(cfg, x, p, offs, li, mask2d, causal, seeds, eps_s, impl)
+    gf = _pert_vec(p["lnf_g"], offs["lnf_g"], seeds, eps_s)
+    bf = _pert_vec(p["lnf_b"], offs["lnf_b"], seeds, eps_s)
+    x = _layernorm(x, gf, bf)
+
+    head = lambda inp: fused_dense(
+        inp, p["w_head"], p["b_head"], seeds, eps_s,
+        offs["w_head"], offs["b_head"], impl=impl, perturb=seeds is not None)
+
+    if cfg.head == "span":
+        logits = head(x).reshape(s, b, t_eff, -1)              # [S,B,T,2]
+        start = logits[..., 0] + (1.0 - mask2d[None]) * NEG
+        end = logits[..., 1] + (1.0 - mask2d[None]) * NEG
+        # span positions are relative to the *original* sequence
+        p0 = cfg.n_prefix if prefix_s is not None else 0
+        return start[:, :, p0:], end[:, :, p0:]
+
+    x = x.reshape(s, b, t_eff, h)
+    if cfg.arch == "encoder":
+        p0 = cfg.n_prefix if prefix_s is not None else 0
+        pooled = x[:, :, p0, :]                                # CLS token
+    else:
+        last = jnp.sum(mask2d, axis=1).astype(jnp.int32) - 1   # [B]
+        pooled = jnp.take_along_axis(
+            x, last[None, :, None, None].astype(jnp.int32), axis=2)[:, :, 0, :]
+    return head(pooled)                                        # [S,B,C]
+
+
+# ---------------------------------------------------------------------------
+# losses (all return per-stream vectors [S])
+# ---------------------------------------------------------------------------
+
+def ce_cls(logits, labels):
+    """logits [S,B,C], labels i32[B] -> [S]."""
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)          # [S,B]
+    gold = jnp.take_along_axis(
+        logits, labels[None, :, None].astype(jnp.int32), axis=-1)[..., 0]
+    return jnp.mean(lse - gold, axis=-1)
+
+
+def ce_span(start, end, labels):
+    """start/end [S,B,T] (already pad-masked), labels i32[B,2] -> [S]."""
+    def one(lg, gold):
+        lse = jax.scipy.special.logsumexp(lg, axis=-1)
+        g = jnp.take_along_axis(lg, gold[None, :, None].astype(jnp.int32),
+                                axis=-1)[..., 0]
+        return jnp.mean(lse - g, axis=-1)
+    return 0.5 * (one(start, labels[:, 0]) + one(end, labels[:, 1]))
+
+
+def f1_span(start, end, labels):
+    """Non-differentiable objective (§4.3): 1 - token-overlap F1 of the
+    argmax span vs the gold span. ZO only needs function values, so the
+    argmax is fine. Returns [S]."""
+    ps = jnp.argmax(start, axis=-1).astype(jnp.float32)         # [S,B]
+    pe = jnp.argmax(end, axis=-1).astype(jnp.float32)
+    pe = jnp.maximum(pe, ps)
+    gs = labels[:, 0][None].astype(jnp.float32)
+    ge = labels[:, 1][None].astype(jnp.float32)
+    inter = jnp.maximum(0.0, jnp.minimum(pe, ge) - jnp.maximum(ps, gs) + 1.0)
+    plen = pe - ps + 1.0
+    glen = ge - gs + 1.0
+    prec = inter / plen
+    rec = inter / glen
+    f1 = jnp.where(inter > 0, 2 * prec * rec / (prec + rec + 1e-9), 0.0)
+    return 1.0 - jnp.mean(f1, axis=-1)
+
+
+def loss_streams(cfg, outputs, labels, objective="ce"):
+    if cfg.head == "span":
+        start, end = outputs
+        if objective == "f1":
+            return f1_span(start, end, labels)
+        return ce_span(start, end, labels)
+    return ce_cls(outputs, labels)

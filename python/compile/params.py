@@ -1,0 +1,135 @@
+"""Flat-parameter packing.
+
+All trainable parameters travel across the PJRT boundary as ONE flat
+f32[d] vector. This file defines the deterministic layout (leaf order,
+shapes, offsets) that:
+
+* ``model.py`` uses to unpack the vector inside every graph,
+* the perturbation kernels use to map a weight element to its **global
+  flat index** (so the forward-pass perturbation and the seed-regenerated
+  update direction agree element-for-element),
+* ``aot.py`` exports to ``manifest.json`` so the Rust coordinator can
+  initialise, checkpoint and introspect parameters without Python.
+
+Packing order within a dense leaf is row-major over its shape; dense
+weights are stored as (out, in).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import numpy as np
+
+from .configs import ModelConfig
+
+
+@dataclass(frozen=True)
+class Leaf:
+    name: str
+    shape: tuple
+    offset: int
+
+    @property
+    def size(self) -> int:
+        return int(math.prod(self.shape))
+
+
+@dataclass(frozen=True)
+class Layout:
+    leaves: tuple
+    d: int
+
+    def offsets(self) -> dict:
+        return {l.name: l.offset for l in self.leaves}
+
+    def by_name(self, name: str) -> Leaf:
+        for l in self.leaves:
+            if l.name == name:
+                return l
+        raise KeyError(name)
+
+
+def layout(cfg: ModelConfig) -> Layout:
+    """Deterministic leaf order for the transformer defined in model.py."""
+    h, mh = cfg.dim, cfg.dim * cfg.mlp_ratio
+    t_total = cfg.seq + cfg.n_prefix
+    leaves, off = [], 0
+
+    def add(name, *shape):
+        nonlocal off
+        leaves.append(Leaf(name, tuple(int(s) for s in shape), off))
+        off += int(math.prod(shape))
+
+    add("tok_emb", cfg.vocab, h)
+    add("pos_emb", t_total, h)
+    for i in range(cfg.layers):
+        p = f"l{i}."
+        add(p + "ln1_g", h)
+        add(p + "ln1_b", h)
+        add(p + "wq", h, h)
+        add(p + "bq", h)
+        add(p + "wk", h, h)
+        add(p + "bk", h)
+        add(p + "wv", h, h)
+        add(p + "bv", h)
+        add(p + "wo", h, h)
+        add(p + "bo", h)
+        add(p + "ln2_g", h)
+        add(p + "ln2_b", h)
+        add(p + "w_up", mh, h)
+        add(p + "b_up", mh)
+        add(p + "w_down", h, mh)
+        add(p + "b_down", h)
+    add("lnf_g", h)
+    add("lnf_b", h)
+    head_out = 2 if cfg.head == "span" else cfg.n_classes
+    add("w_head", head_out, h)
+    add("b_head", head_out)
+    return Layout(tuple(leaves), off)
+
+
+def prefix_dim(cfg: ModelConfig) -> int:
+    return cfg.n_prefix * cfg.dim
+
+
+def unpack(theta, lay: Layout) -> dict:
+    """Split the flat vector into named leaves (works on jnp or np)."""
+    out = {}
+    for leaf in lay.leaves:
+        out[leaf.name] = theta[leaf.offset:leaf.offset + leaf.size].reshape(leaf.shape)
+    return out
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> np.ndarray:
+    """Deterministic 'pretrained-stand-in' initialisation.
+
+    GPT-2-style: embeddings & dense N(0, 0.02), residual-out projections
+    scaled by 1/sqrt(2L), layernorm gains 1, all biases 0. The planted
+    synthetic tasks are learnable from this init, which stands in for the
+    pretrained checkpoints the paper fine-tunes (substitution documented in
+    DESIGN.md §6).
+    """
+    lay = layout(cfg)
+    rng = np.random.RandomState(seed)
+    theta = np.zeros(lay.d, dtype=np.float32)
+    resid_scale = 0.02 / math.sqrt(2.0 * cfg.layers)
+    for leaf in lay.leaves:
+        n = leaf.name
+        if n.endswith(("_g",)):
+            v = np.ones(leaf.size, dtype=np.float32)
+        elif n.endswith(("_b", "bq", "bk", "bv", "bo", "b_up", "b_down", "b_head")) \
+                or ".b" in n or n == "b_head":
+            v = np.zeros(leaf.size, dtype=np.float32)
+        elif n.endswith(("wo", "w_down")):
+            v = rng.randn(leaf.size).astype(np.float32) * resid_scale
+        else:
+            v = rng.randn(leaf.size).astype(np.float32) * 0.02
+        theta[leaf.offset:leaf.offset + leaf.size] = v
+    return theta
+
+
+def init_prefix(cfg: ModelConfig, seed: int = 0) -> np.ndarray:
+    rng = np.random.RandomState(seed + 1)
+    return (rng.randn(prefix_dim(cfg)).astype(np.float32) * 0.02)

@@ -1,0 +1,384 @@
+"""Builders for every AOT-exported step graph.
+
+Each function returns ``(fn, input_specs)`` where ``fn`` is the pure JAX
+function to lower and ``input_specs`` is the ordered list of
+``(name, ShapeDtypeStruct)`` the Rust runtime feeds at execute time. All
+functions return tuples (lowered with ``return_tuple=True``).
+
+The contract with the Rust coordinator (rust/src/optim):
+
+* ``fzoo_losses``  losses[0] = l_0 (clean), losses[i] = L(theta + eps*u_i)
+  where u_i is the Rademacher direction of ``stream_seed(seed, i)``;
+* ``zo_update``    theta' = theta - sum_i coeffs[i] * u_i with the *same*
+  u_i — Rust computes coeffs (FZOO: eta*(l_i - l_0)/(N*std); variants
+  differ) and never sees u_i;
+* ``mezo_losses``/``gauss_update`` use one Gaussian direction z(seed)
+  (jax.random.normal, regenerated at update time — MeZO's seed trick);
+* state-carrying ZO baselines (ZO-Adam / ZO-SGD-MMT from the ZO benchmark
+  [49]) keep their d-vector moments as executable inputs/outputs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels.rademacher import rademacher, stream_seed
+from .model import forward, loss_streams
+from .params import layout, prefix_dim
+
+F32 = jnp.float32
+I32 = jnp.int32
+U32 = jnp.uint32
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _label_spec(cfg):
+    if cfg.head == "span":
+        return _sds((cfg.batch, 2), I32)
+    return _sds((cfg.batch,), I32)
+
+
+def _batch_specs(cfg):
+    return [
+        ("ids", _sds((cfg.batch, cfg.seq), I32)),
+        ("labels", _label_spec(cfg)),
+        ("mask", _sds((cfg.batch, cfg.seq), F32)),
+    ]
+
+
+def _theta_spec(cfg):
+    return ("theta", _sds((layout(cfg).d,), F32))
+
+
+def _clean_loss(cfg, theta, ids, labels, mask, objective):
+    out = forward(cfg, theta, ids, mask)
+    return loss_streams(cfg, out, labels, objective)[0]
+
+
+# ---------------------------------------------------------------------------
+# full-parameter (FT) family
+# ---------------------------------------------------------------------------
+
+def make_fwd_loss(cfg: ModelConfig, objective="ce"):
+    def fn(theta, ids, labels, mask):
+        return (_clean_loss(cfg, theta, ids, labels, mask, objective),)
+    return fn, [_theta_spec(cfg)] + _batch_specs(cfg)
+
+
+def make_eval_logits(cfg: ModelConfig):
+    def fn(theta, ids, mask):
+        out = forward(cfg, theta, ids, mask)
+        if cfg.head == "span":
+            return (out[0][0], out[1][0])       # start, end  [B, T]
+        return (out[0],)                        # logits      [B, C]
+    return fn, [_theta_spec(cfg),
+                ("ids", _sds((cfg.batch, cfg.seq), I32)),
+                ("mask", _sds((cfg.batch, cfg.seq), F32))]
+
+
+def make_fzoo_losses(cfg: ModelConfig, n: int, objective="ce", impl="jnp"):
+    """The FZOO hot path: one fused batched forward -> N+1 losses."""
+    s = n + 1
+
+    def fn(theta, ids, labels, mask, seed, eps):
+        seeds = jnp.stack([stream_seed(seed, i) for i in range(s)])
+        eps_s = jnp.concatenate([jnp.zeros((1,), F32),
+                                 jnp.full((n,), 1.0, F32) * eps])
+        out = forward(cfg, theta, ids, mask, seeds=seeds, eps_s=eps_s,
+                      impl=impl)
+        return (loss_streams(cfg, out, labels, objective),)
+    return fn, [_theta_spec(cfg)] + _batch_specs(cfg) + [
+        ("seed", _sds((), U32)), ("eps", _sds((), F32))]
+
+
+def make_zo_update(cfg: ModelConfig, n: int):
+    d = layout(cfg).d
+
+    def fn(theta, seed, coeffs):
+        idx = jnp.arange(d, dtype=U32)
+
+        def body(i, acc):
+            u = rademacher(stream_seed(seed, i + 1), idx)
+            return acc - coeffs[i] * u
+        return (jax.lax.fori_loop(0, n, body, theta),)
+    return fn, [_theta_spec(cfg), ("seed", _sds((), U32)),
+                ("coeffs", _sds((n,), F32))]
+
+
+def _gauss(seed, d):
+    return jax.random.normal(jax.random.PRNGKey(seed), (d,), F32)
+
+
+def make_rad_perturb(cfg: ModelConfig):
+    """theta + eps * u_stream — used by the *non-parallel* FZOO variant
+    (Algorithm 3): perturb, forward, discard, N times sequentially."""
+    d = layout(cfg).d
+
+    def fn(theta, seed, stream, eps):
+        u = rademacher(stream_seed(seed, stream), jnp.arange(d, dtype=U32))
+        return (theta + eps * u,)
+    return fn, [_theta_spec(cfg), ("seed", _sds((), U32)),
+                ("stream", _sds((), U32)), ("eps", _sds((), F32))]
+
+
+def make_gauss_sign_update(cfg: ModelConfig):
+    """ZO-SGD-Sign baseline [49]: theta' = theta - coeff * sign(z)."""
+    d = layout(cfg).d
+
+    def fn(theta, seed, coeff):
+        return (theta - coeff * jnp.sign(_gauss(seed, d)),)
+    return fn, [_theta_spec(cfg), ("seed", _sds((), U32)),
+                ("coeff", _sds((), F32))]
+
+
+def make_mezo_losses(cfg: ModelConfig, objective="ce"):
+    d = layout(cfg).d
+
+    def fn(theta, ids, labels, mask, seed, eps):
+        z = _gauss(seed, d)
+        lp = _clean_loss(cfg, theta + eps * z, ids, labels, mask, objective)
+        lm = _clean_loss(cfg, theta - eps * z, ids, labels, mask, objective)
+        return (lp, lm)
+    return fn, [_theta_spec(cfg)] + _batch_specs(cfg) + [
+        ("seed", _sds((), U32)), ("eps", _sds((), F32))]
+
+
+def make_hizoo_losses(cfg: ModelConfig, objective="ce"):
+    d = layout(cfg).d
+
+    def fn(theta, ids, labels, mask, seed, eps):
+        z = _gauss(seed, d)
+        l0 = _clean_loss(cfg, theta, ids, labels, mask, objective)
+        lp = _clean_loss(cfg, theta + eps * z, ids, labels, mask, objective)
+        lm = _clean_loss(cfg, theta - eps * z, ids, labels, mask, objective)
+        return (l0, lp, lm)
+    return fn, [_theta_spec(cfg)] + _batch_specs(cfg) + [
+        ("seed", _sds((), U32)), ("eps", _sds((), F32))]
+
+
+def make_gauss_update(cfg: ModelConfig):
+    d = layout(cfg).d
+
+    def fn(theta, seed, coeff):
+        return (theta - coeff * _gauss(seed, d),)
+    return fn, [_theta_spec(cfg), ("seed", _sds((), U32)),
+                ("coeff", _sds((), F32))]
+
+
+def make_gauss_update_scaled(cfg: ModelConfig):
+    """HiZOO-L style update: per-leaf inverse-curvature scales broadcast to
+    elements via the layout (leaf_scales[i] multiplies leaf i's slice)."""
+    lay = layout(cfg)
+
+    def fn(theta, seed, coeff, leaf_scales):
+        z = _gauss(seed, lay.d)
+        scale = jnp.concatenate([
+            jnp.full((leaf.size,), 1.0, F32) * leaf_scales[i]
+            for i, leaf in enumerate(lay.leaves)])
+        return (theta - coeff * scale * z,)
+    return fn, [_theta_spec(cfg), ("seed", _sds((), U32)),
+                ("coeff", _sds((), F32)),
+                ("leaf_scales", _sds((len(lay.leaves),), F32))]
+
+
+def make_adam_zo_update(cfg: ModelConfig):
+    """ZO-Adam baseline [49]: moments are explicit d-vector state."""
+    d = layout(cfg).d
+
+    def fn(theta, m, v, seed, coeff, lr, beta1, beta2, eps_adam, t):
+        g = coeff * _gauss(seed, d)
+        m2 = beta1 * m + (1.0 - beta1) * g
+        v2 = beta2 * v + (1.0 - beta2) * g * g
+        mh = m2 / (1.0 - beta1 ** t)
+        vh = v2 / (1.0 - beta2 ** t)
+        return (theta - lr * mh / (jnp.sqrt(vh) + eps_adam), m2, v2)
+    return fn, [_theta_spec(cfg), ("m", _sds((d,), F32)), ("v", _sds((d,), F32)),
+                ("seed", _sds((), U32)), ("coeff", _sds((), F32)),
+                ("lr", _sds((), F32)), ("beta1", _sds((), F32)),
+                ("beta2", _sds((), F32)), ("eps_adam", _sds((), F32)),
+                ("t", _sds((), F32))]
+
+
+def make_momentum_zo_update(cfg: ModelConfig):
+    """ZO-SGD-MMT baseline [49]."""
+    d = layout(cfg).d
+
+    def fn(theta, m, seed, coeff, lr, beta):
+        g = coeff * _gauss(seed, d)
+        m2 = beta * m + g
+        return (theta - lr * m2, m2)
+    return fn, [_theta_spec(cfg), ("m", _sds((d,), F32)),
+                ("seed", _sds((), U32)), ("coeff", _sds((), F32)),
+                ("lr", _sds((), F32)), ("beta", _sds((), F32))]
+
+
+def make_grad_loss(cfg: ModelConfig, objective="ce"):
+    """First-order baselines (Adam / SGD / normalized-SGD FT)."""
+    def loss(theta, ids, labels, mask):
+        return _clean_loss(cfg, theta, ids, labels, mask, objective)
+
+    def fn(theta, ids, labels, mask):
+        l, g = jax.value_and_grad(loss)(theta, ids, labels, mask)
+        return (l, g)
+    return fn, [_theta_spec(cfg)] + _batch_specs(cfg)
+
+
+def make_sgd_apply(cfg: ModelConfig):
+    """Generic in-graph axpy: theta' = theta - lr * g. Keeps the first-order
+    hot loop inside PJRT (no host-side vector math on the training path)."""
+    d = layout(cfg).d
+
+    def fn(theta, g, lr):
+        return (theta - lr * g,)
+    return fn, [_theta_spec(cfg), ("g", _sds((d,), F32)), ("lr", _sds((), F32))]
+
+
+# ---------------------------------------------------------------------------
+# prefix-tuning (PEFT) family — trainable prefix, frozen base
+# ---------------------------------------------------------------------------
+
+def _prefix_specs(cfg):
+    return [("prefix", _sds((prefix_dim(cfg),), F32)),
+            ("base", _sds((layout(cfg).d,), F32))]
+
+
+def _prefix_streams(cfg, pi, seed, eps, n):
+    """[S, P, H]: stream 0 clean prefix, streams 1..N Rademacher-perturbed."""
+    dp = prefix_dim(cfg)
+    idx = jnp.arange(dp, dtype=U32)
+    rows = [pi]
+    for i in range(1, n + 1):
+        rows.append(pi + eps * rademacher(stream_seed(seed, i), idx))
+    return jnp.stack(rows).reshape(n + 1, cfg.n_prefix, cfg.dim)
+
+
+def make_prefix_fwd_loss(cfg: ModelConfig, objective="ce"):
+    def fn(prefix, base, ids, labels, mask):
+        ps = prefix.reshape(1, cfg.n_prefix, cfg.dim)
+        out = forward(cfg, base, ids, mask, prefix_s=ps)
+        return (loss_streams(cfg, out, labels, objective)[0],)
+    return fn, _prefix_specs(cfg) + _batch_specs(cfg)
+
+
+def make_prefix_eval_logits(cfg: ModelConfig):
+    def fn(prefix, base, ids, mask):
+        ps = prefix.reshape(1, cfg.n_prefix, cfg.dim)
+        out = forward(cfg, base, ids, mask, prefix_s=ps)
+        if cfg.head == "span":
+            return (out[0][0], out[1][0])
+        return (out[0],)
+    return fn, _prefix_specs(cfg) + [
+        ("ids", _sds((cfg.batch, cfg.seq), I32)),
+        ("mask", _sds((cfg.batch, cfg.seq), F32))]
+
+
+def make_prefix_fzoo_losses(cfg: ModelConfig, n: int, objective="ce"):
+    def fn(prefix, base, ids, labels, mask, seed, eps):
+        ps = _prefix_streams(cfg, prefix, seed, eps, n)
+        out = forward(cfg, base, ids, mask, prefix_s=ps)
+        return (loss_streams(cfg, out, labels, objective),)
+    return fn, _prefix_specs(cfg) + _batch_specs(cfg) + [
+        ("seed", _sds((), U32)), ("eps", _sds((), F32))]
+
+
+def make_prefix_zo_update(cfg: ModelConfig, n: int):
+    dp = prefix_dim(cfg)
+
+    def fn(prefix, seed, coeffs):
+        idx = jnp.arange(dp, dtype=U32)
+
+        def body(i, acc):
+            return acc - coeffs[i] * rademacher(stream_seed(seed, i + 1), idx)
+        return (jax.lax.fori_loop(0, n, body, prefix),)
+    return fn, [("prefix", _sds((dp,), F32)), ("seed", _sds((), U32)),
+                ("coeffs", _sds((n,), F32))]
+
+
+def make_prefix_mezo_losses(cfg: ModelConfig, objective="ce"):
+    dp = prefix_dim(cfg)
+
+    def fn(prefix, base, ids, labels, mask, seed, eps):
+        z = _gauss(seed, dp)
+
+        def one(p):
+            ps = p.reshape(1, cfg.n_prefix, cfg.dim)
+            out = forward(cfg, base, ids, mask, prefix_s=ps)
+            return loss_streams(cfg, out, labels, objective)[0]
+        return (one(prefix + eps * z), one(prefix - eps * z))
+    return fn, _prefix_specs(cfg) + _batch_specs(cfg) + [
+        ("seed", _sds((), U32)), ("eps", _sds((), F32))]
+
+
+def make_prefix_gauss_update(cfg: ModelConfig):
+    dp = prefix_dim(cfg)
+
+    def fn(prefix, seed, coeff):
+        return (prefix - coeff * _gauss(seed, dp),)
+    return fn, [("prefix", _sds((dp,), F32)), ("seed", _sds((), U32)),
+                ("coeff", _sds((), F32))]
+
+
+def make_prefix_grad_loss(cfg: ModelConfig, objective="ce"):
+    def loss(prefix, base, ids, labels, mask):
+        ps = prefix.reshape(1, cfg.n_prefix, cfg.dim)
+        out = forward(cfg, base, ids, mask, prefix_s=ps)
+        return loss_streams(cfg, out, labels, objective)[0]
+
+    def fn(prefix, base, ids, labels, mask):
+        l, g = jax.value_and_grad(loss)(prefix, base, ids, labels, mask)
+        return (l, g)
+    return fn, _prefix_specs(cfg) + _batch_specs(cfg)
+
+
+# ---------------------------------------------------------------------------
+# registry: which executables exist for a given model config
+# ---------------------------------------------------------------------------
+
+def executables(cfg: ModelConfig) -> dict:
+    """name -> (fn, specs). The AOT pipeline lowers each to HLO text."""
+    n = cfg.n_pert
+    if cfg.n_prefix > 0:
+        exes = {
+            "fwd_loss": make_prefix_fwd_loss(cfg),
+            "eval_logits": make_prefix_eval_logits(cfg),
+            "fzoo_losses": make_prefix_fzoo_losses(cfg, n),
+            "zo_update": make_prefix_zo_update(cfg, n),
+            "mezo_losses": make_prefix_mezo_losses(cfg),
+            "gauss_update": make_prefix_gauss_update(cfg),
+            "grad_loss": make_prefix_grad_loss(cfg),
+        }
+        return exes
+
+    exes = {
+        "fwd_loss": make_fwd_loss(cfg),
+        "eval_logits": make_eval_logits(cfg),
+        "fzoo_losses": make_fzoo_losses(cfg, n),
+        "zo_update": make_zo_update(cfg, n),
+        "mezo_losses": make_mezo_losses(cfg),
+        "rad_perturb": make_rad_perturb(cfg),
+        "gauss_sign_update": make_gauss_sign_update(cfg),
+        "hizoo_losses": make_hizoo_losses(cfg),
+        "gauss_update": make_gauss_update(cfg),
+        "gauss_update_scaled": make_gauss_update_scaled(cfg),
+        "adam_zo_update": make_adam_zo_update(cfg),
+        "momentum_zo_update": make_momentum_zo_update(cfg),
+        "grad_loss": make_grad_loss(cfg),
+        "sgd_apply": make_sgd_apply(cfg),
+    }
+    for extra in cfg.extra_n:
+        exes[f"fzoo_losses_n{extra}"] = make_fzoo_losses(cfg, extra)
+        exes[f"zo_update_n{extra}"] = make_zo_update(cfg, extra)
+    if cfg.head == "span":
+        exes["fwd_f1"] = make_fwd_loss(cfg, objective="f1")
+        exes["fzoo_losses_f1"] = make_fzoo_losses(cfg, n, objective="f1")
+        exes["mezo_losses_f1"] = make_mezo_losses(cfg, objective="f1")
+        exes["hizoo_losses_f1"] = make_hizoo_losses(cfg, objective="f1")
+    # the Pallas-kernel build of the hot path (kernel-level parity + bench)
+    if cfg.name.startswith("tiny") or cfg.name == "opt125-prox":
+        exes["fzoo_losses_pallas"] = make_fzoo_losses(cfg, n, impl="pallas")
+    return exes

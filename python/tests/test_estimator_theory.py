@@ -1,0 +1,173 @@
+"""Statistical checks of the FZOO estimator against the paper's theory.
+
+* Lemma B.1 / Prop 3.2 (eq. 6): E‖g‖² = ((N+d−1)/N)‖∇L‖² + O(eps)
+* Prop 3.2 (eq. 7):            E[σ²]  = eps²‖∇L‖² + O(eps³)
+* Remark 3.3:                  g/σ is a scaled normalized gradient
+* Convergence: FZOO on a smooth quadratic reaches the optimum; the σ-scaled
+  step behaves like normalized-SGD (step norm ≈ eta·sqrt((N+d−1)/N)/eps,
+  independent of gradient magnitude).
+
+All on analytic objectives (no transformer) so the statistics are exact.
+"""
+
+import numpy as np
+import pytest
+
+# pure-numpy mirror of the hash (same bits as kernels/rademacher.py)
+def mix32(x):
+    x = np.asarray(x, np.uint64) & 0xFFFFFFFF
+    x ^= x >> 16
+    x = (x * 0x85EBCA6B) & 0xFFFFFFFF
+    x ^= x >> 13
+    x = (x * 0xC2B2AE35) & 0xFFFFFFFF
+    x ^= x >> 16
+    return x
+
+
+def rademacher(seed, d):
+    idx = np.arange(d, dtype=np.uint64)
+    h = mix32((idx * 0x9E3779B1 + np.uint64(seed)) & 0xFFFFFFFF)
+    return (1.0 - 2.0 * (h & 1)).astype(np.float64)
+
+
+def stream_seed(base, i):
+    return int(mix32(((base + i) * 0x9E3779B1) & 0xFFFFFFFF))
+
+
+def fzoo_estimate(grad_fn, loss_fn, theta, eps, n, seed):
+    d = theta.shape[0]
+    l0 = loss_fn(theta)
+    us, ls = [], []
+    for i in range(1, n + 1):
+        u = rademacher(stream_seed(seed, i), d)
+        us.append(u)
+        ls.append(loss_fn(theta + eps * u))
+    ls = np.array(ls)
+    g = sum((ls[i] - l0) * us[i] for i in range(n)) / (eps * n)
+    sigma = ls.std(ddof=1)
+    return g, sigma, l0, ls
+
+
+def quad_loss(A, b):
+    return lambda th: 0.5 * th @ A @ th + b @ th
+
+
+def quad_grad(A, b):
+    return lambda th: A @ th + b
+
+
+@pytest.fixture(scope="module")
+def quad():
+    d = 64
+    rng = np.random.RandomState(0)
+    q = rng.randn(d, d)
+    A = q.T @ q / d + 0.5 * np.eye(d)
+    b = rng.randn(d)
+    theta = rng.randn(d)
+    return A, b, theta, d
+
+
+def test_estimator_is_unbiased_projection(quad):
+    """E[g] = (1/N)E[Σ u u^T] ∇L = ∇L + O(eps): averaging g over many seeds
+    recovers the true gradient."""
+    A, b, theta, d = quad
+    gtrue = quad_grad(A, b)(theta)
+    acc = np.zeros(d)
+    trials = 600
+    for s in range(trials):
+        g, _, _, _ = fzoo_estimate(None, quad_loss(A, b), theta, 1e-5, 4, s * 71 + 3)
+        acc += g
+    acc /= trials
+    cos = acc @ gtrue / (np.linalg.norm(acc) * np.linalg.norm(gtrue))
+    assert cos > 0.97, cos
+    rel = np.linalg.norm(acc - gtrue) / np.linalg.norm(gtrue)
+    assert rel < 0.25, rel
+
+
+def test_prop32_gradient_norm_scaling(quad):
+    """eq. 6: E‖g‖² ≈ ((N+d−1)/N)‖∇L‖² for small eps."""
+    A, b, theta, d = quad
+    gtrue = quad_grad(A, b)(theta)
+    n = 8
+    vals = []
+    for s in range(400):
+        g, _, _, _ = fzoo_estimate(None, quad_loss(A, b), theta, 1e-6, n, s * 131 + 17)
+        vals.append(g @ g)
+    ratio = np.mean(vals) / (gtrue @ gtrue)
+    want = (n + d - 1) / n
+    assert abs(ratio - want) / want < 0.15, (ratio, want)
+
+
+def test_prop32_sigma_estimates_grad_norm(quad):
+    """eq. 7: E[σ²] ≈ eps²‖∇L‖² (the key fact making g/σ a normalized
+    gradient). Also check σ² ≈ ε²‖g‖²(N−1)/N per-realisation (Remark 3.3
+    exact identity in the linear regime)."""
+    A, b, theta, d = quad
+    gtrue = quad_grad(A, b)(theta)
+    eps, n = 1e-6, 8
+    s2, per_real = [], []
+    for s in range(400):
+        g, sigma, _, _ = fzoo_estimate(None, quad_loss(A, b), theta, eps, n, s * 29 + 1)
+        s2.append(sigma ** 2)
+        per_real.append(sigma ** 2 / (eps ** 2 * (g @ g) * (n - 1) / n))
+    ratio = np.mean(s2) / (eps ** 2 * (gtrue @ gtrue))
+    assert abs(ratio - 1.0) < 0.2, ratio
+    # NOTE (paper soundness): §3.2.1 claims the per-realisation identity
+    # σ² = ε²‖g‖²(N−1)/N, but that contradicts the paper's own Prop 3.2:
+    # E[σ²]/（ε²E‖g‖²) = N/(N+d−1) (eq. 7 / eq. 6), NOT (N−1)/N. We verify
+    # the *self-consistent* relation here and record the discrepancy in
+    # DESIGN.md — the normalized-SGD equivalence (Remark 3.3) only needs the
+    # expectations to be proportional by an iteration-independent constant,
+    # which is what we assert.
+    med = np.median(per_real)
+    want_med = (n ** 2) / ((n + d - 1) * (n - 1))
+    assert 0.4 * want_med < med < 2.5 * want_med, (med, want_med)
+
+
+def test_fzoo_converges_on_quadratic(quad):
+    """Full FZOO loop (Algorithm 1 semantics, one-sided, σ-normalized steps)
+    drives a convex quadratic to near-optimum; fixed-step ZO-SGD with the
+    same per-step budget is slower."""
+    A, b, theta0, d = quad
+    lf, gf = quad_loss(A, b), quad_grad(A, b)
+    opt = -np.linalg.solve(A, b)
+    lopt = lf(opt)
+
+    def run_fzoo(steps, eta=0.05, eps=1e-4, n=8):
+        th = theta0.copy()
+        for t in range(steps):
+            g, sigma, l0, ls = fzoo_estimate(None, lf, th, eps, n, t * 977 + 5)
+            if sigma < 1e-12:
+                continue
+            # coeffs form used by the rust coordinator:
+            # theta -= sum_i eta*(l_i - l_0)/(N*sigma) * u_i  == eta*eps*g/sigma
+            th = th - eta * eps * g / sigma
+        return lf(th)
+
+    def run_zosgd(steps, lr=2e-3, eps=1e-4, n=8):
+        th = theta0.copy()
+        for t in range(steps):
+            g, _, _, _ = fzoo_estimate(None, lf, th, eps, n, t * 977 + 5)
+            th = th - lr * g
+        return lf(th)
+
+    l_init = lf(theta0)
+    l_fzoo = run_fzoo(400)
+    l_sgd = run_zosgd(400)
+    assert l_fzoo - lopt < 0.2 * (l_init - lopt), "FZOO failed to converge"
+    assert l_fzoo < l_sgd + 1e-9, "FZOO should beat fixed-step ZO-SGD here"
+
+
+def test_normalized_step_size_is_gradient_invariant(quad):
+    """Remark 3.3: ‖Δθ‖ = eta·eps·‖g‖/σ ≈ eta·sqrt(N/(N−1))·sqrt((N+d−1)/N)
+    — independent of ‖∇L‖. Scale the objective 100×: step norm unchanged."""
+    A, b, theta, d = quad
+    n, eps = 8, 1e-6
+    norms = []
+    for scale in (1.0, 100.0):
+        lf = lambda th: scale * quad_loss(A, b)(th)
+        g, sigma, _, _ = fzoo_estimate(None, lf, theta, eps, n, 12345)
+        norms.append(np.linalg.norm(eps * g / sigma))
+    assert abs(norms[0] - norms[1]) / norms[0] < 1e-6
+    want = np.sqrt((n + d - 1) / n) * np.sqrt(n / (n - 1)) / 1.0
+    assert abs(norms[0] - want) / want < 0.35, (norms[0], want)

@@ -1,0 +1,121 @@
+"""L1 kernel correctness: Pallas fused perturbed dense vs pure-jnp oracle.
+
+The oracle (kernels/ref.py) materialises the full sign matrix and runs the
+naive per-stream perturbed matmul; the kernel must match it for every
+shape/seed/eps hypothesis draws.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import perturbed as P
+from compile.kernels import ref as R
+
+RTOL, ATOL = 2e-4, 2e-5
+
+
+def _rand(shape, seed):
+    return jnp.asarray(np.random.RandomState(seed).randn(*shape).astype(np.float32))
+
+
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 48),
+    o=st.integers(1, 40),
+    seed=st.integers(0, 2**32 - 1),
+    offset=st.integers(0, 2**20),
+)
+@settings(max_examples=30, deadline=None)
+def test_sign_matmul_pallas_matches_ref(m, k, o, seed, offset):
+    x = _rand((m, k), (m * k) % 1000)
+    got = P.sign_matmul_pallas(x, o, seed, offset)
+    want = R.sign_matmul_ref(x, o, seed, offset)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 48),
+    o=st.integers(1, 40),
+    seed=st.integers(0, 2**32 - 1),
+    offset=st.integers(0, 2**20),
+)
+@settings(max_examples=40, deadline=None)
+def test_sign_matmul_jnp_matches_ref(m, k, o, seed, offset):
+    x = _rand((m, k), (m + k + o) % 997)
+    got = P.sign_matmul_jnp(x, o, seed, offset)
+    want = R.sign_matmul_ref(x, o, seed, offset)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_sign_matmul_tile_boundaries():
+    """Shapes straddling the BM/BO/BK tile sizes (padding path)."""
+    for m, k, o in [(128, 256, 128), (129, 257, 129), (127, 255, 127),
+                    (1, 1, 1), (256, 512, 256)]:
+        x = _rand((m, k), m)
+        got = P.sign_matmul_pallas(x, o, 5, 77)
+        want = R.sign_matmul_ref(x, o, 5, 77)
+        np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL * 10)
+
+
+@given(
+    s=st.integers(2, 5),
+    m=st.integers(1, 16),
+    k=st.integers(2, 32),
+    o=st.integers(2, 24),
+    seed=st.integers(0, 2**31),
+    eps=st.floats(1e-4, 1e-1),
+    impl=st.sampled_from(["jnp", "pallas"]),
+)
+@settings(max_examples=25, deadline=None)
+def test_fused_dense_matches_naive_per_stream(s, m, k, o, seed, eps, impl):
+    xs = _rand((s, m, k), s * m)
+    w = _rand((o, k), k)
+    b = _rand((o,), o)
+    seeds = jnp.asarray([seed + 13 * i for i in range(s)], jnp.uint32)
+    eps_s = jnp.asarray([0.0] + [eps] * (s - 1), jnp.float32)
+    got = P.fused_dense(xs, w, b, seeds, eps_s, 1234, 99999, impl=impl)
+    want = R.fused_dense_ref(xs, w, b, seeds, eps_s, 1234, 99999)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+def test_fused_dense_stream0_is_clean():
+    """Stream 0 must be the exact unperturbed dense (l_0 of the one-sided
+    estimator depends on it)."""
+    xs = _rand((4, 8, 16), 0)
+    w = _rand((12, 16), 1)
+    b = _rand((12,), 2)
+    seeds = jnp.asarray([0, 1, 2, 3], jnp.uint32)
+    eps_s = jnp.asarray([0.0, 0.1, 0.1, 0.1], jnp.float32)
+    got = P.fused_dense(xs, w, b, seeds, eps_s, 0, 500)
+    clean = xs[0] @ w.T + b
+    np.testing.assert_allclose(got[0], clean, rtol=1e-5, atol=1e-6)
+
+
+def test_perturb_false_is_plain_dense_all_streams():
+    xs = _rand((3, 8, 16), 3)
+    w = _rand((12, 16), 4)
+    b = _rand((12,), 5)
+    seeds = jnp.asarray([0, 1, 2], jnp.uint32)
+    eps_s = jnp.asarray([0.0, 0.1, 0.1], jnp.float32)
+    got = P.fused_dense(xs, w, b, seeds, eps_s, 0, 500, perturb=False)
+    for i in range(3):
+        np.testing.assert_allclose(got[i], xs[i] @ w.T + b, rtol=1e-5, atol=1e-6)
+
+
+def test_eps_scaling_linearity():
+    """The sign term is linear in eps: (y(2e) - y0) = 2 (y(e) - y0)."""
+    xs = _rand((2, 6, 10), 7)
+    w = _rand((8, 10), 8)
+    b = jnp.zeros((8,), jnp.float32)
+    seeds = jnp.asarray([0, 9], jnp.uint32)
+    e1 = jnp.asarray([0.0, 0.01], jnp.float32)
+    e2 = jnp.asarray([0.0, 0.02], jnp.float32)
+    y0 = P.fused_dense(xs, w, b, seeds, jnp.zeros(2, jnp.float32), 0, 100)
+    y1 = P.fused_dense(xs, w, b, seeds, e1, 0, 100)
+    y2 = P.fused_dense(xs, w, b, seeds, e2, 0, 100)
+    np.testing.assert_allclose(y2[1] - y0[1], 2 * (y1[1] - y0[1]),
+                               rtol=1e-4, atol=1e-5)

@@ -1,0 +1,126 @@
+"""The AOT manifest is the contract between Python (build time) and the
+Rust coordinator (runtime). These tests pin the parts Rust depends on:
+layout determinism, offset contiguity, config round-trip, and the
+executable inventory per model family.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile.configs import CONFIGS, DEFAULT_SET, config_dict
+from compile import params
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ART, "manifest.json")
+
+
+class TestLayout:
+    @pytest.mark.parametrize("name", DEFAULT_SET)
+    def test_layout_contiguous_and_deterministic(self, name):
+        cfg = CONFIGS[name]
+        lay1, lay2 = params.layout(cfg), params.layout(cfg)
+        assert [l.name for l in lay1.leaves] == [l.name for l in lay2.leaves]
+        off = 0
+        for leaf in lay1.leaves:
+            assert leaf.offset == off, f"{name}:{leaf.name} gap at {off}"
+            off += leaf.size
+        assert off == lay1.d
+
+    def test_leaf_names_unique(self):
+        for name in DEFAULT_SET:
+            lay = params.layout(CONFIGS[name])
+            names = [l.name for l in lay.leaves]
+            assert len(names) == len(set(names)), name
+
+    def test_unpack_roundtrip(self):
+        cfg = CONFIGS["tiny-enc"]
+        lay = params.layout(cfg)
+        theta = np.arange(lay.d, dtype=np.float32)
+        tree = params.unpack(theta, lay)
+        # every element appears exactly once across the unpacked leaves
+        total = sum(np.asarray(v).size for v in tree.values())
+        assert total == lay.d
+        for leaf in lay.leaves:
+            got = np.asarray(tree[leaf.name]).reshape(-1)
+            want = theta[leaf.offset : leaf.offset + leaf.size]
+            np.testing.assert_array_equal(got, want)
+
+    def test_init_params_match_layout_and_are_finite(self):
+        cfg = CONFIGS["tiny-enc"]
+        lay = params.layout(cfg)
+        th = params.init_params(cfg, seed=0)
+        assert th.shape == (lay.d,)
+        assert th.dtype == np.float32
+        assert np.isfinite(th).all()
+        # deterministic in the seed
+        np.testing.assert_array_equal(th, params.init_params(cfg, seed=0))
+        assert not np.array_equal(th, params.init_params(cfg, seed=1))
+
+
+@pytest.mark.skipif(not os.path.exists(MANIFEST), reason="run `make artifacts`")
+class TestManifestOnDisk:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        with open(MANIFEST) as f:
+            return json.load(f)
+
+    def test_every_default_model_present(self, manifest):
+        for name in DEFAULT_SET:
+            assert name in manifest["models"], name
+
+    def test_d_matches_recomputed_layout(self, manifest):
+        for name in DEFAULT_SET:
+            entry = manifest["models"][name]
+            lay = params.layout(CONFIGS[name])
+            assert entry["d"] == lay.d, name
+            # spot-check leaf offsets recorded for Rust introspection
+            recorded = {l["name"]: l["offset"] for l in entry["layout"]}
+            assert recorded == lay.offsets(), name
+
+    def test_config_roundtrip(self, manifest):
+        for name in DEFAULT_SET:
+            assert manifest["models"][name]["config"] == config_dict(CONFIGS[name])
+
+    def test_executable_files_exist_with_io_specs(self, manifest):
+        for name in DEFAULT_SET:
+            entry = manifest["models"][name]
+            assert "fwd_loss" in entry["executables"], name
+            assert "eval_logits" in entry["executables"], name
+            for exe, spec in entry["executables"].items():
+                path = os.path.join(ART, spec["file"])
+                assert os.path.exists(path), f"{name}/{exe}"
+                assert spec["inputs"] and spec["outputs"], f"{name}/{exe}"
+                for io in spec["inputs"] + spec["outputs"]:
+                    assert io["dtype"] in ("f32", "i32", "u32"), io
+                    assert all(d > 0 for d in io["shape"]), io
+
+    def test_zo_family_exes_present_on_ft_models(self, manifest):
+        for name in DEFAULT_SET:
+            cfg = CONFIGS[name]
+            entry = manifest["models"][name]
+            exes = set(entry["executables"])
+            if cfg.n_prefix == 0:  # FT artifact set
+                assert {"fzoo_losses", "zo_update", "mezo_losses", "gauss_update"} <= exes, name
+
+    def test_fzoo_losses_output_is_n_plus_one(self, manifest):
+        for name in DEFAULT_SET:
+            entry = manifest["models"][name]
+            spec = entry["executables"].get("fzoo_losses")
+            if spec is None:
+                continue
+            n = CONFIGS[name].n_pert
+            out = spec["outputs"][0]
+            assert out["shape"] == [n + 1], name
+
+    def test_pretrained_checkpoint_loadable_when_present(self, manifest):
+        for name in ("roberta-prox", "tiny-enc"):
+            p = os.path.join(ART, name, "pretrained.bin")
+            if not os.path.exists(p):
+                continue
+            d = manifest["models"][name]["d"]
+            raw = np.fromfile(p, dtype=np.float32)
+            assert raw.size == d, name
+            assert np.isfinite(raw).all(), name

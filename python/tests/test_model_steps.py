@@ -1,0 +1,187 @@
+"""L2 model + step-graph tests: the integration invariants the whole
+three-layer stack hangs on.
+
+The crown jewel: ``fzoo_losses`` stream i == ``fwd_loss`` on theta
+explicitly perturbed by eps * u_i(stream_seed(seed, i)) — i.e. the fused
+batched forward computes exactly the losses the one-sided estimator needs,
+and ``zo_update`` walks back exactly those directions.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import params, steps
+from compile.configs import CONFIGS
+from compile.kernels.rademacher import rademacher, stream_seed
+from compile.model import forward, loss_streams
+
+
+def make_batch(cfg, seed=0):
+    rng = np.random.RandomState(seed)
+    ids = rng.randint(2, cfg.vocab, (cfg.batch, cfg.seq)).astype(np.int32)
+    ids[:, 0] = 1  # CLS
+    mask = np.ones((cfg.batch, cfg.seq), np.float32)
+    # ragged padding on half the batch
+    for b in range(cfg.batch // 2):
+        cut = rng.randint(cfg.seq // 2, cfg.seq)
+        mask[b, cut:] = 0.0
+        ids[b, cut:] = 0
+    if cfg.head == "span":
+        st = rng.randint(1, cfg.seq // 2, (cfg.batch,))
+        en = st + rng.randint(0, 3, (cfg.batch,))
+        labels = np.stack([st, en], 1).astype(np.int32)
+    else:
+        labels = rng.randint(0, cfg.n_classes // 2, (cfg.batch,)).astype(np.int32)
+    return (jnp.asarray(ids), jnp.asarray(labels), jnp.asarray(mask))
+
+
+@pytest.fixture(scope="module", params=["tiny-enc", "tiny-dec", "tiny-enc-span"])
+def setup(request):
+    cfg = CONFIGS[request.param]
+    theta = jnp.asarray(params.init_params(cfg))
+    return cfg, theta, make_batch(cfg)
+
+
+def test_clean_loss_finite_and_near_chance(setup):
+    cfg, theta, (ids, labels, mask) = setup
+    fn, _ = steps.make_fwd_loss(cfg)
+    loss = float(fn(theta, ids, labels, mask)[0])
+    assert np.isfinite(loss)
+    if cfg.head == "cls":
+        assert abs(loss - np.log(cfg.n_classes)) < 0.6
+
+
+def test_fzoo_stream_equals_explicit_perturbation(setup):
+    cfg, theta, (ids, labels, mask) = setup
+    fwd, _ = steps.make_fwd_loss(cfg)
+    fz, _ = steps.make_fzoo_losses(cfg, cfg.n_pert)
+    seed, eps = jnp.uint32(77), jnp.float32(1e-3)
+    losses = fz(theta, ids, labels, mask, seed, eps)[0]
+    d = params.layout(cfg).d
+    idx = jnp.arange(d, dtype=jnp.uint32)
+    assert losses.shape == (cfg.n_pert + 1,)
+    l0 = float(fwd(theta, ids, labels, mask)[0])
+    assert abs(float(losses[0]) - l0) < 1e-5
+    for i in (1, cfg.n_pert):
+        u = rademacher(stream_seed(seed, i), idx)
+        li = float(fwd(theta + eps * u, ids, labels, mask)[0])
+        assert abs(float(losses[i]) - li) < 5e-4, (i, float(losses[i]), li)
+
+
+def test_zo_update_regenerates_forward_directions(setup):
+    cfg, theta, _ = setup
+    upd, _ = steps.make_zo_update(cfg, cfg.n_pert)
+    seed = jnp.uint32(77)
+    d = params.layout(cfg).d
+    idx = jnp.arange(d, dtype=jnp.uint32)
+    coeffs = jnp.asarray(np.random.RandomState(1).randn(cfg.n_pert) * 1e-4,
+                         jnp.float32)
+    got = upd(theta, seed, coeffs)[0]
+    want = theta
+    for i in range(cfg.n_pert):
+        want = want - coeffs[i] * rademacher(stream_seed(seed, i + 1), idx)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-7)
+
+
+def test_mezo_losses_match_explicit_gaussian(setup):
+    cfg, theta, (ids, labels, mask) = setup
+    fwd, _ = steps.make_fwd_loss(cfg)
+    mz, _ = steps.make_mezo_losses(cfg)
+    seed, eps = jnp.uint32(5), jnp.float32(1e-3)
+    lp, lm = mz(theta, ids, labels, mask, seed, eps)
+    d = params.layout(cfg).d
+    z = jax.random.normal(jax.random.PRNGKey(seed), (d,), jnp.float32)
+    assert abs(float(lp) - float(fwd(theta + eps * z, ids, labels, mask)[0])) < 5e-4
+    assert abs(float(lm) - float(fwd(theta - eps * z, ids, labels, mask)[0])) < 5e-4
+
+
+def test_gauss_update_inverts_perturbation(setup):
+    cfg, theta, _ = setup
+    gu, _ = steps.make_gauss_update(cfg)
+    seed = jnp.uint32(5)
+    d = params.layout(cfg).d
+    z = jax.random.normal(jax.random.PRNGKey(seed), (d,), jnp.float32)
+    got = gu(theta, seed, jnp.float32(0.01))[0]
+    np.testing.assert_allclose(got, theta - 0.01 * z, rtol=1e-5, atol=1e-7)
+
+
+def test_grad_loss_matches_finite_difference(setup):
+    cfg, theta, (ids, labels, mask) = setup
+    gl, _ = steps.make_grad_loss(cfg)
+    fwd, _ = steps.make_fwd_loss(cfg)
+    loss, g = gl(theta, ids, labels, mask)
+    assert g.shape == theta.shape
+    # directional finite difference along a random direction
+    v = jnp.asarray(np.random.RandomState(3).randn(theta.shape[0]), jnp.float32)
+    v = v / jnp.linalg.norm(v)
+    h = 1e-3
+    fd = (float(fwd(theta + h * v, ids, labels, mask)[0])
+          - float(fwd(theta - h * v, ids, labels, mask)[0])) / (2 * h)
+    an = float(jnp.dot(g, v))
+    assert abs(fd - an) < 5e-2 * max(1.0, abs(an)), (fd, an)
+
+
+def test_eval_logits_shapes(setup):
+    cfg, theta, (ids, labels, mask) = setup
+    ev, _ = steps.make_eval_logits(cfg)
+    out = ev(theta, ids, mask)
+    if cfg.head == "span":
+        assert out[0].shape == (cfg.batch, cfg.seq)
+        assert out[1].shape == (cfg.batch, cfg.seq)
+    else:
+        assert out[0].shape == (cfg.batch, cfg.n_classes)
+
+
+def test_decoder_ignores_padding_tail():
+    """Causal + pad masking: logits must not depend on tokens past the mask."""
+    cfg = CONFIGS["tiny-dec"]
+    theta = jnp.asarray(params.init_params(cfg))
+    ids, labels, mask = make_batch(cfg)
+    ev, _ = steps.make_eval_logits(cfg)
+    base = ev(theta, ids, mask)[0]
+    ids2 = np.asarray(ids).copy()
+    m = np.asarray(mask)
+    ids2[m == 0] = 3  # scribble over padding
+    got = ev(theta, jnp.asarray(ids2), mask)[0]
+    np.testing.assert_allclose(base, got, rtol=1e-5, atol=1e-6)
+
+
+def test_adam_zo_update_state_flow():
+    cfg = CONFIGS["tiny-enc"]
+    theta = jnp.asarray(params.init_params(cfg))
+    d = params.layout(cfg).d
+    fn, _ = steps.make_adam_zo_update(cfg)
+    m = jnp.zeros(d); v = jnp.zeros(d)
+    th2, m2, v2 = fn(theta, m, v, jnp.uint32(1), jnp.float32(0.5),
+                     jnp.float32(1e-3), jnp.float32(0.9), jnp.float32(0.999),
+                     jnp.float32(1e-8), jnp.float32(1.0))
+    assert float(jnp.abs(th2 - theta).max()) > 0
+    assert float(jnp.abs(m2).max()) > 0 and float(jnp.abs(v2).max()) > 0
+
+
+def test_f1_objective_nondiff_values():
+    cfg = CONFIGS["tiny-enc-span"]
+    theta = jnp.asarray(params.init_params(cfg))
+    ids, labels, mask = make_batch(cfg)
+    fn, _ = steps.make_fwd_loss(cfg, objective="f1")
+    val = float(fn(theta, ids, labels, mask)[0])
+    assert 0.0 <= val <= 1.0
+
+
+def test_prefix_family_consistency():
+    cfg = CONFIGS["tiny-enc-prefix"]
+    base = jnp.asarray(params.init_params(cfg))
+    pi = jnp.asarray(params.init_prefix(cfg))
+    ids, labels, mask = make_batch(cfg)
+    fwd, _ = steps.make_prefix_fwd_loss(cfg)
+    fz, _ = steps.make_prefix_fzoo_losses(cfg, cfg.n_pert)
+    seed, eps = jnp.uint32(9), jnp.float32(1e-3)
+    losses = fz(pi, base, ids, labels, mask, seed, eps)[0]
+    l0 = float(fwd(pi, base, ids, labels, mask)[0])
+    assert abs(float(losses[0]) - l0) < 1e-5
+    dp = params.prefix_dim(cfg)
+    u = rademacher(stream_seed(seed, 1), jnp.arange(dp, dtype=jnp.uint32))
+    l1 = float(fwd(pi + eps * u, base, ids, labels, mask)[0])
+    assert abs(float(losses[1]) - l1) < 5e-4

@@ -1,0 +1,93 @@
+"""Hash / Rademacher stream tests + golden vectors shared with Rust.
+
+The golden vectors here are duplicated in rust/src/zorng/mod.rs — if you
+change the hash, BOTH sides and the goldens must change together (the
+update graphs regenerate forward-pass perturbations from these bits).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels.rademacher import hash_u32, mix32, rademacher, stream_seed
+
+# golden: mix32 of a few fixed values (computed once, pinned forever)
+GOLDEN_MIX32 = {
+    0: 0x0,
+    1: 0x514E28B7,
+    42: 0x087FCD5C,
+    0xDEADBEEF: 0x0DE5C6A9,
+    0xFFFFFFFF: 0x81F16F39,
+}
+
+# golden: first 16 signs of (seed=7, idx=0..15)
+GOLDEN_SIGNS_SEED7 = [1, -1, 1, 1, 1, 1, -1, 1, 1, 1, 1, 1, 1, -1, -1, -1]
+
+
+def _mix32_py(x: int) -> int:
+    x &= 0xFFFFFFFF
+    x ^= x >> 16
+    x = (x * 0x85EBCA6B) & 0xFFFFFFFF
+    x ^= x >> 13
+    x = (x * 0xC2B2AE35) & 0xFFFFFFFF
+    x ^= x >> 16
+    return x
+
+
+def test_mix32_golden():
+    for k, v in GOLDEN_MIX32.items():
+        got = int(mix32(jnp.uint32(k)))
+        assert got == _mix32_py(k), (k, hex(got))
+        assert got == v, f"golden drift: mix32({k}) = {hex(got)}, want {hex(v)}"
+
+
+def test_signs_golden():
+    s = rademacher(7, jnp.arange(16, dtype=jnp.uint32))
+    assert [int(x) for x in np.asarray(s)] == GOLDEN_SIGNS_SEED7
+
+
+@given(seed=st.integers(0, 2**32 - 1), idx=st.integers(0, 2**32 - 1))
+@settings(max_examples=50, deadline=None)
+def test_hash_matches_python_model(seed, idx):
+    got = int(hash_u32(jnp.uint32(seed), jnp.uint32(idx)))
+    want = _mix32_py(((idx * 0x9E3779B1) + seed) & 0xFFFFFFFF)
+    assert got == want
+
+
+@given(seed=st.integers(0, 2**32 - 1))
+@settings(max_examples=20, deadline=None)
+def test_signs_are_pm_one_and_roughly_balanced(seed):
+    s = np.asarray(rademacher(seed, jnp.arange(4096, dtype=jnp.uint32)))
+    assert set(np.unique(s)) <= {-1.0, 1.0}
+    assert abs(s.mean()) < 0.08  # 4096 samples: |mean| ~ 1/sqrt(n) ≈ 0.016
+
+
+def test_streams_decorrelated():
+    idx = jnp.arange(8192, dtype=jnp.uint32)
+    u1 = np.asarray(rademacher(stream_seed(123, 1), idx))
+    u2 = np.asarray(rademacher(stream_seed(123, 2), idx))
+    u3 = np.asarray(rademacher(stream_seed(124, 1), idx))
+    assert abs(np.dot(u1, u2) / 8192) < 0.05
+    assert abs(np.dot(u1, u3) / 8192) < 0.05
+
+
+def test_stream_seed_traced_matches_static():
+    import jax
+    f = jax.jit(lambda s, i: stream_seed(s, i))
+    for i in range(1, 5):
+        assert int(f(jnp.uint32(9), jnp.uint32(i))) == int(stream_seed(9, i))
+
+
+def test_covariance_identity_like():
+    """E[u u^T] = I: off-diagonal empirical correlations are small, diagonal
+    exactly 1 (u_i^2 = 1)."""
+    n, d = 512, 32
+    rows = np.stack([
+        np.asarray(rademacher(stream_seed(s, 1), jnp.arange(d, dtype=jnp.uint32)))
+        for s in range(n)])
+    cov = rows.T @ rows / n
+    assert np.allclose(np.diag(cov), 1.0)
+    off = cov - np.diag(np.diag(cov))
+    assert np.abs(off).max() < 0.25  # 512 samples

@@ -1,0 +1,74 @@
+//! Coordinator-side (non-PJRT) hot-path benches: batch generation, literal
+//! assembly, coefficient math, hash throughput. The L3 target is
+//! coordinator overhead < 5% of executable time (see DESIGN.md §Perf).
+
+use fzoo::data::{Batcher, TaskKind};
+use fzoo::optim::sample_std;
+use fzoo::runtime::ModelConfig;
+use fzoo::util::bench::{black_box, Bench};
+use fzoo::zorng::{rademacher_sign, SplitMix64};
+
+fn cfg() -> ModelConfig {
+    ModelConfig {
+        name: "bench".into(),
+        arch: "decoder".into(),
+        vocab: 2048,
+        dim: 128,
+        layers: 4,
+        heads: 4,
+        seq: 64,
+        n_classes: 8,
+        head: "cls".into(),
+        batch: 16,
+        n_pert: 8,
+        mlp_ratio: 4,
+        n_prefix: 0,
+        extra_n: vec![],
+    }
+}
+
+fn main() {
+    let mut b = Bench::default();
+    println!("== coordinator_bench: L3 non-PJRT hot paths ==");
+
+    let m = cfg();
+    let task = TaskKind::Sst2.instantiate(&m, 0).unwrap();
+    let mut batcher = Batcher::new(task, &m, 0);
+    b.run("batch_gen_16x64", || {
+        black_box(batcher.next_train());
+    });
+
+    let batch = batcher.next_train();
+    b.run("batch_literals_16x64", || {
+        black_box(batch.literals().unwrap());
+    });
+
+    let losses: Vec<f32> = (0..9).map(|i| 1.0 + 0.01 * i as f32).collect();
+    b.run("fzoo_coeffs_n8", || {
+        let l0 = losses[0];
+        let ls = &losses[1..];
+        let sigma = sample_std(ls);
+        let coeffs: Vec<f32> = ls
+            .iter()
+            .map(|&li| 1e-3 * (li - l0) / (8.0 * sigma))
+            .collect();
+        black_box(coeffs);
+    });
+
+    b.run("rademacher_1m_signs", || {
+        let mut acc = 0.0f32;
+        for i in 0..1_000_000u32 {
+            acc += rademacher_sign(42, i);
+        }
+        black_box(acc);
+    });
+
+    b.run("splitmix_1m", || {
+        let mut r = SplitMix64::new(7);
+        let mut acc = 0u64;
+        for _ in 0..1_000_000 {
+            acc ^= r.next_u64();
+        }
+        black_box(acc);
+    });
+}

@@ -1,0 +1,62 @@
+//! Per-step hot-path bench — backs Table 5/13 (wallclock per step: Adam vs
+//! MeZO vs FZOO vs FZOO-w/o-parallel) and the §3.3 fused-vs-sequential
+//! speedup claim. Uses the in-tree micro-bench harness (offline build has
+//! no criterion); `cargo bench` runs this binary directly.
+
+use fzoo::coordinator::TrainOpts;
+use fzoo::data::TaskKind;
+use fzoo::optim::OptimizerKind;
+use fzoo::runtime::{Runtime, Session};
+use fzoo::util::bench::{black_box, Bench};
+
+fn main() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let rt = Runtime::load(dir).expect("run `make artifacts` before cargo bench");
+
+    let mut b = Bench::new(2, 8);
+    println!("== step_bench: per-optimizer wallclock per training step ==");
+
+    for model in ["roberta-prox", "opt125-prox"] {
+        if rt.manifest.model(model).is_err() {
+            eprintln!("skipping {model}: artifacts not built");
+            continue;
+        }
+        for opt in [
+            "adam", "mezo", "hizoo", "fzoo", "fzoo-seq", "fzoo-r",
+        ] {
+            let kind = OptimizerKind::by_name(opt, 1e-4, 1e-3).unwrap();
+            let mut session = Session::open(&rt, model).unwrap();
+            let task = TaskKind::Sst2
+                .instantiate(session.model_config(), 0)
+                .unwrap();
+            let opts = TrainOpts {
+                steps: 1,
+                eval_batches: 0,
+                ..Default::default()
+            };
+            let mut trainer =
+                fzoo::coordinator::Trainer::with_opts(&rt, &mut session, task, kind, opts);
+            let _ = trainer.train(1).unwrap(); // warm executable cache
+            let mut step = 1u64;
+            b.run(&format!("{model}/{opt}_step"), || {
+                let batch = trainer.batcher.next_train();
+                let out = trainer
+                    .optimizer
+                    .step(&rt, trainer.session, &batch, step)
+                    .unwrap();
+                step += 1;
+                black_box(out.loss);
+            });
+        }
+        // the §3.3 headline: fused batched forward vs sequential
+        if let Some(r) = b.ratio(
+            &format!("{model}/fzoo-seq_step"),
+            &format!("{model}/fzoo_step"),
+        ) {
+            println!(
+                "--> {model}: fused batched forward speedup over sequential: \
+                 {r:.2}x (paper: 1.92x on OPT-125M/CUDA)\n"
+            );
+        }
+    }
+}

@@ -1,0 +1,80 @@
+//! `xp` — the experiment harness binary: regenerates every table and
+//! figure of the paper (see DESIGN.md §4 for the index).
+//!
+//! ```text
+//! xp list                      # experiment inventory
+//! xp tab1 [--smoke]            # one experiment
+//! xp all  [--out reports]      # everything
+//! ```
+
+use anyhow::{bail, Result};
+
+use fzoo::runtime::Runtime;
+use fzoo::util::args::Args;
+use fzoo::xp::suite::{self, Scale};
+
+fn main() -> Result<()> {
+    let args = Args::from_env(&["smoke", "help"])?;
+    if args.has("help") || args.positional.is_empty() {
+        println!(
+            "xp — regenerate the paper's tables/figures\n\n\
+             USAGE: xp <id>|all|list [--artifacts DIR] [--out DIR] [--smoke]"
+        );
+        return Ok(());
+    }
+    let id = args.positional[0].clone();
+    let scale = if args.has("smoke") {
+        Scale::Smoke
+    } else {
+        Scale::Paper
+    };
+    let experiments = suite::all();
+
+    if id == "list" {
+        for (name, _) in &experiments {
+            println!("{name}");
+        }
+        println!("charts   (post-process: ASCII charts from existing CSVs)");
+        return Ok(());
+    }
+    if id == "charts" {
+        let out = args.get_or("out", "reports");
+        let done = fzoo::xp::charts::render_all(&out)?;
+        for f in &done {
+            println!("   -> {out}/{f}_charts.md");
+        }
+        return Ok(());
+    }
+
+    let rt = Runtime::load(args.get_or("artifacts", "artifacts"))?;
+    let out = args.get_or("out", "reports");
+    let selected: Vec<_> = if id == "all" {
+        experiments
+    } else {
+        experiments.into_iter().filter(|(n, _)| *n == id).collect()
+    };
+    if selected.is_empty() {
+        bail!("unknown experiment '{id}' (try `xp list`)");
+    }
+
+    for (name, f) in selected {
+        let t0 = std::time::Instant::now();
+        println!("== running {name} ({scale:?}) ==");
+        match f(&rt, scale) {
+            Ok(report) => {
+                report.write(&out)?;
+                println!("   -> {out}/{name}.md ({:.1}s)", t0.elapsed().as_secs_f64());
+            }
+            Err(e) => {
+                println!("   FAILED: {e:#}");
+                if id != "all" {
+                    return Err(e);
+                }
+            }
+        }
+        // evict compiled executables between experiments: XLA:CPU keeps
+        // large arenas alive per executable and `xp all` touches ~20 models
+        rt.clear_cache();
+    }
+    Ok(())
+}

@@ -1,0 +1,172 @@
+//! JSON training configuration — the launcher's file input format
+//! (the offline build has no TOML crate; JSON is parsed by `util::json`).
+//!
+//! ```json
+//! {
+//!   "artifacts": "artifacts",
+//!   "model": "roberta-prox",
+//!   "task": "sst2",
+//!   "steps": 400,
+//!   "eval_every": 100,
+//!   "run_seed": 0,
+//!   "k_shot": 16,
+//!   "schedule": "constant",
+//!   "optimizer": {"kind": "fzoo", "lr": 1e-3, "eps": 1e-3}
+//! }
+//! ```
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::{LrSchedule, TrainOpts};
+use crate::optim::OptimizerKind;
+use crate::util::json::{self, Value};
+
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub artifacts: String,
+    pub model: String,
+    pub task: String,
+    pub optimizer: OptimizerKind,
+    pub steps: u64,
+    pub eval_every: u64,
+    pub eval_batches: usize,
+    pub run_seed: u64,
+    /// few-shot k (examples per class); None = full synthetic train set
+    pub k_shot: Option<usize>,
+    pub target_loss: Option<f32>,
+    pub schedule: LrSchedule,
+    /// JSONL metrics output path
+    pub log_path: Option<String>,
+}
+
+impl TrainConfig {
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::from_json_str(&text)
+            .with_context(|| format!("parsing {}", path.as_ref().display()))
+    }
+
+    pub fn from_json_str(text: &str) -> Result<Self> {
+        let v = json::parse(text)?;
+        Ok(Self {
+            artifacts: opt_str(&v, "artifacts")?.unwrap_or_else(|| "artifacts".into()),
+            model: v.req("model")?.as_str()?.to_string(),
+            task: v.req("task")?.as_str()?.to_string(),
+            optimizer: OptimizerKind::from_json(v.req("optimizer")?)?,
+            steps: v.get("steps").map(|x| x.as_u64()).transpose()?.unwrap_or(200),
+            eval_every: v
+                .get("eval_every")
+                .map(|x| x.as_u64())
+                .transpose()?
+                .unwrap_or(0),
+            eval_batches: v
+                .get("eval_batches")
+                .map(|x| x.as_usize())
+                .transpose()?
+                .unwrap_or(8),
+            run_seed: v.get("run_seed").map(|x| x.as_u64()).transpose()?.unwrap_or(0),
+            k_shot: v.get("k_shot").map(|x| x.as_usize()).transpose()?,
+            target_loss: v.get("target_loss").map(|x| x.as_f32()).transpose()?,
+            schedule: match v.get("schedule") {
+                None => LrSchedule::Constant,
+                Some(s) => parse_schedule(s.as_str()?)?,
+            },
+            log_path: opt_str(&v, "log_path")?,
+        })
+    }
+
+    pub fn train_opts(&self) -> TrainOpts {
+        TrainOpts {
+            steps: self.steps,
+            eval_every: self.eval_every,
+            eval_batches: self.eval_batches,
+            target_loss: self.target_loss,
+            schedule: self.schedule,
+            run_seed: self.run_seed,
+            verbose: true,
+        }
+    }
+}
+
+fn opt_str(v: &Value, key: &str) -> Result<Option<String>> {
+    Ok(match v.get(key) {
+        Some(Value::Str(s)) => Some(s.clone()),
+        Some(Value::Null) | None => None,
+        Some(other) => bail!("'{key}' should be a string, got {other:?}"),
+    })
+}
+
+/// `"constant"`, `"linear:<end>"`, `"cosine:<min>"`, `"warmup:<steps>"`.
+pub fn parse_schedule(s: &str) -> Result<LrSchedule> {
+    let (kind, arg) = s.split_once(':').unwrap_or((s, ""));
+    Ok(match kind {
+        "constant" => LrSchedule::Constant,
+        "linear" => LrSchedule::Linear {
+            end: arg.parse().context("linear:<end>")?,
+        },
+        "cosine" => LrSchedule::Cosine {
+            min: arg.parse().context("cosine:<min>")?,
+        },
+        "warmup" => LrSchedule::Warmup {
+            steps: arg.parse().context("warmup:<steps>")?,
+        },
+        other => bail!("unknown schedule '{other}'"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_minimal() {
+        let c = TrainConfig::from_json_str(
+            r#"{"model":"tiny-enc","task":"sst2",
+                "optimizer":{"kind":"fzoo","lr":1e-3,"eps":1e-3}}"#,
+        )
+        .unwrap();
+        assert_eq!(c.model, "tiny-enc");
+        assert_eq!(c.steps, 200);
+        assert_eq!(c.optimizer.display_name(), "FZOO");
+        assert_eq!(c.schedule, LrSchedule::Constant);
+    }
+
+    #[test]
+    fn parse_full() {
+        let c = TrainConfig::from_json_str(
+            r#"{"artifacts":"artifacts","model":"roberta-prox","task":"snli",
+                "optimizer":{"kind":"mezo","lr":1e-6,"eps":1e-3},
+                "steps":500,"eval_every":100,"eval_batches":4,"run_seed":7,
+                "k_shot":16,"target_loss":0.3,"schedule":"linear:0.1",
+                "log_path":"runs/x.jsonl"}"#,
+        )
+        .unwrap();
+        assert_eq!(c.k_shot, Some(16));
+        assert_eq!(c.schedule, LrSchedule::Linear { end: 0.1 });
+        assert_eq!(c.optimizer.display_name(), "MeZO");
+        assert_eq!(c.log_path.as_deref(), Some("runs/x.jsonl"));
+    }
+
+    #[test]
+    fn schedule_strings() {
+        assert_eq!(parse_schedule("constant").unwrap(), LrSchedule::Constant);
+        assert_eq!(
+            parse_schedule("cosine:0.2").unwrap(),
+            LrSchedule::Cosine { min: 0.2 }
+        );
+        assert_eq!(
+            parse_schedule("warmup:10").unwrap(),
+            LrSchedule::Warmup { steps: 10 }
+        );
+        assert!(parse_schedule("bogus").is_err());
+        assert!(parse_schedule("linear:x").is_err());
+    }
+
+    #[test]
+    fn missing_required_fields_error() {
+        assert!(TrainConfig::from_json_str(r#"{"task":"sst2"}"#).is_err());
+    }
+}

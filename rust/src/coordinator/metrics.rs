@@ -1,0 +1,157 @@
+//! Evaluation metrics (accuracy, span exact-match, token-F1) and the JSONL
+//! run logger.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::data::Batcher;
+use crate::runtime::{scalar_f32, to_vec_f32, Runtime, Session};
+
+/// Evaluation result over the eval split.
+#[derive(Debug, Clone, Copy)]
+pub struct EvalOut {
+    /// classification accuracy / span exact-match
+    pub accuracy: f64,
+    /// token-overlap F1 (span tasks; == accuracy for cls tasks)
+    pub f1: f64,
+    /// mean eval loss (clean forward)
+    pub loss: f32,
+    pub examples: usize,
+}
+
+/// Run `eval_logits` over `n_batches` eval batches and score.
+pub fn evaluate(
+    rt: &Runtime,
+    s: &Session,
+    batcher: &Batcher,
+    n_batches: usize,
+) -> Result<EvalOut> {
+    let exe = rt.executable(&s.model, "eval_logits")?;
+    let fwd = rt.executable(&s.model, "fwd_loss")?;
+    let span = batcher.task.is_span();
+    let n_classes = batcher.task.n_classes;
+
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    let mut f1_sum = 0.0f64;
+    let mut loss_sum = 0.0f32;
+
+    for bi in 0..n_batches {
+        let batch = batcher.eval_batch(bi);
+        let (ids, labels, mask) = batch.literals()?;
+        let mut inputs = s.param_inputs()?;
+        inputs.push(ids);
+        inputs.push(mask);
+        let outs = exe.run(&inputs)?;
+
+        let (ids2, labels2, mask2) = batch.literals()?;
+        let mut linputs = s.param_inputs()?;
+        linputs.extend([ids2, labels2, mask2]);
+        loss_sum += scalar_f32(&fwd.run(&linputs)?[0])?;
+        drop(labels);
+
+        if span {
+            let start = to_vec_f32(&outs[0])?; // [B, T]
+            let end = to_vec_f32(&outs[1])?;
+            let t = batch.t;
+            for b in 0..batch.b {
+                let ps = argmax(&start[b * t..(b + 1) * t]) as i32;
+                let pe = argmax(&end[b * t..(b + 1) * t]) as i32;
+                let pe = pe.max(ps);
+                let (gs, ge) = (batch.labels[b * 2], batch.labels[b * 2 + 1]);
+                if ps == gs && pe == ge {
+                    correct += 1;
+                }
+                f1_sum += span_f1(ps, pe, gs, ge);
+                total += 1;
+            }
+        } else {
+            let logits = to_vec_f32(&outs[0])?; // [B, C_model]
+            let c_model = logits.len() / batch.b;
+            for b in 0..batch.b {
+                // score only the task's live classes (head is C_max wide)
+                let row = &logits[b * c_model..b * c_model + n_classes];
+                let pred = argmax(row) as i32;
+                if pred == batch.labels[b] {
+                    correct += 1;
+                }
+                total += 1;
+            }
+            f1_sum = correct as f64;
+        }
+    }
+
+    let accuracy = correct as f64 / total.max(1) as f64;
+    Ok(EvalOut {
+        accuracy,
+        f1: if span { f1_sum / total.max(1) as f64 } else { accuracy },
+        loss: loss_sum / n_batches.max(1) as f32,
+        examples: total,
+    })
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, v) in xs.iter().enumerate() {
+        if *v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Token-overlap F1 between predicted and gold spans (inclusive indices).
+pub fn span_f1(ps: i32, pe: i32, gs: i32, ge: i32) -> f64 {
+    let inter = (pe.min(ge) - ps.max(gs) + 1).max(0) as f64;
+    if inter == 0.0 {
+        return 0.0;
+    }
+    let plen = (pe - ps + 1) as f64;
+    let glen = (ge - gs + 1) as f64;
+    let p = inter / plen;
+    let r = inter / glen;
+    2.0 * p * r / (p + r)
+}
+
+/// Append-only JSONL logger for training runs (one line per record).
+pub struct RunLogger {
+    file: std::fs::File,
+}
+
+impl RunLogger {
+    pub fn create(path: impl AsRef<Path>) -> Result<Self> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        Ok(Self {
+            file: std::fs::File::create(path)?,
+        })
+    }
+
+    pub fn log(&mut self, record: &crate::util::json::Value) -> Result<()> {
+        writeln!(self.file, "{}", record.to_string())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn span_f1_cases() {
+        assert_eq!(span_f1(3, 5, 3, 5), 1.0); // exact
+        assert_eq!(span_f1(0, 1, 5, 6), 0.0); // disjoint
+        let f = span_f1(3, 6, 5, 6); // pred 4 toks, gold 2, overlap 2
+        assert!((f - 2.0 * 0.5 * 1.0 / 1.5).abs() < 1e-9);
+        assert!(span_f1(5, 5, 5, 6) > 0.6);
+    }
+
+    #[test]
+    fn argmax_first_max() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[-5.0]), 0);
+    }
+}

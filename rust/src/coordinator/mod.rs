@@ -1,0 +1,15 @@
+//! L3 coordinator — the training event loop, evaluation, metrics and
+//! scheduling. This is where the paper's *coordination* contribution
+//! lives: seed bookkeeping, loss-std bookkeeping, the adaptive step rule
+//! (inside optim::fzoo), forward-pass accounting, and the run/eval loops
+//! the experiment harness builds on.
+
+pub mod metrics;
+pub mod pretrain;
+pub mod schedule;
+pub mod trainer;
+
+pub use metrics::{EvalOut, RunLogger};
+pub use pretrain::{ensure_pretrained, pretrained_path};
+pub use schedule::LrSchedule;
+pub use trainer::{History, StepRecord, TrainOpts, Trainer};

@@ -1,0 +1,85 @@
+//! Learning-rate schedules. The paper uses a constant schedule for FZOO
+//! (Appendix D.1); linear decay and cosine are provided for the baselines
+//! and ablations.
+
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum LrSchedule {
+    #[default]
+    Constant,
+    Linear {
+        /// final scale at the last step (e.g. 0.0 for full decay)
+        end: f32,
+    },
+    Cosine {
+        min: f32,
+    },
+    /// linear warmup then constant
+    Warmup {
+        steps: u64,
+    },
+}
+
+impl LrSchedule {
+    /// Multiplicative scale for `step` out of `total`.
+    pub fn scale(&self, step: u64, total: u64) -> f32 {
+        let frac = if total <= 1 {
+            0.0
+        } else {
+            step as f32 / (total - 1) as f32
+        };
+        match self {
+            LrSchedule::Constant => 1.0,
+            LrSchedule::Linear { end } => 1.0 + (end - 1.0) * frac,
+            LrSchedule::Cosine { min } => {
+                min + (1.0 - min) * 0.5 * (1.0 + (std::f32::consts::PI * frac).cos())
+            }
+            LrSchedule::Warmup { steps } => {
+                if *steps == 0 || step >= *steps {
+                    1.0
+                } else {
+                    (step + 1) as f32 / *steps as f32
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_one() {
+        for s in [0, 10, 99] {
+            assert_eq!(LrSchedule::Constant.scale(s, 100), 1.0);
+        }
+    }
+
+    #[test]
+    fn linear_endpoints() {
+        let l = LrSchedule::Linear { end: 0.0 };
+        assert!((l.scale(0, 100) - 1.0).abs() < 1e-6);
+        assert!(l.scale(99, 100).abs() < 1e-6);
+        assert!((l.scale(49, 100) - 0.5051).abs() < 0.01);
+    }
+
+    #[test]
+    fn cosine_monotone_decreasing() {
+        let c = LrSchedule::Cosine { min: 0.1 };
+        let mut prev = f32::INFINITY;
+        for s in 0..50 {
+            let v = c.scale(s, 50);
+            assert!(v <= prev + 1e-6);
+            assert!(v >= 0.1 - 1e-6);
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn warmup_ramps() {
+        let w = LrSchedule::Warmup { steps: 10 };
+        assert!((w.scale(0, 100) - 0.1).abs() < 1e-6);
+        assert!((w.scale(9, 100) - 1.0).abs() < 1e-6);
+        assert_eq!(w.scale(50, 100), 1.0);
+    }
+}

@@ -1,0 +1,281 @@
+//! The training event loop.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::data::{Batcher, Task};
+use crate::optim::{Optimizer, OptimizerKind};
+use crate::runtime::{Runtime, Session};
+use crate::util::json::Value;
+
+use super::metrics::{evaluate, EvalOut};
+use super::schedule::LrSchedule;
+
+#[derive(Debug, Clone)]
+pub struct TrainOpts {
+    pub steps: u64,
+    pub eval_every: u64,
+    pub eval_batches: usize,
+    /// stop early once the train loss (moving average) reaches this
+    pub target_loss: Option<f32>,
+    pub schedule: LrSchedule,
+    pub run_seed: u64,
+    /// print progress lines
+    pub verbose: bool,
+}
+
+impl Default for TrainOpts {
+    fn default() -> Self {
+        Self {
+            steps: 100,
+            eval_every: 0,
+            eval_batches: 8,
+            target_loss: None,
+            schedule: LrSchedule::Constant,
+            run_seed: 0,
+            verbose: false,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct StepRecord {
+    pub step: u64,
+    pub loss: f32,
+    /// cumulative actual forward passes
+    pub forwards: f64,
+    /// cumulative forward-equivalents (backward = 3 forwards)
+    pub forward_equiv: f64,
+    pub sigma: Option<f32>,
+    pub wall_ms: f64,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct EvalRecord {
+    pub step: u64,
+    pub accuracy: f64,
+    pub f1: f64,
+    pub loss: f32,
+}
+
+impl StepRecord {
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("type", Value::str("step")),
+            ("step", Value::num(self.step as f64)),
+            ("loss", Value::num(self.loss as f64)),
+            ("forwards", Value::num(self.forwards)),
+            ("forward_equiv", Value::num(self.forward_equiv)),
+            (
+                "sigma",
+                self.sigma.map(|s| Value::num(s as f64)).unwrap_or(Value::Null),
+            ),
+            ("wall_ms", Value::num(self.wall_ms)),
+        ])
+    }
+}
+
+impl EvalRecord {
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("type", Value::str("eval")),
+            ("step", Value::num(self.step as f64)),
+            ("accuracy", Value::num(self.accuracy)),
+            ("f1", Value::num(self.f1)),
+            ("loss", Value::num(self.loss as f64)),
+        ])
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct History {
+    pub optimizer: String,
+    pub model: String,
+    pub task: String,
+    pub records: Vec<StepRecord>,
+    pub evals: Vec<EvalRecord>,
+    pub total_wall_s: f64,
+    pub steps_run: u64,
+    pub stopped_early: bool,
+}
+
+impl History {
+    pub fn last_loss(&self) -> f32 {
+        self.records.last().map(|r| r.loss).unwrap_or(f32::NAN)
+    }
+
+    pub fn final_accuracy(&self) -> Option<f64> {
+        self.evals.last().map(|e| e.accuracy)
+    }
+
+    pub fn final_f1(&self) -> Option<f64> {
+        self.evals.last().map(|e| e.f1)
+    }
+
+    pub fn best_accuracy(&self) -> Option<f64> {
+        self.evals
+            .iter()
+            .map(|e| e.accuracy)
+            .fold(None, |acc, x| Some(acc.map_or(x, |a: f64| a.max(x))))
+    }
+
+    /// Smoothed loss series (EMA) against cumulative forward passes —
+    /// the paper's Fig. 1/2 axes.
+    pub fn loss_vs_forwards(&self, ema: f64) -> Vec<(f64, f64)> {
+        let mut out = Vec::with_capacity(self.records.len());
+        let mut s = None;
+        for r in &self.records {
+            let v = r.loss as f64;
+            let sm = match s {
+                None => v,
+                Some(p) => ema * p + (1.0 - ema) * v,
+            };
+            s = Some(sm);
+            out.push((r.forwards, sm));
+        }
+        out
+    }
+
+    /// Forward passes needed to first reach `target` smoothed loss.
+    pub fn forwards_to_loss(&self, target: f64, ema: f64) -> Option<f64> {
+        self.loss_vs_forwards(ema)
+            .into_iter()
+            .find(|(_, l)| *l <= target)
+            .map(|(f, _)| f)
+    }
+
+    pub fn mean_step_wall_ms(&self) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        self.records.iter().map(|r| r.wall_ms).sum::<f64>() / self.records.len() as f64
+    }
+}
+
+/// Drives one (model, task, optimizer) run.
+pub struct Trainer<'rt, 's> {
+    rt: &'rt Runtime,
+    pub session: &'s mut Session,
+    pub batcher: Batcher,
+    pub optimizer: Box<dyn Optimizer>,
+    pub opts: TrainOpts,
+}
+
+impl<'rt, 's> Trainer<'rt, 's> {
+    pub fn new(
+        rt: &'rt Runtime,
+        session: &'s mut Session,
+        task: Task,
+        kind: OptimizerKind,
+    ) -> Self {
+        Self::with_opts(rt, session, task, kind, TrainOpts::default())
+    }
+
+    pub fn with_opts(
+        rt: &'rt Runtime,
+        session: &'s mut Session,
+        task: Task,
+        kind: OptimizerKind,
+        opts: TrainOpts,
+    ) -> Self {
+        let optimizer = kind.build(session, opts.run_seed);
+        let batcher = Batcher::new(task, &session.entry.config, opts.run_seed);
+        Self {
+            rt,
+            session,
+            batcher,
+            optimizer,
+            opts,
+        }
+    }
+
+    pub fn evaluate(&self) -> Result<EvalOut> {
+        evaluate(self.rt, self.session, &self.batcher, self.opts.eval_batches)
+    }
+
+    pub fn train(&mut self, steps: u64) -> Result<History> {
+        let mut history = History {
+            optimizer: self.optimizer.name(),
+            model: self.session.model.clone(),
+            task: self.batcher.task.kind.name().to_string(),
+            records: Vec::with_capacity(steps as usize),
+            evals: Vec::new(),
+            total_wall_s: 0.0,
+            steps_run: 0,
+            stopped_early: false,
+        };
+        let t_start = Instant::now();
+        let mut forwards = 0.0f64;
+        let mut fequiv = 0.0f64;
+        let mut ema_loss: Option<f64> = None;
+
+        for step in 0..steps {
+            let scale = self.opts.schedule.scale(step, steps);
+            self.optimizer.set_lr_scale(scale);
+            let batch = self.batcher.next_train();
+            let t0 = Instant::now();
+            let out = self.optimizer.step(self.rt, self.session, &batch, step)?;
+            let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+            forwards += out.forwards;
+            fequiv += out.forward_equiv;
+            history.records.push(StepRecord {
+                step,
+                loss: out.loss,
+                forwards,
+                forward_equiv: fequiv,
+                sigma: out.sigma,
+                wall_ms,
+            });
+            ema_loss = Some(match ema_loss {
+                None => out.loss as f64,
+                Some(p) => 0.9 * p + 0.1 * out.loss as f64,
+            });
+            history.steps_run = step + 1;
+
+            if self.opts.eval_every > 0 && (step + 1) % self.opts.eval_every == 0 {
+                let ev = self.evaluate()?;
+                history.evals.push(EvalRecord {
+                    step: step + 1,
+                    accuracy: ev.accuracy,
+                    f1: ev.f1,
+                    loss: ev.loss,
+                });
+                if self.opts.verbose {
+                    eprintln!(
+                        "[{}] step {:>5} loss {:.4} acc {:.3} ({:.0} fwd)",
+                        history.optimizer, step + 1, out.loss, ev.accuracy, forwards
+                    );
+                }
+            } else if self.opts.verbose && (step + 1) % 20 == 0 {
+                eprintln!(
+                    "[{}] step {:>5} loss {:.4} ({:.0} fwd)",
+                    history.optimizer, step + 1, out.loss, forwards
+                );
+            }
+
+            if let (Some(t), Some(ema)) = (self.opts.target_loss, ema_loss) {
+                if ema <= t as f64 {
+                    history.stopped_early = true;
+                    break;
+                }
+            }
+        }
+
+        // final eval if none yet at the end
+        if self.opts.eval_batches > 0
+            && history.evals.last().map(|e| e.step) != Some(history.steps_run)
+        {
+            let ev = self.evaluate()?;
+            history.evals.push(EvalRecord {
+                step: history.steps_run,
+                accuracy: ev.accuracy,
+                f1: ev.f1,
+                loss: ev.loss,
+            });
+        }
+
+        history.total_wall_s = t_start.elapsed().as_secs_f64();
+        Ok(history)
+    }
+}

@@ -1,0 +1,29 @@
+//! Synthetic task suite — the workload substrate.
+//!
+//! The paper evaluates on GLUE/SuperGLUE/SQuAD/DROP; those datasets are not
+//! available in this image, so (per DESIGN.md §6) each task is replaced by a
+//! *planted-signal* synthetic stand-in with the same I/O structure:
+//!
+//! * sentence classification (SST-2/SST-5/TREC): signal tokens drawn from a
+//!   label-correlated cluster;
+//! * sentence-pair inference (SNLI/MNLI/RTE/CB/BoolQ/WSC/WiC/MultiRC): the
+//!   label is a *compositional* function of the clusters planted in the two
+//!   segments (strictly harder than single-segment tasks);
+//! * multiple choice (COPA/ReCoRD): classification over choice slots;
+//! * span extraction (SQuAD/DROP): a marker token announces the answer
+//!   span; the model learns to point at it (evaluated with exact-match
+//!   accuracy and token-F1, the latter also usable as a non-differentiable
+//!   training objective).
+//!
+//! Labels carry task-specific noise, which sets an accuracy *ceiling* —
+//! this is what makes optimizer comparisons meaningful (everything can't
+//! just reach 100%). Every example is a pure function of
+//! `(task, split, index)` via SplitMix64, so runs are exactly reproducible
+//! and no data ever hits disk.
+
+pub mod batch;
+pub mod tasks;
+pub mod vocab;
+
+pub use batch::{Batch, Batcher, Split};
+pub use tasks::{Task, TaskKind};

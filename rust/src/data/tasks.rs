@@ -1,0 +1,454 @@
+//! The 15 downstream tasks of the paper's evaluation, as planted-signal
+//! generators. See module docs in `data/mod.rs` for the substitution
+//! rationale.
+
+use crate::runtime::ModelConfig;
+use crate::zorng::SplitMix64;
+
+use super::batch::Split;
+use super::vocab::{Vocab, CLS, MARK, PAD, SEP};
+
+/// All tasks appearing in the paper's tables (Tables 1–4, 7, 9, 11).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TaskKind {
+    // sentence classification
+    Sst2,
+    Sst5,
+    Trec,
+    // sentence-pair / NLI-style
+    Snli,
+    Mnli,
+    Rte,
+    Cb,
+    BoolQ,
+    Wsc,
+    Wic,
+    MultiRc,
+    // multiple choice
+    Copa,
+    ReCoRD,
+    // span extraction (generation stand-ins)
+    Squad,
+    Drop,
+}
+
+impl TaskKind {
+    pub const ALL: [TaskKind; 15] = [
+        TaskKind::Sst2,
+        TaskKind::Sst5,
+        TaskKind::Trec,
+        TaskKind::Snli,
+        TaskKind::Mnli,
+        TaskKind::Rte,
+        TaskKind::Cb,
+        TaskKind::BoolQ,
+        TaskKind::Wsc,
+        TaskKind::Wic,
+        TaskKind::MultiRc,
+        TaskKind::Copa,
+        TaskKind::ReCoRD,
+        TaskKind::Squad,
+        TaskKind::Drop,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TaskKind::Sst2 => "sst2",
+            TaskKind::Sst5 => "sst5",
+            TaskKind::Trec => "trec",
+            TaskKind::Snli => "snli",
+            TaskKind::Mnli => "mnli",
+            TaskKind::Rte => "rte",
+            TaskKind::Cb => "cb",
+            TaskKind::BoolQ => "boolq",
+            TaskKind::Wsc => "wsc",
+            TaskKind::Wic => "wic",
+            TaskKind::MultiRc => "multirc",
+            TaskKind::Copa => "copa",
+            TaskKind::ReCoRD => "record",
+            TaskKind::Squad => "squad",
+            TaskKind::Drop => "drop",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<TaskKind> {
+        TaskKind::ALL.iter().copied().find(|t| t.name() == s)
+    }
+
+    pub fn is_span(&self) -> bool {
+        matches!(self, TaskKind::Squad | TaskKind::Drop)
+    }
+
+    pub fn n_classes(&self) -> usize {
+        match self {
+            TaskKind::Sst2 | TaskKind::Rte | TaskKind::BoolQ | TaskKind::Wsc
+            | TaskKind::Wic | TaskKind::MultiRc | TaskKind::Copa => 2,
+            TaskKind::Snli | TaskKind::Mnli | TaskKind::Cb => 3,
+            TaskKind::ReCoRD => 4,
+            TaskKind::Sst5 => 5,
+            TaskKind::Trec => 6,
+            TaskKind::Squad | TaskKind::Drop => 0,
+        }
+    }
+
+    /// Structural knobs: (pair/compositional?, signal density, label noise).
+    /// Noise sets the accuracy ceiling ≈ 1 − noise·(C−1)/C; densities and
+    /// compositionality order task difficulty roughly like the paper's
+    /// accuracy ordering (SST-2 easy … MultiRC/DROP hard).
+    fn knobs(&self) -> (bool, f64, f64) {
+        match self {
+            TaskKind::Sst2 => (false, 0.30, 0.04),
+            TaskKind::Sst5 => (false, 0.22, 0.25),
+            TaskKind::Trec => (false, 0.28, 0.08),
+            TaskKind::Snli => (true, 0.25, 0.10),
+            TaskKind::Mnli => (true, 0.22, 0.15),
+            TaskKind::Rte => (true, 0.20, 0.20),
+            TaskKind::Cb => (true, 0.24, 0.15),
+            TaskKind::BoolQ => (true, 0.20, 0.15),
+            TaskKind::Wsc => (true, 0.14, 0.30),
+            TaskKind::Wic => (true, 0.16, 0.28),
+            TaskKind::MultiRc => (true, 0.15, 0.22),
+            TaskKind::Copa => (false, 0.25, 0.10),
+            TaskKind::ReCoRD => (true, 0.20, 0.12),
+            TaskKind::Squad => (false, 0.0, 0.06),
+            TaskKind::Drop => (false, 0.0, 0.25),
+        }
+    }
+
+    /// Bind this task to a model geometry. `seed` namespaces the dataset
+    /// (different seeds = freshly drawn "datasets" for multi-run averages).
+    pub fn instantiate(&self, cfg: &ModelConfig, seed: u64) -> anyhow::Result<Task> {
+        let (pair, density, noise) = self.knobs();
+        let n_classes = self.n_classes();
+        anyhow::ensure!(
+            self.is_span() == cfg.is_span(),
+            "task {} needs a {} head but model '{}' has '{}'",
+            self.name(),
+            if self.is_span() { "span" } else { "cls" },
+            cfg.name,
+            cfg.head
+        );
+        if !self.is_span() {
+            anyhow::ensure!(
+                n_classes <= cfg.n_classes,
+                "task {} has {} classes; model '{}' head is {}-wide",
+                self.name(),
+                n_classes,
+                cfg.name,
+                cfg.n_classes
+            );
+        }
+        Ok(Task {
+            kind: *self,
+            vocab: Vocab::new(cfg.vocab, n_classes.max(2), *self as usize),
+            seq: cfg.seq,
+            n_classes,
+            pair,
+            density,
+            noise,
+            seed,
+            train_size: 4096,
+            k_shot: None,
+        })
+    }
+}
+
+/// A task bound to a model geometry; a pure function from
+/// `(split, index)` to an example.
+#[derive(Debug, Clone)]
+pub struct Task {
+    pub kind: TaskKind,
+    pub vocab: Vocab,
+    pub seq: usize,
+    pub n_classes: usize,
+    pub pair: bool,
+    pub density: f64,
+    pub noise: f64,
+    pub seed: u64,
+    /// nominal train-set size for epoch shuffling (ignored under k-shot)
+    pub train_size: usize,
+    /// few-shot: k examples per class (paper: k = 16 / 512)
+    pub k_shot: Option<usize>,
+}
+
+/// One generated example.
+#[derive(Debug, Clone)]
+pub struct Example {
+    pub ids: Vec<i32>,    // length = task.seq (padded)
+    pub mask: Vec<f32>,   // 1.0 where valid
+    pub label: Label,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Label {
+    Class(i32),
+    Span { start: i32, end: i32 },
+}
+
+impl Task {
+    pub fn with_k_shot(mut self, k: usize) -> Self {
+        self.k_shot = Some(k);
+        self
+    }
+
+    pub fn train_len(&self) -> usize {
+        match self.k_shot {
+            Some(k) => k * self.n_classes.max(1),
+            None => self.train_size,
+        }
+    }
+
+    pub fn is_span(&self) -> bool {
+        self.kind.is_span()
+    }
+
+    /// Majority-class / chance accuracy (zero-shot floor in the tables).
+    pub fn chance(&self) -> f64 {
+        if self.is_span() {
+            0.0
+        } else {
+            1.0 / self.n_classes as f64
+        }
+    }
+
+    /// Best achievable accuracy given label noise.
+    pub fn ceiling(&self) -> f64 {
+        if self.is_span() {
+            1.0 - self.noise
+        } else {
+            1.0 - self.noise * (self.n_classes as f64 - 1.0) / self.n_classes as f64
+        }
+    }
+
+    fn rng_for(&self, split: Split, index: u64) -> SplitMix64 {
+        let split_tag = match split {
+            Split::Train => 0x5EED_0001u64,
+            Split::Eval => 0x5EED_0002,
+        };
+        SplitMix64::new(
+            self.seed
+                .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                ^ split_tag.wrapping_mul(0x1000_0000_01B3)
+                ^ index.wrapping_mul(0x100_0000_01B3),
+        )
+    }
+
+    /// Deterministically generate example `index` of `split`.
+    pub fn example(&self, split: Split, index: u64) -> Example {
+        let mut rng = self.rng_for(split, index);
+        if self.is_span() {
+            return self.span_example(&mut rng);
+        }
+        // Under k-shot the label cycles so every class has exactly k
+        // examples; otherwise labels are drawn uniformly.
+        let true_label = if self.k_shot.is_some() && split == Split::Train {
+            (index % self.n_classes as u64) as usize
+        } else {
+            rng.below(self.n_classes as u64) as usize
+        };
+        self.cls_example(&mut rng, true_label)
+    }
+
+    fn cls_example(&self, rng: &mut SplitMix64, true_label: usize) -> Example {
+        let t = self.seq;
+        let len = (t / 2 + rng.below((t / 2) as u64) as usize).min(t);
+        let mut ids = vec![PAD; t];
+        let mut mask = vec![0.0f32; t];
+        ids[0] = CLS;
+        mask[0] = 1.0;
+
+        // Compositional (pair) tasks: label = (c_a + c_b) mod C — the
+        // model must combine evidence across the SEP boundary.
+        let (c_a, c_b) = if self.pair {
+            let c_a = rng.below(self.n_classes as u64) as usize;
+            let c_b = (true_label + self.n_classes - c_a) % self.n_classes;
+            (c_a, c_b)
+        } else {
+            (true_label, true_label)
+        };
+        let sep_at = if self.pair { 1 + (len - 1) / 2 } else { len };
+
+        for i in 1..len {
+            mask[i] = 1.0;
+            if self.pair && i == sep_at {
+                ids[i] = SEP;
+                continue;
+            }
+            let cluster = if i < sep_at { c_a } else { c_b };
+            ids[i] = if rng.unit() < self.density {
+                self.vocab.signal(cluster, rng.below(64) as usize)
+            } else {
+                self.vocab.background(rng.below(1 << 20) as usize)
+            };
+        }
+
+        // label noise -> accuracy ceiling
+        let observed = if rng.unit() < self.noise {
+            rng.below(self.n_classes as u64) as i32
+        } else {
+            true_label as i32
+        };
+        Example {
+            ids,
+            mask,
+            label: Label::Class(observed),
+        }
+    }
+
+    fn span_example(&self, rng: &mut SplitMix64) -> Example {
+        let t = self.seq;
+        let mut ids = vec![PAD; t];
+        let mut mask = vec![0.0f32; t];
+        ids[0] = CLS;
+        mask[0] = 1.0;
+        let len = (t * 3 / 4 + rng.below((t / 4) as u64) as usize).min(t);
+        for i in 1..len {
+            mask[i] = 1.0;
+            ids[i] = self.vocab.background(rng.below(1 << 20) as usize);
+        }
+        // answer span: MARK token announces it (except under noise)
+        let span_len = 1 + rng.below(3) as usize;
+        let start = 2 + rng.below((len - span_len - 3).max(1) as u64) as usize;
+        let end = start + span_len - 1;
+        for (j, i) in (start..=end).enumerate() {
+            ids[i] = self.vocab.signal(0, j);
+        }
+        if rng.unit() >= self.noise {
+            ids[start - 1] = MARK;
+        }
+        Example {
+            ids,
+            mask,
+            label: Label::Span {
+                start: start as i32,
+                end: end as i32,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(head: &str) -> ModelConfig {
+        ModelConfig {
+            name: "test".into(),
+            arch: "encoder".into(),
+            vocab: 256,
+            dim: 32,
+            layers: 2,
+            heads: 2,
+            seq: 32,
+            n_classes: 8,
+            head: head.into(),
+            batch: 4,
+            n_pert: 4,
+            mlp_ratio: 4,
+            n_prefix: 0,
+            extra_n: vec![],
+        }
+    }
+
+    #[test]
+    fn examples_deterministic() {
+        let t = TaskKind::Sst2.instantiate(&cfg("cls"), 7).unwrap();
+        let a = t.example(Split::Train, 42);
+        let b = t.example(Split::Train, 42);
+        assert_eq!(a.ids, b.ids);
+        assert_eq!(a.label, b.label);
+        let c = t.example(Split::Train, 43);
+        assert_ne!(a.ids, c.ids);
+        let d = t.example(Split::Eval, 42);
+        assert_ne!(a.ids, d.ids, "splits must not alias");
+    }
+
+    #[test]
+    fn all_cls_tasks_generate_valid_examples() {
+        for kind in TaskKind::ALL {
+            if kind.is_span() {
+                continue;
+            }
+            let t = kind.instantiate(&cfg("cls"), 0).unwrap();
+            for i in 0..50 {
+                let e = t.example(Split::Train, i);
+                assert_eq!(e.ids.len(), 32);
+                assert_eq!(e.ids[0], CLS);
+                match e.label {
+                    Label::Class(c) => {
+                        assert!((c as usize) < t.n_classes, "{kind:?}: label {c}")
+                    }
+                    _ => panic!("cls task produced span label"),
+                }
+                for (id, m) in e.ids.iter().zip(&e.mask) {
+                    if *m == 0.0 {
+                        assert_eq!(*id, PAD);
+                    }
+                    assert!((*id as usize) < 256);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn span_tasks_have_valid_spans() {
+        for kind in [TaskKind::Squad, TaskKind::Drop] {
+            let t = kind.instantiate(&cfg("span"), 0).unwrap();
+            for i in 0..50 {
+                let e = t.example(Split::Eval, i);
+                match e.label {
+                    Label::Span { start, end } => {
+                        assert!(start >= 1 && end >= start && (end as usize) < t.seq);
+                        assert!(e.mask[end as usize] == 1.0);
+                    }
+                    _ => panic!("span task produced class label"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kshot_balances_classes() {
+        let t = TaskKind::Snli
+            .instantiate(&cfg("cls"), 1)
+            .unwrap()
+            .with_k_shot(16);
+        assert_eq!(t.train_len(), 48);
+        let mut counts = [0usize; 3];
+        for i in 0..t.train_len() as u64 {
+            // true label cycles; observed may be noised — count the cycle
+            counts[(i % 3) as usize] += 1;
+        }
+        assert_eq!(counts, [16, 16, 16]);
+    }
+
+    #[test]
+    fn signal_correlates_with_label() {
+        // sanity: the planted signal must actually be present
+        let t = TaskKind::Sst2.instantiate(&cfg("cls"), 3).unwrap();
+        let mut hit = 0;
+        let n = 200;
+        for i in 0..n {
+            let e = t.example(Split::Train, i);
+            if let Label::Class(c) = e.label {
+                let has = e
+                    .ids
+                    .iter()
+                    .any(|&tok| t.vocab.is_signal_of(tok, c as usize));
+                if has {
+                    hit += 1;
+                }
+            }
+        }
+        assert!(hit > n * 3 / 5, "signal present in only {hit}/{n}");
+    }
+
+    #[test]
+    fn ceiling_above_chance() {
+        for kind in TaskKind::ALL {
+            let head = if kind.is_span() { "span" } else { "cls" };
+            let t = kind.instantiate(&cfg(head), 0).unwrap();
+            assert!(t.ceiling() > t.chance() + 0.2, "{kind:?}");
+        }
+    }
+}

@@ -1,0 +1,97 @@
+//! Deterministic synthetic vocabulary: special tokens + per-task signal
+//! clusters carved out of the model's vocab.
+
+/// Reserved token ids (must stay below any model's vocab).
+pub const PAD: i32 = 0;
+pub const CLS: i32 = 1;
+pub const SEP: i32 = 2;
+pub const MARK: i32 = 3; // span-answer marker
+pub const N_SPECIAL: i32 = 4;
+
+/// Partition of the non-special vocab for one task: `n_clusters` signal
+/// clusters of `cluster_size` tokens each, remainder = background tokens.
+#[derive(Debug, Clone)]
+pub struct Vocab {
+    pub vocab_size: usize,
+    pub n_clusters: usize,
+    pub cluster_size: usize,
+    /// offset (in token-id space) where this task's clusters start;
+    /// derived from the task id so different tasks use different signal
+    /// tokens (no cross-task transfer).
+    pub cluster_base: i32,
+}
+
+impl Vocab {
+    pub fn new(vocab_size: usize, n_clusters: usize, task_id: usize) -> Self {
+        let usable = vocab_size as i32 - N_SPECIAL;
+        // clusters take at most half the usable space
+        let cluster_size = ((usable / 2) as usize / n_clusters.max(1)).clamp(2, 64);
+        let span = (n_clusters * cluster_size) as i32;
+        let slots = (usable / 2 / span.max(1)).max(1);
+        let cluster_base = N_SPECIAL + (task_id as i32 % slots) * span;
+        Self {
+            vocab_size,
+            n_clusters,
+            cluster_size,
+            cluster_base,
+        }
+    }
+
+    /// Token `j` of signal cluster `c`.
+    pub fn signal(&self, c: usize, j: usize) -> i32 {
+        debug_assert!(c < self.n_clusters);
+        self.cluster_base + (c * self.cluster_size + (j % self.cluster_size)) as i32
+    }
+
+    /// A background (non-signal) token indexed by `j`.
+    pub fn background(&self, j: usize) -> i32 {
+        let usable = self.vocab_size as i32 - N_SPECIAL;
+        let bg_base = N_SPECIAL + usable / 2;
+        bg_base + (j as i32 % (usable - usable / 2).max(1))
+    }
+
+    pub fn is_signal_of(&self, tok: i32, c: usize) -> bool {
+        let lo = self.signal(c, 0);
+        tok >= lo && tok < lo + self.cluster_size as i32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clusters_disjoint_from_background() {
+        let v = Vocab::new(256, 6, 3);
+        for c in 0..6 {
+            for j in 0..v.cluster_size {
+                let t = v.signal(c, j);
+                assert!(t >= N_SPECIAL && (t as usize) < v.vocab_size);
+                for j2 in 0..64 {
+                    assert_ne!(t, v.background(j2), "cluster {c} token {j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn clusters_mutually_disjoint() {
+        let v = Vocab::new(512, 8, 0);
+        for a in 0..8 {
+            for b in (a + 1)..8 {
+                for j in 0..v.cluster_size {
+                    assert!(!v.is_signal_of(v.signal(a, j), b));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn small_vocab_still_fits() {
+        let v = Vocab::new(128, 6, 11);
+        for c in 0..6 {
+            let t = v.signal(c, v.cluster_size - 1);
+            assert!((t as usize) < 128, "token {t} out of vocab");
+        }
+    }
+}

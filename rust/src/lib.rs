@@ -1,0 +1,41 @@
+//! # FZOO — Fast Zeroth-Order Optimizer (paper reproduction)
+//!
+//! Three-layer architecture (see DESIGN.md):
+//!
+//! * **L1/L2 (build time, Python)** — Pallas fused perturbed-forward kernel
+//!   inside a JAX transformer, AOT-lowered to HLO text under `artifacts/`.
+//! * **L3 (this crate)** — the training coordinator: it owns the event
+//!   loop, parameters, seeds, the adaptive σ-normalized step rule, the
+//!   optimizer zoo, the synthetic task suite and the experiment harness.
+//!   Python never runs on the training path.
+//!
+//! Quick taste (see `examples/quickstart.rs`):
+//!
+//! ```no_run
+//! use fzoo::prelude::*;
+//! let rt = Runtime::load("artifacts")?;
+//! let mut session = Session::open(&rt, "tiny-enc")?;
+//! let task = TaskKind::Sst2.instantiate(session.model_config(), 0)?;
+//! let mut trainer = Trainer::new(&rt, &mut session, task, OptimizerKind::fzoo(1e-3, 1e-3));
+//! let history = trainer.train(100)?;
+//! println!("final loss {:.3}", history.last_loss());
+//! # anyhow::Ok(())
+//! ```
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod memmodel;
+pub mod optim;
+pub mod runtime;
+pub mod util;
+pub mod xp;
+pub mod zorng;
+
+pub mod prelude {
+    pub use crate::config::TrainConfig;
+    pub use crate::coordinator::{History, Trainer};
+    pub use crate::data::{Task, TaskKind};
+    pub use crate::optim::OptimizerKind;
+    pub use crate::runtime::{Runtime, Session};
+}

@@ -1,0 +1,211 @@
+//! `fzoo` — the launcher CLI.
+//!
+//! ```text
+//! fzoo train --model roberta-prox --task sst2 --optimizer fzoo --lr 1e-3
+//! fzoo train --config train.json
+//! fzoo eval  --model roberta-prox --task sst2
+//! fzoo info                                  # artifact inventory
+//! fzoo mem                                   # Table-12-style memory model
+//! ```
+
+use anyhow::{bail, Result};
+
+use fzoo::config::TrainConfig;
+use fzoo::coordinator::{RunLogger, Trainer};
+use fzoo::data::TaskKind;
+use fzoo::memmodel;
+use fzoo::optim::OptimizerKind;
+use fzoo::runtime::{Runtime, Session};
+use fzoo::util::args::Args;
+
+const USAGE: &str = "\
+fzoo — FZOO trainer-coordinator (paper reproduction)
+
+USAGE:
+  fzoo train [--config cfg.json] [--artifacts DIR] --model M --task T
+             [--pretrained]   # start from the cached multi-task checkpoint
+             [--optimizer fzoo|fzoo-r|fzoo-seq|mezo|zo-sign|zo-mmt|zo-cons|
+              zo-adam|hizoo|adam|sgd|nsgd]
+             [--lr F] [--eps F] [--steps N] [--eval-every N] [--k-shot K]
+             [--seed S] [--schedule constant|linear:E|cosine:M|warmup:N]
+             [--log out.jsonl]
+  fzoo eval  [--artifacts DIR] --model M --task T [--eval-batches N]
+  fzoo info  [--artifacts DIR]
+  fzoo mem
+";
+
+fn main() -> Result<()> {
+    let args = Args::from_env(&["help", "pretrained"])?;
+    if args.has("help") || args.positional.is_empty() {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    match args.positional[0].as_str() {
+        "train" => cmd_train(&args),
+        "eval" => cmd_eval(&args),
+        "info" => cmd_info(&args),
+        "mem" => cmd_mem(),
+        other => bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let mut cfg = match args.get("config") {
+        Some(p) => TrainConfig::from_file(p)?,
+        None => TrainConfig {
+            artifacts: args.get_or("artifacts", "artifacts"),
+            model: args
+                .get("model")
+                .ok_or_else(|| anyhow::anyhow!("--model required"))?
+                .to_string(),
+            task: args
+                .get("task")
+                .ok_or_else(|| anyhow::anyhow!("--task required"))?
+                .to_string(),
+            optimizer: OptimizerKind::by_name(
+                &args.get_or("optimizer", "fzoo"),
+                args.get_parse_or("lr", 1e-3f32)?,
+                args.get_parse_or("eps", 1e-3f32)?,
+            )?,
+            steps: args.get_parse_or("steps", 200u64)?,
+            eval_every: args.get_parse_or("eval-every", 50u64)?,
+            eval_batches: 8,
+            run_seed: args.get_parse_or("seed", 0u64)?,
+            k_shot: args.get_parse("k-shot")?,
+            target_loss: args.get_parse("target-loss")?,
+            schedule: fzoo::config::parse_schedule(&args.get_or("schedule", "constant"))?,
+            log_path: args.get("log").map(|s| s.to_string()),
+        },
+    };
+    // flag overrides on top of a config file
+    if args.get("config").is_some() {
+        if let Some(m) = args.get("model") {
+            cfg.model = m.to_string();
+        }
+        if let Some(t) = args.get("task") {
+            cfg.task = t.to_string();
+        }
+        if let Some(s) = args.get_parse("steps")? {
+            cfg.steps = s;
+        }
+        if let Some(s) = args.get_parse("seed")? {
+            cfg.run_seed = s;
+        }
+    }
+    run_train(cfg, args.has("pretrained"))
+}
+
+fn run_train(cfg: TrainConfig, pretrained: bool) -> Result<()> {
+    let rt = Runtime::load(&cfg.artifacts)?;
+    println!(
+        "platform: {} | model: {} | task: {}",
+        rt.platform(),
+        cfg.model,
+        cfg.task
+    );
+    let mut session = if pretrained {
+        Session::open_pretrained(&rt, &cfg.model)?
+    } else {
+        Session::open(&rt, &cfg.model)?
+    };
+    let kind = TaskKind::from_name(&cfg.task)
+        .ok_or_else(|| anyhow::anyhow!("unknown task '{}'", cfg.task))?;
+    let mut task = kind.instantiate(session.model_config(), cfg.run_seed)?;
+    if let Some(k) = cfg.k_shot {
+        task = task.with_k_shot(k);
+    }
+    println!(
+        "optimizer: {} | steps: {} | d = {}",
+        cfg.optimizer.display_name(),
+        cfg.steps,
+        session.d_trainable()
+    );
+    let mut trainer =
+        Trainer::with_opts(&rt, &mut session, task, cfg.optimizer.clone(), cfg.train_opts());
+    let history = trainer.train(cfg.steps)?;
+    println!(
+        "done: {} steps, final loss {:.4}, acc {:?}, {:.1}s ({:.1}ms/step, {:.1}s compile)",
+        history.steps_run,
+        history.last_loss(),
+        history.final_accuracy(),
+        history.total_wall_s,
+        history.mean_step_wall_ms(),
+        rt.compile_seconds(),
+    );
+    if let Some(path) = &cfg.log_path {
+        let mut logger = RunLogger::create(path)?;
+        for r in &history.records {
+            logger.log(&r.to_json())?;
+        }
+        for e in &history.evals {
+            logger.log(&e.to_json())?;
+        }
+        println!("metrics -> {path}");
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let rt = Runtime::load(args.get_or("artifacts", "artifacts"))?;
+    let model = args
+        .get("model")
+        .ok_or_else(|| anyhow::anyhow!("--model required"))?
+        .to_string();
+    let task = args
+        .get("task")
+        .ok_or_else(|| anyhow::anyhow!("--task required"))?
+        .to_string();
+    let mut session = if args.has("pretrained") {
+        Session::open_pretrained(&rt, &model)?
+    } else {
+        Session::open(&rt, &model)?
+    };
+    let kind =
+        TaskKind::from_name(&task).ok_or_else(|| anyhow::anyhow!("unknown task '{task}'"))?;
+    let t = kind.instantiate(session.model_config(), 0)?;
+    let mut tr = Trainer::new(&rt, &mut session, t, OptimizerKind::fzoo(0.0, 1e-3));
+    tr.opts.eval_batches = args.get_parse_or("eval-batches", 8usize)?;
+    let ev = tr.evaluate()?;
+    println!(
+        "{model}/{task}: accuracy {:.3} f1 {:.3} loss {:.4} ({} examples)",
+        ev.accuracy, ev.f1, ev.loss, ev.examples
+    );
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let rt = Runtime::load(args.get_or("artifacts", "artifacts"))?;
+    println!("platform: {}", rt.platform());
+    for (name, entry) in &rt.manifest.models {
+        println!(
+            "{name}: arch={} d={} ({} exes) batch={} seq={} N={}",
+            entry.config.arch,
+            entry.d,
+            entry.executables.len(),
+            entry.config.batch,
+            entry.config.seq,
+            entry.config.n_pert,
+        );
+    }
+    Ok(())
+}
+
+fn cmd_mem() -> Result<()> {
+    println!("analytical GPU memory (GB, A100-style, MultiRC t=400, b=1):");
+    println!(
+        "{:>6} {:>14} {:>14} {:>14} {:>14} {:>14}",
+        "size", "ZO/FZOO FT", "FZOO N=8", "HiZOO", "Adam prefix", "Adam FT"
+    );
+    for g in memmodel::OPT_FAMILY {
+        use memmodel::Method::*;
+        let row: Vec<f64> = [ZoFt, FzooBatched { n: 8 }, HizooFt, AdamPrefix, AdamFt]
+            .iter()
+            .map(|m| memmodel::estimate_gb(g, *m, 1, 400))
+            .collect();
+        println!(
+            "{:>6} {:>14.1} {:>14.1} {:>14.1} {:>14.1} {:>14.1}",
+            g.name, row[0], row[1], row[2], row[3], row[4]
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,203 @@
+//! Analytical GPU-memory model — regenerates Table 12 / Figure 3.
+//!
+//! We cannot measure A100 memory in this environment, so the memory claims
+//! are reproduced *analytically* from first principles, calibrated against
+//! the paper's own Table 12 (MultiRC, ~400 tokens/example, batch 1, fp16
+//! weights, fp32 Adam states — the standard mixed-precision recipe MeZO's
+//! appendix describes). The model's components:
+//!
+//! * weights: 2 bytes/param (fp16)
+//! * inference activations: per-layer transient ~ B·T·(a1·H) + attention
+//!   B·heads·T², only one layer live at a time + logits
+//! * Adam FT: +2 bytes/param grad (fp16) + 8 bytes/param moments (fp32)
+//!   + the backward pass's stored-activation/workspace footprint, which
+//!   Table 12's measurements put at ~10 bytes/param at the paper's
+//!   settings (CAL_BWD, calibrated — nvidia-smi measures allocator highs,
+//!   not tight theoretical activation curves)
+//! * prefix-tuning with Adam: optimizer state only on the prefix, but the
+//!   backward still pays the full stored-activation footprint
+//! * ZO methods (MeZO/FZOO): inference memory only (seed trick)
+//! * HiZOO: + 2 bytes/param diagonal Hessian (fp16)
+//! * FZOO batched forward: + (N) × the *single-layer* transient activation
+//!   (streams ride the batch axis one layer at a time)
+
+/// Real model geometries from the OPT family (the paper's Table 12 rows).
+#[derive(Debug, Clone, Copy)]
+pub struct Geometry {
+    pub name: &'static str,
+    pub params: f64, // total parameters
+    pub dim: usize,
+    pub layers: usize,
+    pub heads: usize,
+}
+
+pub const OPT_FAMILY: &[Geometry] = &[
+    Geometry { name: "1.3B", params: 1.3e9, dim: 2048, layers: 24, heads: 32 },
+    Geometry { name: "2.7B", params: 2.7e9, dim: 2560, layers: 32, heads: 32 },
+    Geometry { name: "6.7B", params: 6.7e9, dim: 4096, layers: 32, heads: 32 },
+    Geometry { name: "13B", params: 13.0e9, dim: 5120, layers: 40, heads: 40 },
+    Geometry { name: "30B", params: 30.0e9, dim: 7168, layers: 48, heads: 56 },
+    Geometry { name: "66B", params: 66.0e9, dim: 9216, layers: 64, heads: 72 },
+];
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    /// zero-shot / MeZO / FZOO full-parameter tuning (inference footprint)
+    ZoFt,
+    /// FZOO fused batched forward with N streams
+    FzooBatched { n: usize },
+    /// HiZOO (diagonal Hessian, fp16)
+    HizooFt,
+    /// in-context learning (inference + prompt cache)
+    Icl,
+    /// Adam full-parameter fine-tuning
+    AdamFt,
+    /// Adam prefix-tuning (PEFT)
+    AdamPrefix,
+}
+
+impl Method {
+    pub fn label(&self) -> String {
+        match self {
+            Method::ZoFt => "zero-shot/MeZO/FZOO (FT)".into(),
+            Method::FzooBatched { n } => format!("FZOO batched (N={n})"),
+            Method::HizooFt => "HiZOO (FT)".into(),
+            Method::Icl => "ICL".into(),
+            Method::AdamFt => "Adam (FT)".into(),
+            Method::AdamPrefix => "Adam (prefix)".into(),
+        }
+    }
+}
+
+const FP16: f64 = 2.0;
+const FP32: f64 = 4.0;
+
+/// Estimated GPU bytes for running `method` on `geo` with batch `b`,
+/// sequence length `t`.
+pub fn estimate_bytes(geo: &Geometry, method: Method, b: usize, t: usize) -> f64 {
+    let p = geo.params;
+    let h = geo.dim as f64;
+    let l = geo.layers as f64;
+    let heads = geo.heads as f64;
+    let bt = (b * t) as f64;
+
+    let weights = FP16 * p;
+    // transient activations for ONE layer (attention scores dominate):
+    // qkv/mlp buffers ~ 10·B·T·H, scores B·heads·T²
+    let act_layer = FP16 * (10.0 * bt * h + (b as f64) * heads * (t * t) as f64);
+    let _ = l;
+    // backward stored-activation + workspace footprint per parameter,
+    // calibrated against Table 12 (see module docs): ~10 bytes/param
+    const CAL_BWD: f64 = 10.0;
+    let act_backward = CAL_BWD * p;
+    // workspace / allocator slack observed in practice (~12%)
+    let slack = 1.12;
+
+    let total = match method {
+        Method::ZoFt => weights + act_layer,
+        Method::FzooBatched { n } => weights + act_layer * (n as f64 + 1.0),
+        Method::HizooFt => weights + FP16 * p + act_layer,
+        Method::Icl => weights + 1.6 * act_layer, // prompt KV cache
+        Method::AdamFt => weights + FP16 * p + 2.0 * FP32 * p + act_backward + act_layer,
+        Method::AdamPrefix => {
+            // optimizer state negligible (prefix only) but backward
+            // activations are all stored
+            weights + act_backward + act_layer
+        }
+    };
+    total * slack
+}
+
+pub fn estimate_gb(geo: &Geometry, method: Method, b: usize, t: usize) -> f64 {
+    estimate_bytes(geo, method, b, t) / 1e9
+}
+
+/// Number of 80 GB A100s needed (the "NxA100" column of Table 12).
+pub fn a100s_needed(gb: f64) -> usize {
+    ((gb / 78.0).ceil() as usize).max(1)
+}
+
+/// The paper's Table 12 (GB), for shape checks.
+pub const PAPER_TABLE12: &[(&str, f64, f64, f64, f64)] = &[
+    // (size, ZO-FT, HiZOO, Adam-prefix, Adam-FT)
+    ("1.3B", 4.0, 7.0, 19.0, 27.0),
+    ("2.7B", 7.0, 13.0, 29.0, 55.0),
+    ("6.7B", 14.0, 29.0, 46.0, 156.0),
+    ("13B", 26.0, 53.0, 158.0, 316.0),
+    ("30B", 58.0, 118.0, 315.0, 633.0),
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn geo(name: &str) -> &'static Geometry {
+        OPT_FAMILY.iter().find(|g| g.name == name).unwrap()
+    }
+
+    #[test]
+    fn zo_ft_tracks_paper_within_factor() {
+        // paper measures with nvidia-smi (allocator caching inflates);
+        // demand agreement within 2x and correct ordering
+        for (name, zo, _, _, _) in PAPER_TABLE12 {
+            let est = estimate_gb(geo(name), Method::ZoFt, 1, 400);
+            let ratio = est / zo;
+            assert!(
+                (0.5..2.0).contains(&ratio),
+                "{name}: est {est:.1} GB vs paper {zo:.1} GB"
+            );
+        }
+    }
+
+    #[test]
+    fn adam_ft_is_many_times_zo() {
+        for (name, zo, _, _, adam) in PAPER_TABLE12 {
+            let est_zo = estimate_gb(geo(name), Method::ZoFt, 1, 400);
+            let est_adam = estimate_gb(geo(name), Method::AdamFt, 1, 400);
+            let paper_mult = adam / zo;
+            let est_mult = est_adam / est_zo;
+            assert!(
+                est_mult > 3.0,
+                "{name}: Adam should dwarf ZO ({est_mult:.1}x)"
+            );
+            // multiplier within ~2x of the paper's
+            assert!(
+                (paper_mult / est_mult) < 2.5 && (est_mult / paper_mult) < 2.5,
+                "{name}: mult est {est_mult:.1} vs paper {paper_mult:.1}"
+            );
+        }
+    }
+
+    #[test]
+    fn ordering_zo_lt_hizoo_lt_prefix_lt_adam() {
+        for g in OPT_FAMILY {
+            let zo = estimate_gb(g, Method::ZoFt, 1, 400);
+            let hi = estimate_gb(g, Method::HizooFt, 1, 400);
+            let px = estimate_gb(g, Method::AdamPrefix, 1, 400);
+            let ad = estimate_gb(g, Method::AdamFt, 1, 400);
+            assert!(zo < hi && hi < px && px < ad, "{}", g.name);
+        }
+    }
+
+    #[test]
+    fn fzoo_batched_overhead_is_activations_only() {
+        let g = geo("13B");
+        let zo = estimate_gb(g, Method::ZoFt, 1, 400);
+        let fz = estimate_gb(g, Method::FzooBatched { n: 8 }, 1, 400);
+        // N=8 streams cost extra transient activations but NOT extra
+        // parameter copies: stay well under HiZOO's 2x
+        let hi = estimate_gb(g, Method::HizooFt, 1, 400);
+        assert!(fz > zo && fz < hi, "zo {zo:.1} fzoo {fz:.1} hizoo {hi:.1}");
+    }
+
+    #[test]
+    fn a100_counts_monotone() {
+        let mut prev = 0;
+        for g in OPT_FAMILY {
+            let n = a100s_needed(estimate_gb(g, Method::AdamFt, 1, 400));
+            assert!(n >= prev);
+            prev = n;
+        }
+        assert!(prev >= 8, "66B Adam FT needs >= 8 A100s, got {prev}");
+    }
+}

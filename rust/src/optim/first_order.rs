@@ -1,0 +1,144 @@
+//! First-order baselines: SGD, Adam [20] and normalized-SGD [2] (FZOO's
+//! first-order inspiration). Gradients come from the AOT `grad_loss`
+//! executable (jax.value_and_grad on the clean forward); moment math runs
+//! host-side over the flat vector and the axpy is applied in-graph via
+//! `sgd_apply` (or host-side for the tiny prefix family, which carries no
+//! `sgd_apply` artifact).
+//!
+//! Accounting: one backward = 3 forwards [Alman & Song 2024], so a
+//! first-order step costs 4 forward-equivalents — the convention behind
+//! the paper's Fig. 1 comparison.
+
+use anyhow::Result;
+
+use crate::data::Batch;
+use crate::runtime::{lit_f32, lit_scalar_f32, scalar_f32, to_vec_f32, Runtime, Session};
+
+use super::{Objective, Optimizer, StepOut};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FoFlavor {
+    Sgd,
+    Adam,
+    NormalizedSgd,
+}
+
+pub struct FirstOrder {
+    pub lr: f32,
+    lr_base: f32,
+    pub flavor: FoFlavor,
+    objective: Objective,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub adam_eps: f32,
+}
+
+impl FirstOrder {
+    pub fn new(lr: f32, flavor: FoFlavor, objective: Objective, d: usize) -> Self {
+        let (m, v) = match flavor {
+            FoFlavor::Adam => (vec![0.0; d], vec![0.0; d]),
+            _ => (Vec::new(), Vec::new()),
+        };
+        Self {
+            lr,
+            lr_base: lr,
+            flavor,
+            objective,
+            m,
+            v,
+            t: 0.0,
+            beta1: 0.9,
+            beta2: 0.999,
+            adam_eps: 1e-8,
+        }
+    }
+
+    /// The update *direction* (applied as `theta -= lr * dir`).
+    fn direction(&mut self, grad: Vec<f32>) -> Vec<f32> {
+        match self.flavor {
+            FoFlavor::Sgd => grad,
+            FoFlavor::NormalizedSgd => {
+                let norm = grad.iter().map(|g| (*g as f64).powi(2)).sum::<f64>().sqrt() as f32;
+                if norm <= 1e-12 {
+                    return grad;
+                }
+                grad.iter().map(|g| g / norm).collect()
+            }
+            FoFlavor::Adam => {
+                self.t += 1.0;
+                let b1c = 1.0 - self.beta1.powf(self.t);
+                let b2c = 1.0 - self.beta2.powf(self.t);
+                let mut dir = Vec::with_capacity(grad.len());
+                for (i, g) in grad.iter().enumerate() {
+                    self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * g;
+                    self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * g * g;
+                    let mh = self.m[i] / b1c;
+                    let vh = self.v[i] / b2c;
+                    dir.push(mh / (vh.sqrt() + self.adam_eps));
+                }
+                dir
+            }
+        }
+    }
+}
+
+impl Optimizer for FirstOrder {
+    fn name(&self) -> String {
+        match self.flavor {
+            FoFlavor::Sgd => "SGD".into(),
+            FoFlavor::Adam => "Adam".into(),
+            FoFlavor::NormalizedSgd => "NSGD".into(),
+        }
+    }
+
+    fn forwards_per_step(&self) -> f64 {
+        4.0 // 1 forward + backward (=3 forwards)
+    }
+
+    fn set_lr_scale(&mut self, scale: f32) {
+        self.lr = self.lr_base * scale;
+    }
+
+    fn step(&mut self, rt: &Runtime, s: &mut Session, batch: &Batch, _step: u64)
+        -> Result<StepOut> {
+        anyhow::ensure!(
+            self.objective == Objective::Ce,
+            "first-order optimizers need a differentiable objective \
+             (the whole point of §4.3)"
+        );
+        let exe = rt.executable(&s.model, "grad_loss")?;
+        let (ids, labels, mask) = batch.literals()?;
+        let mut inputs = s.param_inputs()?;
+        inputs.extend([ids, labels, mask]);
+        let outs = exe.run(&inputs)?;
+        let loss = scalar_f32(&outs[0])?;
+        let grad = to_vec_f32(&outs[1])?;
+        let dir = self.direction(grad);
+
+        if s.entry.executables.contains_key("sgd_apply") && !s.entry.config.is_prefix() {
+            let apply = rt.executable(&s.model, "sgd_apply")?;
+            let d = s.d_trainable();
+            let out = apply.run(&[
+                s.trainable_lit()?,
+                lit_f32(&dir, &[d])?,
+                lit_scalar_f32(self.lr),
+            ])?;
+            *s.trainable_mut() = to_vec_f32(&out[0])?;
+        } else {
+            let lr = self.lr;
+            for (p, u) in s.trainable_mut().iter_mut().zip(&dir) {
+                *p -= lr * u;
+            }
+        }
+
+        Ok(StepOut {
+            loss,
+            forwards: 1.0,
+            forward_equiv: 4.0,
+            sigma: None,
+        })
+    }
+}

@@ -1,0 +1,219 @@
+//! FZOO — Algorithm 1 (parallel), Algorithm 2 (FZOO-R, loss reuse) and
+//! Algorithm 3 (non-parallel) of the paper.
+//!
+//! Per step:
+//! 1. one fused batched forward gives `l_0, l_1..l_N`
+//!    (`fzoo_losses`; the non-parallel variant runs N separate
+//!    perturb+forward pairs instead — same math, no kernel fusion);
+//! 2. `sigma_t = Std({l_i})` (FZOO-R: concatenated with the previous
+//!    step's losses — a full-size variance estimate at half the forwards);
+//! 3. `coeff_i = eta * (l_i - l_0) / (N * sigma_t)`;
+//! 4. `zo_update` regenerates each `u_i` from the seed and applies
+//!    `theta -= sum_i coeff_i * u_i` — the sigma-normalized
+//!    (normalized-SGD-equivalent, Prop 3.2) adaptive step.
+
+use anyhow::Result;
+
+use crate::data::Batch;
+use crate::runtime::{
+    lit_f32, lit_scalar_f32, lit_scalar_u32, scalar_f32, to_vec_f32, Runtime, Session,
+};
+
+use super::{sample_std, step_seed, Objective, Optimizer, StepOut};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FzooMode {
+    /// Algorithm 1: fused batched forward (the headline system).
+    Parallel,
+    /// Algorithm 3: N sequential perturb+forward pairs (ablation /
+    /// wallclock baseline for Table 5's "FZOO w/o parallel" row).
+    Sequential,
+    /// Algorithm 2 (FZOO-R): half the probes, previous losses reused for
+    /// the sigma estimate.
+    Reuse,
+}
+
+pub struct Fzoo {
+    pub eta: f32,
+    eta_base: f32,
+    pub eps: f32,
+    pub n: usize,
+    pub mode: FzooMode,
+    objective: Objective,
+    run_seed: u64,
+    /// FZOO-R: losses carried over from the previous step
+    prev_losses: Vec<f32>,
+    /// guard against degenerate sigma (flat batch)
+    pub min_sigma: f32,
+}
+
+impl Fzoo {
+    pub fn new(
+        eta: f32,
+        eps: f32,
+        n: usize,
+        mode: FzooMode,
+        objective: Objective,
+        run_seed: u64,
+    ) -> Self {
+        Self {
+            eta,
+            eta_base: eta,
+            eps,
+            n,
+            mode,
+            objective,
+            run_seed,
+            prev_losses: Vec::new(),
+            min_sigma: 1e-12,
+        }
+    }
+
+    /// Executable-name suffix for a non-default N (the `extra_n` ablation
+    /// artifacts) and/or the F1 objective.
+    fn losses_exe(&self, s: &Session) -> String {
+        let base = if self.n == s.entry.config.n_pert {
+            format!("fzoo_losses{}", self.objective.suffix())
+        } else {
+            // N-ablation graphs are CE-only
+            format!("fzoo_losses_n{}", self.n)
+        };
+        base
+    }
+
+    fn update_exe(&self, s: &Session) -> String {
+        if self.n == s.entry.config.n_pert {
+            "zo_update".to_string()
+        } else {
+            format!("zo_update_n{}", self.n)
+        }
+    }
+
+    /// Probe losses `[l_0, l_1..l_n]` for this step.
+    fn probe(
+        &self,
+        rt: &Runtime,
+        s: &Session,
+        batch: &Batch,
+        seed: u32,
+        n_probe: usize,
+    ) -> Result<Vec<f32>> {
+        let (ids, labels, mask) = batch.literals()?;
+        match self.mode {
+            FzooMode::Sequential => {
+                // Algorithm 3: perturb / forward / discard, one stream at a
+                // time. Only exists for FT models (tab5 ablations).
+                let fwd = rt.executable(
+                    &s.model,
+                    &format!("fwd_loss{}", self.objective.suffix()),
+                )?;
+                let perturb = rt.executable(&s.model, "rad_perturb")?;
+                let mut out = Vec::with_capacity(n_probe + 1);
+                let l0 = fwd.run(&[
+                    s.trainable_lit()?,
+                    batch.literals()?.0,
+                    batch.literals()?.1,
+                    batch.literals()?.2,
+                ])?;
+                out.push(scalar_f32(&l0[0])?);
+                for i in 1..=n_probe {
+                    let pert = perturb.run(&[
+                        s.trainable_lit()?,
+                        lit_scalar_u32(seed),
+                        lit_scalar_u32(i as u32),
+                        lit_scalar_f32(self.eps),
+                    ])?;
+                    let (ids_i, labels_i, mask_i) = batch.literals()?;
+                    let li = fwd.run(&[
+                        pert.into_iter().next().unwrap(),
+                        ids_i,
+                        labels_i,
+                        mask_i,
+                    ])?;
+                    out.push(scalar_f32(&li[0])?);
+                }
+                Ok(out)
+            }
+            _ => {
+                let exe = rt.executable(&s.model, &self.losses_exe(s))?;
+                let mut inputs = s.param_inputs()?;
+                inputs.extend([ids, labels, mask]);
+                inputs.push(lit_scalar_u32(seed));
+                inputs.push(lit_scalar_f32(self.eps));
+                let outs = exe.run(&inputs)?;
+                to_vec_f32(&outs[0])
+            }
+        }
+    }
+}
+
+impl Optimizer for Fzoo {
+    fn name(&self) -> String {
+        match self.mode {
+            FzooMode::Parallel => format!("FZOO(N={})", self.n),
+            FzooMode::Sequential => format!("FZOO-seq(N={})", self.n),
+            FzooMode::Reuse => format!("FZOO-R(N={})", self.n),
+        }
+    }
+
+    fn forwards_per_step(&self) -> f64 {
+        (self.n + 1) as f64
+    }
+
+    fn set_lr_scale(&mut self, scale: f32) {
+        self.eta = self.eta_base * scale;
+    }
+
+    fn step(&mut self, rt: &Runtime, s: &mut Session, batch: &Batch, step: u64)
+        -> Result<StepOut> {
+        let seed = step_seed(self.run_seed, step);
+        let losses = self.probe(rt, s, batch, seed, self.n)?;
+        anyhow::ensure!(losses.len() == self.n + 1, "probe returned {} losses", losses.len());
+        let l0 = losses[0];
+        let ls = &losses[1..];
+
+        // sigma_t — FZOO-R augments with the previous step's losses
+        let sigma = match self.mode {
+            FzooMode::Reuse if !self.prev_losses.is_empty() => {
+                let mut all = ls.to_vec();
+                all.extend_from_slice(&self.prev_losses);
+                sample_std(&all)
+            }
+            _ => sample_std(ls),
+        };
+        if self.mode == FzooMode::Reuse {
+            self.prev_losses = ls.to_vec();
+        }
+
+        let forwards = (self.n + 1) as f64;
+        if sigma <= self.min_sigma || !sigma.is_finite() {
+            // flat region with no signal: skip the update (paper's code
+            // guards division by zero the same way)
+            return Ok(StepOut {
+                loss: l0,
+                forwards,
+                forward_equiv: forwards,
+                sigma: Some(sigma),
+            });
+        }
+
+        let coeffs: Vec<f32> = ls
+            .iter()
+            .map(|&li| self.eta * (li - l0) / (self.n as f32 * sigma))
+            .collect();
+        let upd = rt.executable(&s.model, &self.update_exe(s))?;
+        let out = upd.run(&[
+            s.trainable_lit()?,
+            lit_scalar_u32(seed),
+            lit_f32(&coeffs, &[coeffs.len()])?,
+        ])?;
+        *s.trainable_mut() = to_vec_f32(&out[0])?;
+
+        Ok(StepOut {
+            loss: l0,
+            forwards,
+            forward_equiv: forwards,
+            sigma: Some(sigma),
+        })
+    }
+}

@@ -1,0 +1,121 @@
+//! HiZOO-L baseline [52]: Hessian-informed ZO. The full HiZOO keeps a
+//! d-dimensional diagonal Hessian estimate (2x memory — Table 7); HiZOO-L
+//! is its low-memory variant. We reproduce HiZOO-L with a *scalar*
+//! curvature EMA estimated from the three-point probe
+//! `h_t = |l+ + l- - 2 l0| / eps^2` (the diagonal average the full method
+//! tracks per-coordinate), scaling the MeZO step by `1/sqrt(Sigma)`.
+//! DESIGN.md §6 documents this simplification.
+//!
+//! Prefix-family artifacts have no dedicated `hizoo_losses`; we compose the
+//! same three-point probe from `fwd_loss` + `mezo_losses` (one extra
+//! forward, identical math).
+
+use anyhow::Result;
+
+use crate::data::Batch;
+use crate::runtime::{lit_scalar_f32, lit_scalar_u32, scalar_f32, to_vec_f32, Runtime, Session};
+
+use super::{step_seed, Objective, Optimizer, StepOut};
+
+pub struct HiZoo {
+    pub lr: f32,
+    lr_base: f32,
+    pub eps: f32,
+    /// EMA factor for the curvature estimate (paper's smoothing)
+    pub alpha: f32,
+    objective: Objective,
+    run_seed: u64,
+    sigma_ema: f32,
+    initialized: bool,
+}
+
+impl HiZoo {
+    pub fn new(lr: f32, eps: f32, alpha: f32, objective: Objective, run_seed: u64) -> Self {
+        Self {
+            lr,
+            lr_base: lr,
+            eps,
+            alpha,
+            objective,
+            run_seed,
+            sigma_ema: 1.0,
+            initialized: false,
+        }
+    }
+
+    fn probe(&self, rt: &Runtime, s: &Session, batch: &Batch, seed: u32)
+        -> Result<(f32, f32, f32, f64)> {
+        let (ids, labels, mask) = batch.literals()?;
+        let sfx = self.objective.suffix();
+        if s.entry.executables.contains_key(&format!("hizoo_losses{sfx}")) {
+            let exe = rt.executable(&s.model, &format!("hizoo_losses{sfx}"))?;
+            let mut inputs = s.param_inputs()?;
+            inputs.extend([ids, labels, mask]);
+            inputs.push(lit_scalar_u32(seed));
+            inputs.push(lit_scalar_f32(self.eps));
+            let outs = exe.run(&inputs)?;
+            Ok((
+                scalar_f32(&outs[0])?,
+                scalar_f32(&outs[1])?,
+                scalar_f32(&outs[2])?,
+                3.0,
+            ))
+        } else {
+            // compose from fwd_loss + mezo_losses (prefix family)
+            let fwd = rt.executable(&s.model, &format!("fwd_loss{sfx}"))?;
+            let mut inputs = s.param_inputs()?;
+            let (i2, l2, m2) = batch.literals()?;
+            inputs.extend([i2, l2, m2]);
+            let l0 = scalar_f32(&fwd.run(&inputs)?[0])?;
+            let mz = rt.executable(&s.model, &format!("mezo_losses{sfx}"))?;
+            let mut inputs = s.param_inputs()?;
+            inputs.extend([ids, labels, mask]);
+            inputs.push(lit_scalar_u32(seed));
+            inputs.push(lit_scalar_f32(self.eps));
+            let outs = mz.run(&inputs)?;
+            Ok((l0, scalar_f32(&outs[0])?, scalar_f32(&outs[1])?, 3.0))
+        }
+    }
+}
+
+impl Optimizer for HiZoo {
+    fn name(&self) -> String {
+        "HiZOO-L".into()
+    }
+
+    fn forwards_per_step(&self) -> f64 {
+        3.0
+    }
+
+    fn set_lr_scale(&mut self, scale: f32) {
+        self.lr = self.lr_base * scale;
+    }
+
+    fn step(&mut self, rt: &Runtime, s: &mut Session, batch: &Batch, step: u64)
+        -> Result<StepOut> {
+        let seed = step_seed(self.run_seed ^ 0x0412_0014, step);
+        let (l0, lp, lm, forwards) = self.probe(rt, s, batch, seed)?;
+
+        // scalar diagonal-Hessian estimate (clamped positive)
+        let h = ((lp + lm - 2.0 * l0).abs() / (self.eps * self.eps)).max(1e-8);
+        self.sigma_ema = if self.initialized {
+            self.alpha * self.sigma_ema + (1.0 - self.alpha) * h
+        } else {
+            self.initialized = true;
+            h
+        };
+
+        let pg = (lp - lm) / (2.0 * self.eps);
+        let coeff = self.lr * pg / self.sigma_ema.sqrt();
+        let exe = rt.executable(&s.model, "gauss_update")?;
+        let out = exe.run(&[s.trainable_lit()?, lit_scalar_u32(seed), lit_scalar_f32(coeff)])?;
+        *s.trainable_mut() = to_vec_f32(&out[0])?;
+
+        Ok(StepOut {
+            loss: l0,
+            forwards,
+            forward_equiv: forwards,
+            sigma: Some(self.sigma_ema),
+        })
+    }
+}

@@ -1,0 +1,413 @@
+//! The optimizer zoo: FZOO (+ variants) and every baseline in the paper's
+//! tables, all driving the AOT step graphs. Parameters are only ever
+//! touched through the update executables — Rust computes *scalars*
+//! (loss statistics, step-size coefficients) and the graphs regenerate the
+//! perturbation directions from seeds.
+
+pub mod first_order;
+pub mod fzoo;
+pub mod hizoo;
+pub mod zo_family;
+
+use anyhow::{bail, Result};
+
+use crate::data::Batch;
+use crate::runtime::{Runtime, Session};
+use crate::zorng::mix32;
+
+pub use first_order::{FirstOrder, FoFlavor};
+pub use fzoo::{Fzoo, FzooMode};
+pub use hizoo::HiZoo;
+pub use zo_family::{ZoFamily, ZoFlavor};
+
+/// What one optimizer step produced.
+#[derive(Debug, Clone, Copy)]
+pub struct StepOut {
+    /// clean-pass training loss (or mean of the probe losses when no clean
+    /// pass is available)
+    pub loss: f32,
+    /// *actual* forward passes executed this step
+    pub forwards: f64,
+    /// forward-pass *equivalents* (backward = 3 forwards, the accounting
+    /// convention of the paper's Fig. 1 via [Alman & Song 2024])
+    pub forward_equiv: f64,
+    /// FZOO's sigma_t (adaptive-step diagnostics)
+    pub sigma: Option<f32>,
+}
+
+/// Training objective: cross-entropy or the non-differentiable span-F1
+/// (§4.3). Selects which loss executables an optimizer binds to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Objective {
+    #[default]
+    Ce,
+    F1,
+}
+
+impl Objective {
+    pub fn suffix(&self) -> &'static str {
+        match self {
+            Objective::Ce => "",
+            Objective::F1 => "_f1",
+        }
+    }
+}
+
+pub trait Optimizer: Send {
+    fn name(&self) -> String;
+    fn step(&mut self, rt: &Runtime, s: &mut Session, batch: &Batch, step: u64)
+        -> Result<StepOut>;
+    /// Nominal forward passes per step (for planning/accounting).
+    fn forwards_per_step(&self) -> f64;
+    /// LR-schedule hook: multiply the *base* learning rate by `scale`
+    /// (idempotent — called with the absolute scale every step).
+    fn set_lr_scale(&mut self, _scale: f32) {}
+}
+
+/// Per-step perturbation seed: decorrelated across steps and runs.
+pub fn step_seed(run_seed: u64, step: u64) -> u32 {
+    mix32((run_seed as u32) ^ mix32(step as u32).rotate_left(16))
+}
+
+/// Sample standard deviation (ddof = 1), the sigma_t of Algorithm 1.
+pub fn sample_std(xs: &[f32]) -> f32 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let n = xs.len() as f64;
+    let mean = xs.iter().map(|&x| x as f64).sum::<f64>() / n;
+    let var = xs
+        .iter()
+        .map(|&x| (x as f64 - mean).powi(2))
+        .sum::<f64>()
+        / (n - 1.0);
+    var.sqrt() as f32
+}
+
+/// Config-serialisable optimizer selector (config files / CLI / harness).
+#[derive(Debug, Clone, PartialEq)]
+pub enum OptimizerKind {
+    Fzoo {
+        eta: f32,
+        eps: f32,
+        mode: FzooModeCfg,
+        /// override the artifact's default N (needs the fzoo_losses_n{N}
+        /// executable, built via `extra_n`)
+        n: Option<usize>,
+        objective: Objective,
+    },
+    Mezo {
+        lr: f32,
+        eps: f32,
+        flavor: ZoFlavorCfg,
+        objective: Objective,
+    },
+    Hizoo {
+        lr: f32,
+        eps: f32,
+        alpha: f32,
+        objective: Objective,
+    },
+    FirstOrder {
+        lr: f32,
+        flavor: FoFlavorCfg,
+        objective: Objective,
+    },
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum FzooModeCfg {
+    #[default]
+    Parallel,
+    Sequential,
+    Reuse,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum ZoFlavorCfg {
+    #[default]
+    Sgd,
+    Sign,
+    Momentum,
+    Conservative,
+    Adam,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FoFlavorCfg {
+    Sgd,
+    Adam,
+    NormalizedSgd,
+}
+
+impl OptimizerKind {
+    /// Paper-default FZOO (constant lr schedule, Table 8/10 grids).
+    pub fn fzoo(eta: f32, eps: f32) -> Self {
+        OptimizerKind::Fzoo {
+            eta,
+            eps,
+            mode: FzooModeCfg::Parallel,
+            n: None,
+            objective: Objective::Ce,
+        }
+    }
+
+    pub fn mezo(lr: f32, eps: f32) -> Self {
+        OptimizerKind::Mezo {
+            lr,
+            eps,
+            flavor: ZoFlavorCfg::Sgd,
+            objective: Objective::Ce,
+        }
+    }
+
+    pub fn adam(lr: f32) -> Self {
+        OptimizerKind::FirstOrder {
+            lr,
+            flavor: FoFlavorCfg::Adam,
+            objective: Objective::Ce,
+        }
+    }
+
+    pub fn with_objective(mut self, o: Objective) -> Self {
+        match &mut self {
+            OptimizerKind::Fzoo { objective, .. }
+            | OptimizerKind::Mezo { objective, .. }
+            | OptimizerKind::Hizoo { objective, .. }
+            | OptimizerKind::FirstOrder { objective, .. } => *objective = o,
+        }
+        self
+    }
+
+    pub fn build(&self, session: &Session, run_seed: u64) -> Box<dyn Optimizer> {
+        let d = session.d_trainable();
+        match self.clone() {
+            OptimizerKind::Fzoo {
+                eta,
+                eps,
+                mode,
+                n,
+                objective,
+            } => {
+                let mode = match mode {
+                    FzooModeCfg::Parallel => FzooMode::Parallel,
+                    FzooModeCfg::Sequential => FzooMode::Sequential,
+                    FzooModeCfg::Reuse => FzooMode::Reuse,
+                };
+                // Algorithm 2 (FZOO-R) halves the probe count and fills the
+                // sigma estimate with the previous step's losses. Use the
+                // half-N graphs when the artifacts carry them; otherwise
+                // fall back to full N (loss reuse still tightens sigma).
+                let n_pert = session.entry.config.n_pert;
+                let half = n_pert / 2;
+                let n = n.unwrap_or_else(|| match mode {
+                    FzooMode::Reuse
+                        if half >= 2
+                            && session
+                                .entry
+                                .executables
+                                .contains_key(&format!("fzoo_losses_n{half}")) =>
+                    {
+                        half
+                    }
+                    _ => n_pert,
+                });
+                Box::new(Fzoo::new(eta, eps, n, mode, objective, run_seed))
+            }
+            OptimizerKind::Mezo {
+                lr,
+                eps,
+                flavor,
+                objective,
+            } => {
+                let flavor = match flavor {
+                    ZoFlavorCfg::Sgd => ZoFlavor::Sgd,
+                    ZoFlavorCfg::Sign => ZoFlavor::Sign,
+                    ZoFlavorCfg::Momentum => ZoFlavor::Momentum,
+                    ZoFlavorCfg::Conservative => ZoFlavor::Conservative,
+                    ZoFlavorCfg::Adam => ZoFlavor::Adam,
+                };
+                Box::new(ZoFamily::new(lr, eps, flavor, objective, run_seed, d))
+            }
+            OptimizerKind::Hizoo {
+                lr,
+                eps,
+                alpha,
+                objective,
+            } => Box::new(HiZoo::new(lr, eps, alpha, objective, run_seed)),
+            OptimizerKind::FirstOrder {
+                lr,
+                flavor,
+                objective,
+            } => {
+                let flavor = match flavor {
+                    FoFlavorCfg::Sgd => FoFlavor::Sgd,
+                    FoFlavorCfg::Adam => FoFlavor::Adam,
+                    FoFlavorCfg::NormalizedSgd => FoFlavor::NormalizedSgd,
+                };
+                Box::new(FirstOrder::new(lr, flavor, objective, d))
+            }
+        }
+    }
+
+    /// CLI/config shorthand -> kind. Known names: fzoo, fzoo-r, fzoo-seq,
+    /// mezo/zo-sgd, zo-sign, zo-mmt, zo-cons, zo-adam, hizoo, adam, sgd,
+    /// nsgd.
+    pub fn by_name(name: &str, lr: f32, eps: f32) -> Result<Self> {
+        let k = match name {
+            "fzoo" => OptimizerKind::fzoo(lr, eps),
+            "fzoo-r" => OptimizerKind::Fzoo {
+                eta: lr, eps, mode: FzooModeCfg::Reuse, n: None,
+                objective: Objective::Ce,
+            },
+            "fzoo-seq" => OptimizerKind::Fzoo {
+                eta: lr, eps, mode: FzooModeCfg::Sequential, n: None,
+                objective: Objective::Ce,
+            },
+            "mezo" | "zo-sgd" => OptimizerKind::mezo(lr, eps),
+            "zo-sign" => OptimizerKind::Mezo {
+                lr, eps, flavor: ZoFlavorCfg::Sign, objective: Objective::Ce,
+            },
+            "zo-mmt" => OptimizerKind::Mezo {
+                lr, eps, flavor: ZoFlavorCfg::Momentum, objective: Objective::Ce,
+            },
+            "zo-cons" => OptimizerKind::Mezo {
+                lr, eps, flavor: ZoFlavorCfg::Conservative, objective: Objective::Ce,
+            },
+            "zo-adam" => OptimizerKind::Mezo {
+                lr, eps, flavor: ZoFlavorCfg::Adam, objective: Objective::Ce,
+            },
+            "hizoo" => OptimizerKind::Hizoo {
+                lr, eps, alpha: 0.9, objective: Objective::Ce,
+            },
+            "adam" => OptimizerKind::adam(lr),
+            "sgd" => OptimizerKind::FirstOrder {
+                lr, flavor: FoFlavorCfg::Sgd, objective: Objective::Ce,
+            },
+            "nsgd" => OptimizerKind::FirstOrder {
+                lr, flavor: FoFlavorCfg::NormalizedSgd, objective: Objective::Ce,
+            },
+            other => bail!("unknown optimizer '{other}'"),
+        };
+        Ok(k)
+    }
+
+    /// Parse from a config JSON object:
+    /// `{"kind": "fzoo", "lr": 1e-3, "eps": 1e-3, "n": 8, "objective": "f1"}`
+    pub fn from_json(v: &crate::util::json::Value) -> Result<Self> {
+        let kind = v.req("kind")?.as_str()?;
+        let lr = v
+            .get("lr")
+            .or_else(|| v.get("eta"))
+            .map(|x| x.as_f32())
+            .transpose()?
+            .unwrap_or(1e-3);
+        let eps = v.get("eps").map(|x| x.as_f32()).transpose()?.unwrap_or(1e-3);
+        let mut k = Self::by_name(kind, lr, eps)?;
+        if let (OptimizerKind::Fzoo { n, .. }, Some(nv)) =
+            (&mut k, v.get("n"))
+        {
+            *n = Some(nv.as_usize()?);
+        }
+        if let (OptimizerKind::Hizoo { alpha, .. }, Some(av)) =
+            (&mut k, v.get("alpha"))
+        {
+            *alpha = av.as_f32()?;
+        }
+        if let Some(o) = v.get("objective") {
+            k = k.with_objective(match o.as_str()? {
+                "ce" => Objective::Ce,
+                "f1" => Objective::F1,
+                other => bail!("unknown objective '{other}'"),
+            });
+        }
+        Ok(k)
+    }
+
+    pub fn display_name(&self) -> String {
+        match self {
+            OptimizerKind::Fzoo { mode, .. } => match mode {
+                FzooModeCfg::Parallel => "FZOO".into(),
+                FzooModeCfg::Sequential => "FZOO-seq".into(),
+                FzooModeCfg::Reuse => "FZOO-R".into(),
+            },
+            OptimizerKind::Mezo { flavor, .. } => match flavor {
+                ZoFlavorCfg::Sgd => "MeZO".into(),
+                ZoFlavorCfg::Sign => "ZO-SGD-Sign".into(),
+                ZoFlavorCfg::Momentum => "ZO-SGD-MMT".into(),
+                ZoFlavorCfg::Conservative => "ZO-SGD-Cons".into(),
+                ZoFlavorCfg::Adam => "ZO-Adam".into(),
+            },
+            OptimizerKind::Hizoo { .. } => "HiZOO-L".into(),
+            OptimizerKind::FirstOrder { flavor, .. } => match flavor {
+                FoFlavorCfg::Sgd => "SGD".into(),
+                FoFlavorCfg::Adam => "Adam".into(),
+                FoFlavorCfg::NormalizedSgd => "NSGD".into(),
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_std_matches_formula() {
+        let xs = [1.0f32, 2.0, 3.0, 4.0];
+        // var = ((1.5)^2+(0.5)^2+(0.5)^2+(1.5)^2)/3 = 5/3
+        assert!((sample_std(&xs) - (5.0f32 / 3.0).sqrt()).abs() < 1e-6);
+        assert_eq!(sample_std(&[1.0]), 0.0);
+        assert_eq!(sample_std(&[]), 0.0);
+    }
+
+    #[test]
+    fn step_seed_decorrelates() {
+        let a = step_seed(1, 0);
+        let b = step_seed(1, 1);
+        let c = step_seed(2, 0);
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(step_seed(1, 0), a);
+    }
+
+    #[test]
+    fn optimizer_kind_from_json_and_names() {
+        use crate::util::json;
+        let k = OptimizerKind::from_json(
+            &json::parse(r#"{"kind":"fzoo","lr":0.001,"eps":0.001}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(k, OptimizerKind::fzoo(1e-3, 1e-3));
+        let k2 = OptimizerKind::from_json(
+            &json::parse(r#"{"kind":"fzoo","lr":0.01,"eps":0.001,"n":4,"objective":"f1"}"#)
+                .unwrap(),
+        )
+        .unwrap();
+        match k2 {
+            OptimizerKind::Fzoo { n, objective, .. } => {
+                assert_eq!(n, Some(4));
+                assert_eq!(objective, Objective::F1);
+            }
+            _ => panic!(),
+        }
+        for (name, disp) in [
+            ("fzoo-r", "FZOO-R"),
+            ("fzoo-seq", "FZOO-seq"),
+            ("zo-adam", "ZO-Adam"),
+            ("zo-sign", "ZO-SGD-Sign"),
+            ("zo-mmt", "ZO-SGD-MMT"),
+            ("zo-cons", "ZO-SGD-Cons"),
+            ("hizoo", "HiZOO-L"),
+            ("adam", "Adam"),
+            ("sgd", "SGD"),
+            ("nsgd", "NSGD"),
+        ] {
+            assert_eq!(
+                OptimizerKind::by_name(name, 1e-3, 1e-3).unwrap().display_name(),
+                disp
+            );
+        }
+        assert!(OptimizerKind::by_name("nope", 1.0, 1.0).is_err());
+    }
+}

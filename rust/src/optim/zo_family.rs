@@ -1,0 +1,213 @@
+//! MeZO and the ZO-benchmark baselines of Table 7 [49]: ZO-SGD (== MeZO),
+//! ZO-SGD-Sign, ZO-SGD-MMT, ZO-SGD-Cons, ZO-Adam. All use the two-sided
+//! Gaussian SPSA estimate `pg = (l+ - l-) / (2 eps)` with the MeZO seed
+//! trick (directions regenerated inside the update graphs).
+
+use anyhow::Result;
+
+use crate::data::Batch;
+use crate::runtime::{
+    lit_f32, lit_scalar_f32, lit_scalar_u32, scalar_f32, to_vec_f32, Runtime, Session,
+};
+
+use super::{step_seed, Objective, Optimizer, StepOut};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ZoFlavor {
+    /// plain ZO-SGD — exactly MeZO
+    Sgd,
+    /// theta -= lr * pg_sign * sign(z)
+    Sign,
+    /// momentum buffer over the estimated gradient
+    Momentum,
+    /// only keep updates that do not increase the loss (≈2.49x runtime in
+    /// the benchmark's accounting)
+    Conservative,
+    /// Adam moments over the estimated gradient (2.47x memory)
+    Adam,
+}
+
+pub struct ZoFamily {
+    pub lr: f32,
+    lr_base: f32,
+    pub eps: f32,
+    pub flavor: ZoFlavor,
+    objective: Objective,
+    run_seed: u64,
+    // d-vector states (only allocated for the flavors that need them —
+    // exactly the memory multiples Table 7 reports)
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub adam_eps: f32,
+}
+
+impl ZoFamily {
+    pub fn new(
+        lr: f32,
+        eps: f32,
+        flavor: ZoFlavor,
+        objective: Objective,
+        run_seed: u64,
+        d: usize,
+    ) -> Self {
+        let (m, v) = match flavor {
+            ZoFlavor::Momentum => (vec![0.0; d], Vec::new()),
+            ZoFlavor::Adam => (vec![0.0; d], vec![0.0; d]),
+            _ => (Vec::new(), Vec::new()),
+        };
+        Self {
+            lr,
+            lr_base: lr,
+            eps,
+            flavor,
+            objective,
+            run_seed,
+            m,
+            v,
+            t: 0.0,
+            beta1: 0.9,
+            beta2: 0.999,
+            adam_eps: 1e-8,
+        }
+    }
+
+    fn mezo_losses(
+        &self,
+        rt: &Runtime,
+        s: &Session,
+        batch: &Batch,
+        seed: u32,
+    ) -> Result<(f32, f32)> {
+        let exe = rt.executable(
+            &s.model,
+            &format!("mezo_losses{}", self.objective.suffix()),
+        )?;
+        let (ids, labels, mask) = batch.literals()?;
+        let mut inputs = s.param_inputs()?;
+        inputs.extend([ids, labels, mask]);
+        inputs.push(lit_scalar_u32(seed));
+        inputs.push(lit_scalar_f32(self.eps));
+        let outs = exe.run(&inputs)?;
+        Ok((scalar_f32(&outs[0])?, scalar_f32(&outs[1])?))
+    }
+
+    fn fwd_loss(&self, rt: &Runtime, s: &Session, batch: &Batch) -> Result<f32> {
+        let exe = rt.executable(
+            &s.model,
+            &format!("fwd_loss{}", self.objective.suffix()),
+        )?;
+        let (ids, labels, mask) = batch.literals()?;
+        let mut inputs = s.param_inputs()?;
+        inputs.extend([ids, labels, mask]);
+        scalar_f32(&exe.run(&inputs)?[0])
+    }
+
+    fn gauss_update(&self, rt: &Runtime, s: &mut Session, seed: u32, coeff: f32)
+        -> Result<()> {
+        let exe = rt.executable(&s.model, "gauss_update")?;
+        let out = exe.run(&[s.trainable_lit()?, lit_scalar_u32(seed), lit_scalar_f32(coeff)])?;
+        *s.trainable_mut() = to_vec_f32(&out[0])?;
+        Ok(())
+    }
+}
+
+impl Optimizer for ZoFamily {
+    fn name(&self) -> String {
+        match self.flavor {
+            ZoFlavor::Sgd => "MeZO".into(),
+            ZoFlavor::Sign => "ZO-SGD-Sign".into(),
+            ZoFlavor::Momentum => "ZO-SGD-MMT".into(),
+            ZoFlavor::Conservative => "ZO-SGD-Cons".into(),
+            ZoFlavor::Adam => "ZO-Adam".into(),
+        }
+    }
+
+    fn forwards_per_step(&self) -> f64 {
+        match self.flavor {
+            ZoFlavor::Conservative => 4.0,
+            _ => 2.0,
+        }
+    }
+
+    fn set_lr_scale(&mut self, scale: f32) {
+        self.lr = self.lr_base * scale;
+    }
+
+    fn step(&mut self, rt: &Runtime, s: &mut Session, batch: &Batch, step: u64)
+        -> Result<StepOut> {
+        let seed = step_seed(self.run_seed ^ 0x00ED_0ACE, step);
+        let (lp, lm) = self.mezo_losses(rt, s, batch, seed)?;
+        let pg = (lp - lm) / (2.0 * self.eps);
+        let loss = 0.5 * (lp + lm);
+        let mut forwards = 2.0;
+
+        match self.flavor {
+            ZoFlavor::Sgd => {
+                self.gauss_update(rt, s, seed, self.lr * pg)?;
+            }
+            ZoFlavor::Sign => {
+                let exe = rt.executable(&s.model, "gauss_sign_update")?;
+                let out = exe.run(&[
+                    s.trainable_lit()?,
+                    lit_scalar_u32(seed),
+                    lit_scalar_f32(self.lr * pg.signum()),
+                ])?;
+                *s.trainable_mut() = to_vec_f32(&out[0])?;
+            }
+            ZoFlavor::Conservative => {
+                let l0 = self.fwd_loss(rt, s, batch)?;
+                let backup = s.trainable().to_vec();
+                self.gauss_update(rt, s, seed, self.lr * pg)?;
+                let l_new = self.fwd_loss(rt, s, batch)?;
+                forwards = 4.0;
+                if l_new > l0 {
+                    *s.trainable_mut() = backup; // reject the step
+                }
+            }
+            ZoFlavor::Momentum => {
+                let exe = rt.executable(&s.model, "momentum_zo_update")?;
+                let d = s.d_trainable();
+                let out = exe.run(&[
+                    s.trainable_lit()?,
+                    lit_f32(&self.m, &[d])?,
+                    lit_scalar_u32(seed),
+                    lit_scalar_f32(pg),
+                    lit_scalar_f32(self.lr),
+                    lit_scalar_f32(self.beta1),
+                ])?;
+                *s.trainable_mut() = to_vec_f32(&out[0])?;
+                self.m = to_vec_f32(&out[1])?;
+            }
+            ZoFlavor::Adam => {
+                self.t += 1.0;
+                let exe = rt.executable(&s.model, "adam_zo_update")?;
+                let d = s.d_trainable();
+                let out = exe.run(&[
+                    s.trainable_lit()?,
+                    lit_f32(&self.m, &[d])?,
+                    lit_f32(&self.v, &[d])?,
+                    lit_scalar_u32(seed),
+                    lit_scalar_f32(pg),
+                    lit_scalar_f32(self.lr),
+                    lit_scalar_f32(self.beta1),
+                    lit_scalar_f32(self.beta2),
+                    lit_scalar_f32(self.adam_eps),
+                    lit_scalar_f32(self.t),
+                ])?;
+                *s.trainable_mut() = to_vec_f32(&out[0])?;
+                self.m = to_vec_f32(&out[1])?;
+                self.v = to_vec_f32(&out[2])?;
+            }
+        }
+
+        Ok(StepOut {
+            loss,
+            forwards,
+            forward_equiv: forwards,
+            sigma: None,
+        })
+    }
+}

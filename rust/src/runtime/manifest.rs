@@ -1,0 +1,270 @@
+//! `artifacts/manifest.json` — the contract between `python/compile/aot.py`
+//! and this runtime. Shapes, dtypes, the flat-parameter layout and the
+//! per-model executable inventory all come from here; the Rust side never
+//! hard-codes a model's geometry. Parsed with the in-tree JSON codec
+//! (`util::json`) — the build environment has no serde.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{self, Value};
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: u32,
+    pub models: BTreeMap<String, ModelEntry>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub config: ModelConfig,
+    pub d: usize,
+    pub d_prefix: usize,
+    pub layout: Vec<LayoutLeaf>,
+    pub executables: BTreeMap<String, ExeSpec>,
+    pub init: String,
+    pub init_prefix: Option<String>,
+}
+
+/// Mirrors `python/compile/configs.py::ModelConfig`.
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub name: String,
+    pub arch: String,
+    pub vocab: usize,
+    pub dim: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub seq: usize,
+    pub n_classes: usize,
+    pub head: String,
+    pub batch: usize,
+    pub n_pert: usize,
+    pub mlp_ratio: usize,
+    pub n_prefix: usize,
+    pub extra_n: Vec<usize>,
+}
+
+impl ModelConfig {
+    pub fn is_span(&self) -> bool {
+        self.head == "span"
+    }
+    pub fn is_prefix(&self) -> bool {
+        self.n_prefix > 0
+    }
+
+    fn from_json(v: &Value) -> Result<Self> {
+        Ok(Self {
+            name: v.req("name")?.as_str()?.to_string(),
+            arch: v.req("arch")?.as_str()?.to_string(),
+            vocab: v.req("vocab")?.as_usize()?,
+            dim: v.req("dim")?.as_usize()?,
+            layers: v.req("layers")?.as_usize()?,
+            heads: v.req("heads")?.as_usize()?,
+            seq: v.req("seq")?.as_usize()?,
+            n_classes: v.req("n_classes")?.as_usize()?,
+            head: v.req("head")?.as_str()?.to_string(),
+            batch: v.req("batch")?.as_usize()?,
+            n_pert: v.req("n_pert")?.as_usize()?,
+            mlp_ratio: v.get("mlp_ratio").map(|x| x.as_usize()).transpose()?.unwrap_or(4),
+            n_prefix: v.get("n_prefix").map(|x| x.as_usize()).transpose()?.unwrap_or(0),
+            extra_n: match v.get("extra_n") {
+                Some(a) => a
+                    .as_arr()?
+                    .iter()
+                    .map(|x| x.as_usize())
+                    .collect::<Result<_>>()?,
+                None => Vec::new(),
+            },
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct LayoutLeaf {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+}
+
+impl LayoutLeaf {
+    pub fn size(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ExeSpec {
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    pub sha256: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+impl IoSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Value) -> Result<Self> {
+        Ok(Self {
+            name: v.req("name")?.as_str()?.to_string(),
+            dtype: v.req("dtype")?.as_str()?.to_string(),
+            shape: v
+                .req("shape")?
+                .as_arr()?
+                .iter()
+                .map(|x| x.as_usize())
+                .collect::<Result<_>>()?,
+        })
+    }
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let p = dir.join("manifest.json");
+        let data = std::fs::read_to_string(&p)
+            .with_context(|| format!("reading {} — run `make artifacts` first", p.display()))?;
+        Self::parse(&data).context("parsing manifest.json")
+    }
+
+    pub fn parse(data: &str) -> Result<Self> {
+        let v = json::parse(data)?;
+        let mut models = BTreeMap::new();
+        for (name, m) in v.req("models")?.as_obj()? {
+            let mut executables = BTreeMap::new();
+            for (ename, e) in m.req("executables")?.as_obj()? {
+                executables.insert(
+                    ename.clone(),
+                    ExeSpec {
+                        file: e.req("file")?.as_str()?.to_string(),
+                        inputs: e
+                            .req("inputs")?
+                            .as_arr()?
+                            .iter()
+                            .map(IoSpec::from_json)
+                            .collect::<Result<_>>()?,
+                        outputs: e
+                            .req("outputs")?
+                            .as_arr()?
+                            .iter()
+                            .map(IoSpec::from_json)
+                            .collect::<Result<_>>()?,
+                        sha256: e
+                            .get("sha256")
+                            .map(|x| x.as_str().map(|s| s.to_string()))
+                            .transpose()?
+                            .unwrap_or_default(),
+                    },
+                );
+            }
+            let layout = m
+                .req("layout")?
+                .as_arr()?
+                .iter()
+                .map(|l| {
+                    Ok(LayoutLeaf {
+                        name: l.req("name")?.as_str()?.to_string(),
+                        shape: l
+                            .req("shape")?
+                            .as_arr()?
+                            .iter()
+                            .map(|x| x.as_usize())
+                            .collect::<Result<_>>()?,
+                        offset: l.req("offset")?.as_usize()?,
+                    })
+                })
+                .collect::<Result<_>>()?;
+            models.insert(
+                name.clone(),
+                ModelEntry {
+                    config: ModelConfig::from_json(m.req("config")?)
+                        .with_context(|| format!("model '{name}' config"))?,
+                    d: m.req("d")?.as_usize()?,
+                    d_prefix: m
+                        .get("d_prefix")
+                        .map(|x| x.as_usize())
+                        .transpose()?
+                        .unwrap_or(0),
+                    layout,
+                    executables,
+                    init: m.req("init")?.as_str()?.to_string(),
+                    init_prefix: match m.get("init_prefix") {
+                        Some(Value::Str(s)) => Some(s.clone()),
+                        _ => None,
+                    },
+                },
+            );
+        }
+        Ok(Manifest {
+            version: v.req("version")?.as_usize()? as u32,
+            models,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models.get(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "model '{name}' not in manifest (have: {:?}) — build it with \
+                 `make artifacts MODELS={name}`",
+                self.models.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "models": {
+        "m": {
+          "config": {"name":"m","arch":"encoder","vocab":128,"dim":32,
+                     "layers":2,"heads":2,"seq":16,"n_classes":4,
+                     "head":"cls","batch":4,"n_pert":4,"mlp_ratio":4,
+                     "n_prefix":0,"extra_n":[2,8]},
+          "d": 1000,
+          "d_prefix": 0,
+          "layout": [{"name":"tok_emb","shape":[128,32],"offset":0}],
+          "executables": {
+            "fwd_loss": {"file":"m/fwd_loss.hlo.txt",
+                         "inputs":[{"name":"theta","dtype":"f32","shape":[1000]}],
+                         "outputs":[{"name":"out0","dtype":"f32","shape":[]}],
+                         "sha256":"ab"}
+          },
+          "init": "m/init.bin"
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let e = m.model("m").unwrap();
+        assert_eq!(e.d, 1000);
+        assert_eq!(e.config.extra_n, vec![2, 8]);
+        assert_eq!(e.layout[0].size(), 128 * 32);
+        let exe = &e.executables["fwd_loss"];
+        assert_eq!(exe.inputs[0].elems(), 1000);
+        assert_eq!(exe.outputs[0].shape.len(), 0);
+        assert!(!e.config.is_span());
+    }
+
+    #[test]
+    fn unknown_model_error_mentions_make() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let err = m.model("nope").unwrap_err().to_string();
+        assert!(err.contains("make artifacts"));
+    }
+}

@@ -1,0 +1,338 @@
+//! PJRT runtime: load HLO-text artifacts, compile once, execute from the
+//! hot path. Wraps the `xla` crate (`PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`), following
+//! /opt/xla-example/load_hlo.
+//!
+//! All graphs are lowered with `return_tuple=True`, so every execution
+//! returns one tuple literal which we decompose into the manifest-declared
+//! outputs.
+
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+pub use manifest::{ExeSpec, IoSpec, Manifest, ModelConfig, ModelEntry};
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
+
+/// Process-wide PJRT client + compiled-executable cache.
+pub struct Runtime {
+    client: PjRtClient,
+    root: PathBuf,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<(String, String), Arc<Executable>>>,
+    /// cumulative time spent in `client.compile` (startup cost accounting)
+    compile_seconds: Mutex<f64>,
+}
+
+impl Runtime {
+    /// Load the manifest and start the CPU PJRT client. `dir` is the
+    /// artifacts directory produced by `make artifacts`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let root = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&root)?;
+        let client = PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Self {
+            client,
+            root,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+            compile_seconds: Mutex::new(0.0),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifacts_root(&self) -> &Path {
+        &self.root
+    }
+
+    pub fn compile_seconds(&self) -> f64 {
+        *self.compile_seconds.lock().unwrap()
+    }
+
+    /// Compile-on-demand with caching: one `PjRtLoadedExecutable` per
+    /// (model, executable) for the whole process.
+    pub fn executable(&self, model: &str, exe: &str) -> Result<Arc<Executable>> {
+        let key = (model.to_string(), exe.to_string());
+        if let Some(e) = self.cache.lock().unwrap().get(&key) {
+            return Ok(e.clone());
+        }
+        let entry = self.manifest.model(model)?;
+        let spec = entry
+            .executables
+            .get(exe)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "model '{model}' has no executable '{exe}' (have: {:?})",
+                    entry.executables.keys().collect::<Vec<_>>()
+                )
+            })?
+            .clone();
+        let path = self.root.join(&spec.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("loading HLO text {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe_compiled = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {model}/{exe}: {e}"))?;
+        *self.compile_seconds.lock().unwrap() += t0.elapsed().as_secs_f64();
+        let wrapped = Arc::new(Executable {
+            name: format!("{model}/{exe}"),
+            exe: exe_compiled,
+            spec,
+        });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(key, wrapped.clone());
+        Ok(wrapped)
+    }
+
+    /// Drop every cached executable. XLA:CPU keeps multi-GB compilation
+    /// arenas alive per executable; long multi-model processes (the `xp`
+    /// harness) evict between experiments to keep the RSS bounded.
+    pub fn clear_cache(&self) {
+        self.cache.lock().unwrap().clear();
+    }
+
+    /// Number of live cached executables (used by tests and telemetry).
+    pub fn cached_executables(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// Pre-compile a set of executables (hides compile latency at startup).
+    pub fn warmup(&self, model: &str, exes: &[&str]) -> Result<()> {
+        for e in exes {
+            self.executable(model, e)?;
+        }
+        Ok(())
+    }
+
+    /// Raw f32 little-endian initial parameters for `model`.
+    pub fn init_params(&self, model: &str) -> Result<Vec<f32>> {
+        let entry = self.manifest.model(model)?;
+        read_f32_bin(&self.root.join(&entry.init), entry.d)
+    }
+
+    pub fn init_prefix(&self, model: &str) -> Result<Vec<f32>> {
+        let entry = self.manifest.model(model)?;
+        let f = entry
+            .init_prefix
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("model '{model}' has no prefix init"))?;
+        read_f32_bin(&self.root.join(f), entry.d_prefix)
+    }
+}
+
+fn read_f32_bin(path: &Path, expect: usize) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    anyhow::ensure!(
+        bytes.len() == expect * 4,
+        "{}: {} bytes, expected {}",
+        path.display(),
+        bytes.len(),
+        expect * 4
+    );
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// A compiled step graph plus its IO contract.
+pub struct Executable {
+    pub name: String,
+    exe: PjRtLoadedExecutable,
+    pub spec: ExeSpec,
+}
+
+impl Executable {
+    /// Execute with literal inputs; returns the decomposed output tuple.
+    pub fn run(&self, inputs: &[Literal]) -> Result<Vec<Literal>> {
+        anyhow::ensure!(
+            inputs.len() == self.spec.inputs.len(),
+            "{}: got {} inputs, expected {} ({:?})",
+            self.name,
+            inputs.len(),
+            self.spec.inputs.len(),
+            self.spec.inputs.iter().map(|i| &i.name).collect::<Vec<_>>()
+        );
+        // XLA runs with strict_shape_checking=false (the shim's default)
+        // and SEGFAULTS on mismatched buffers — validate against the
+        // manifest contract first so bad inputs fail as Rust errors.
+        for (l, spec) in inputs.iter().zip(&self.spec.inputs) {
+            let got = l
+                .array_shape()
+                .map(|s| s.dims().iter().map(|&d| d as usize).collect::<Vec<_>>())
+                .unwrap_or_default();
+            anyhow::ensure!(
+                got == spec.shape,
+                "{}: input '{}' has shape {:?}, manifest expects {:?}",
+                self.name,
+                spec.name,
+                got,
+                spec.shape
+            );
+        }
+        // NOTE: do not use `execute::<Literal>` here — the vendored shim's
+        // C `execute` path leaks every input device buffer (it `release()`s
+        // the unique_ptrs and never frees them), which bleeds ~1MB of theta
+        // per step and OOMs long training runs. Staging through Rust-owned
+        // `PjRtBuffer`s (freed on Drop) and `execute_b` is leak-free.
+        let client = self.exe.client();
+        let mut staged = Vec::with_capacity(inputs.len());
+        for l in inputs {
+            staged.push(
+                client
+                    .buffer_from_host_literal(None, l)
+                    .map_err(|e| anyhow::anyhow!("staging {} input: {e}", self.name))?,
+            );
+        }
+        let bufs = self
+            .exe
+            .execute_b::<xla::PjRtBuffer>(&staged)
+            .map_err(|e| anyhow::anyhow!("executing {}: {e}", self.name))?;
+        drop(staged);
+        let mut lit = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching {} output: {e}", self.name))?;
+        let outs = lit
+            .decompose_tuple()
+            .map_err(|e| anyhow::anyhow!("untupling {} output: {e}", self.name))?;
+        anyhow::ensure!(
+            outs.len() == self.spec.outputs.len(),
+            "{}: {} outputs, manifest says {}",
+            self.name,
+            outs.len(),
+            self.spec.outputs.len()
+        );
+        Ok(outs)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// literal helpers
+// ---------------------------------------------------------------------------
+
+pub fn lit_f32(data: &[f32], shape: &[usize]) -> Result<Literal> {
+    let l = Literal::vec1(data);
+    if shape.len() == 1 && shape[0] == data.len() {
+        return Ok(l);
+    }
+    let dims: Vec<i64> = shape.iter().map(|&s| s as i64).collect();
+    l.reshape(&dims).map_err(|e| anyhow::anyhow!("reshape f32: {e}"))
+}
+
+pub fn lit_i32(data: &[i32], shape: &[usize]) -> Result<Literal> {
+    let l = Literal::vec1(data);
+    let dims: Vec<i64> = shape.iter().map(|&s| s as i64).collect();
+    l.reshape(&dims).map_err(|e| anyhow::anyhow!("reshape i32: {e}"))
+}
+
+pub fn lit_scalar_f32(v: f32) -> Literal {
+    Literal::scalar(v)
+}
+
+pub fn lit_scalar_u32(v: u32) -> Literal {
+    Literal::scalar(v)
+}
+
+pub fn to_vec_f32(l: &Literal) -> Result<Vec<f32>> {
+    l.to_vec::<f32>().map_err(|e| anyhow::anyhow!("literal -> Vec<f32>: {e}"))
+}
+
+pub fn scalar_f32(l: &Literal) -> Result<f32> {
+    l.get_first_element::<f32>()
+        .map_err(|e| anyhow::anyhow!("literal -> f32: {e}"))
+}
+
+// ---------------------------------------------------------------------------
+// Session: one model's state (parameters + compiled exes) for training
+// ---------------------------------------------------------------------------
+
+/// A model opened for training: flat parameters (and optional trainable
+/// prefix) plus the manifest entry. Optimizers mutate `theta` through the
+/// AOT update graphs; nothing in Rust touches individual weights.
+pub struct Session {
+    pub model: String,
+    pub entry: ModelEntry,
+    /// full parameters (frozen base in prefix mode)
+    pub theta: Vec<f32>,
+    /// trainable prefix (empty unless prefix mode)
+    pub prefix: Vec<f32>,
+}
+
+impl Session {
+    pub fn open(rt: &Runtime, model: &str) -> Result<Self> {
+        let entry = rt.manifest.model(model)?.clone();
+        let theta = rt.init_params(model)?;
+        let prefix = if entry.config.is_prefix() {
+            rt.init_prefix(model)?
+        } else {
+            Vec::new()
+        };
+        Ok(Self {
+            model: model.to_string(),
+            entry,
+            theta,
+            prefix,
+        })
+    }
+
+    pub fn model_config(&self) -> &ModelConfig {
+        &self.entry.config
+    }
+
+    /// The vector the optimizer trains (prefix in PEFT mode, else theta).
+    pub fn trainable(&self) -> &[f32] {
+        if self.entry.config.is_prefix() {
+            &self.prefix
+        } else {
+            &self.theta
+        }
+    }
+
+    pub fn trainable_mut(&mut self) -> &mut Vec<f32> {
+        if self.entry.config.is_prefix() {
+            &mut self.prefix
+        } else {
+            &mut self.theta
+        }
+    }
+
+    pub fn d_trainable(&self) -> usize {
+        if self.entry.config.is_prefix() {
+            self.entry.d_prefix
+        } else {
+            self.entry.d
+        }
+    }
+
+    /// Literal of the trainable vector.
+    pub fn trainable_lit(&self) -> Result<Literal> {
+        lit_f32(self.trainable(), &[self.trainable().len()])
+    }
+
+    /// Literal of the frozen base (prefix mode only).
+    pub fn base_lit(&self) -> Result<Literal> {
+        lit_f32(&self.theta, &[self.theta.len()])
+    }
+
+    /// Leading inputs for loss/eval executables: `[theta]` in FT mode,
+    /// `[prefix, base]` in prefix mode.
+    pub fn param_inputs(&self) -> Result<Vec<Literal>> {
+        if self.entry.config.is_prefix() {
+            Ok(vec![self.trainable_lit()?, self.base_lit()?])
+        } else {
+            Ok(vec![self.trainable_lit()?])
+        }
+    }
+}

@@ -1,0 +1,132 @@
+//! Tiny `--flag value` CLI parser (offline replacement for clap).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    bools: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`. `--key value` and `--key=value` both work;
+    /// `bool_flags` lists value-less switches.
+    pub fn parse(argv: &[String], bool_flags: &[&str]) -> Result<Self> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if bool_flags.contains(&name) {
+                    out.bools.push(name.to_string());
+                } else {
+                    i += 1;
+                    let v = argv
+                        .get(i)
+                        .ok_or_else(|| anyhow!("flag --{name} needs a value"))?;
+                    out.flags.insert(name.to_string(), v.clone());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn from_env(bool_flags: &[&str]) -> Result<Self> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Self::parse(&argv, bool_flags)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        let v = self.flags.get(key).map(|s| s.as_str());
+        if v.is_some() {
+            self.consumed.borrow_mut().push(key.to_string());
+        }
+        v
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.bools.iter().any(|b| b == key)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow!("--{key} {v}: {e}")),
+        }
+    }
+
+    pub fn get_parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        Ok(self.get_parse(key)?.unwrap_or(default))
+    }
+
+    /// Error on unknown flags (call after reading all expected ones).
+    pub fn reject_unknown(&self, known: &[&str]) -> Result<()> {
+        for k in self.flags.keys() {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown flag --{k} (known: {known:?})");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_and_positional() {
+        let a = Args::parse(&argv("train --model tiny-enc --steps=50 --smoke x"), &["smoke"])
+            .unwrap();
+        assert_eq!(a.positional, vec!["train", "x"]);
+        assert_eq!(a.get("model"), Some("tiny-enc"));
+        assert_eq!(a.get_parse_or::<u64>("steps", 0).unwrap(), 50);
+        assert!(a.has("smoke"));
+        assert_eq!(a.get("absent"), None);
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(&argv("--model"), &[]).is_err());
+    }
+
+    #[test]
+    fn bad_parse_errors() {
+        let a = Args::parse(&argv("--steps abc"), &[]).unwrap();
+        assert!(a.get_parse::<u64>("steps").is_err());
+    }
+
+    #[test]
+    fn reject_unknown_flags() {
+        let a = Args::parse(&argv("--modle tiny"), &[]).unwrap();
+        assert!(a.reject_unknown(&["model"]).is_err());
+        let b = Args::parse(&argv("--model tiny"), &[]).unwrap();
+        assert!(b.reject_unknown(&["model"]).is_ok());
+    }
+}

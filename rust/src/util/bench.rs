@@ -1,0 +1,165 @@
+//! Micro-benchmark harness — in-tree replacement for criterion (offline
+//! build). Warmup + timed samples, robust stats, and a criterion-like
+//! text report. Used by the `[[bench]]` targets (harness = false).
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Vec<f64>, // seconds per iteration
+}
+
+impl BenchResult {
+    pub fn mean(&self) -> f64 {
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn median(&self) -> f64 {
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s[s.len() / 2]
+    }
+
+    pub fn stddev(&self) -> f64 {
+        let m = self.mean();
+        (self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+            / (self.samples.len().max(2) - 1) as f64)
+            .sqrt()
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} {:>12} ± {:>10}  (median {:>12}, {} samples)",
+            self.name,
+            fmt_time(self.mean()),
+            fmt_time(self.stddev()),
+            fmt_time(self.median()),
+            self.samples.len()
+        )
+    }
+}
+
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+pub struct Bench {
+    pub warmup: usize,
+    pub samples: usize,
+    pub min_time: Duration,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self {
+            warmup: 3,
+            samples: 12,
+            min_time: Duration::from_millis(1),
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn new(warmup: usize, samples: usize) -> Self {
+        Self {
+            warmup,
+            samples,
+            ..Default::default()
+        }
+    }
+
+    /// Time `f`; each sample runs as many iterations as needed to exceed
+    /// `min_time` (amortises timer overhead for fast ops).
+    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        for _ in 0..self.warmup {
+            f();
+        }
+        // calibrate iterations per sample
+        let t0 = Instant::now();
+        f();
+        let once = t0.elapsed().as_secs_f64().max(1e-9);
+        let iters = ((self.min_time.as_secs_f64() / once).ceil() as usize).clamp(1, 1_000_000);
+
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            samples.push(t.elapsed().as_secs_f64() / iters as f64);
+        }
+        let r = BenchResult {
+            name: name.to_string(),
+            samples,
+        };
+        println!("{}", r.report());
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// mean(a)/mean(b) — convenience for speedup claims.
+    pub fn ratio(&self, a: &str, b: &str) -> Option<f64> {
+        let fa = self.results.iter().find(|r| r.name == a)?.mean();
+        let fb = self.results.iter().find(|r| r.name == b)?.mean();
+        Some(fa / fb)
+    }
+}
+
+/// Prevent the optimizer from eliding a value (std::hint::black_box is
+/// stable since 1.66; thin wrapper for symmetry with criterion).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_sane() {
+        let r = BenchResult {
+            name: "x".into(),
+            samples: vec![1.0, 2.0, 3.0],
+        };
+        assert_eq!(r.mean(), 2.0);
+        assert_eq!(r.median(), 2.0);
+        assert!((r.stddev() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn run_measures_something() {
+        let mut b = Bench::new(1, 3);
+        let mut acc = 0u64;
+        let r = b.run("spin", || {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+        });
+        assert!(r.mean() > 0.0);
+        assert_eq!(r.samples.len(), 3);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(2.5).contains("s"));
+        assert!(fmt_time(2.5e-3).contains("ms"));
+        assert!(fmt_time(2.5e-6).contains("µs"));
+        assert!(fmt_time(2.5e-9).contains("ns"));
+    }
+}

@@ -1,0 +1,8 @@
+//! In-tree substrates replacing unavailable external crates (the build is
+//! fully offline — see DESIGN.md §6): a JSON codec, a micro-bench harness,
+//! a flag parser, and a seeded property-testing helper.
+
+pub mod args;
+pub mod bench;
+pub mod json;
+pub mod proptest;

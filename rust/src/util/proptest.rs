@@ -1,0 +1,116 @@
+//! Seeded property-testing helper — offline stand-in for the proptest
+//! crate. Generates randomized cases from SplitMix64 and reports the
+//! failing seed so cases are exactly reproducible.
+//!
+//! ```no_run
+//! use fzoo::util::proptest::{check, Gen};
+//! check("sum_commutes", 200, |g: &mut Gen| {
+//!     let (a, b) = (g.i64(-100, 100), g.i64(-100, 100));
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use crate::zorng::SplitMix64;
+
+/// Case-local generator.
+pub struct Gen {
+    rng: SplitMix64,
+    pub case_seed: u64,
+}
+
+impl Gen {
+    pub fn u64(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.rng.below(hi.saturating_sub(lo).saturating_add(1))
+    }
+
+    pub fn i64(&mut self, lo: i64, hi: i64) -> i64 {
+        lo + self.rng.below((hi - lo + 1) as u64) as i64
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.u64(lo as u64, hi as u64) as usize
+    }
+
+    pub fn u32(&mut self) -> u32 {
+        self.rng.next_u64() as u32
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.unit() * (hi - lo)
+    }
+
+    pub fn f32(&mut self, lo: f32, hi: f32) -> f32 {
+        self.f64(lo as f64, hi as f64) as f32
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize(0, xs.len() - 1)]
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32(lo, hi)).collect()
+    }
+}
+
+/// Run `f` on `cases` random generators. Panics (with the case seed) on
+/// the first failing case. Override the base seed with FZOO_PROP_SEED to
+/// replay a failure deterministically.
+pub fn check<F: FnMut(&mut Gen)>(name: &str, cases: u64, mut f: F) {
+    let base = std::env::var("FZOO_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xF200_0000u64);
+    for c in 0..cases {
+        let case_seed = base ^ (c.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut g = Gen {
+            rng: SplitMix64::new(case_seed),
+            case_seed,
+        };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut g)));
+        if let Err(e) = result {
+            eprintln!(
+                "property '{name}' failed on case {c} (FZOO_PROP_SEED={case_seed})"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranges_respected() {
+        check("ranges", 500, |g| {
+            let x = g.u64(3, 9);
+            assert!((3..=9).contains(&x));
+            let y = g.i64(-5, 5);
+            assert!((-5..=5).contains(&y));
+            let f = g.f32(0.5, 2.0);
+            assert!((0.5..=2.0).contains(&f));
+        });
+    }
+
+    #[test]
+    fn deterministic_per_case() {
+        let mut first = Vec::new();
+        check("collect", 5, |g| first.push(g.u32()));
+        let mut second = Vec::new();
+        check("collect", 5, |g| second.push(g.u32()));
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    #[should_panic]
+    fn failures_propagate() {
+        check("fails", 10, |g| {
+            assert!(g.u64(0, 100) < 101); // always true
+            assert!(g.u64(0, 1) == 2, "impossible"); // always false
+        });
+    }
+}

@@ -1,0 +1,14 @@
+//! Experiment harness — regenerates every table and figure of the paper's
+//! evaluation (the index lives in DESIGN.md §4). Each experiment returns a
+//! markdown report plus CSV series; the `xp` binary writes them under
+//! `reports/`.
+
+pub mod charts;
+pub mod hparams;
+pub mod plot;
+pub mod report;
+pub mod runs;
+pub mod suite;
+
+pub use report::Report;
+pub use runs::{run_one, RunSpec};

@@ -1,0 +1,171 @@
+//! ASCII line charts for the figure reports: the paper's figures are loss
+//! curves, so the regenerated reports embed a terminal-renderable plot
+//! next to the CSV series (self-contained markdown, no plotting deps).
+
+/// One named series of (x, y) points.
+pub type Series = (String, Vec<(f64, f64)>);
+
+const GLYPHS: [char; 6] = ['o', 'x', '+', '*', '#', '@'];
+
+/// Render series into a fixed-size ASCII chart. `logy` plots log10(y)
+/// (loss curves span decades). Points outside the finite range are
+/// dropped; empty input renders a placeholder.
+pub fn render(series: &[Series], width: usize, height: usize, logy: bool) -> String {
+    let tx = |x: f64| x;
+    let ty = |y: f64| if logy { y.max(1e-12).log10() } else { y };
+
+    let pts: Vec<(usize, Vec<(f64, f64)>)> = series
+        .iter()
+        .enumerate()
+        .map(|(i, (_, p))| {
+            (
+                i,
+                p.iter()
+                    .map(|&(x, y)| (tx(x), ty(y)))
+                    .filter(|(x, y)| x.is_finite() && y.is_finite())
+                    .collect(),
+            )
+        })
+        .collect();
+    let all: Vec<(f64, f64)> = pts.iter().flat_map(|(_, p)| p.iter().copied()).collect();
+    if all.is_empty() {
+        return "(no finite data to plot)\n".into();
+    }
+    let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(x, y) in &all {
+        x0 = x0.min(x);
+        x1 = x1.max(x);
+        y0 = y0.min(y);
+        y1 = y1.max(y);
+    }
+    if (x1 - x0).abs() < 1e-12 {
+        x1 = x0 + 1.0;
+    }
+    if (y1 - y0).abs() < 1e-12 {
+        y1 = y0 + 1.0;
+    }
+
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, p) in &pts {
+        let g = GLYPHS[*si % GLYPHS.len()];
+        for &(x, y) in p {
+            let cx = ((x - x0) / (x1 - x0) * (width - 1) as f64).round() as usize;
+            let cy = ((y - y0) / (y1 - y0) * (height - 1) as f64).round() as usize;
+            let row = height - 1 - cy.min(height - 1);
+            grid[row][cx.min(width - 1)] = g;
+        }
+    }
+
+    let ylab = |v: f64| -> String {
+        let v = if logy { 10f64.powf(v) } else { v };
+        if v.abs() >= 1000.0 || (v != 0.0 && v.abs() < 0.01) {
+            format!("{v:9.2e}")
+        } else {
+            format!("{v:9.3}")
+        }
+    };
+
+    let mut out = String::new();
+    for (r, row) in grid.iter().enumerate() {
+        let frac = 1.0 - r as f64 / (height - 1) as f64;
+        let yv = y0 + frac * (y1 - y0);
+        let label = if r == 0 || r == height - 1 || r == height / 2 {
+            ylab(yv)
+        } else {
+            " ".repeat(9)
+        };
+        out.push_str(&format!("{label} |{}\n", row.iter().collect::<String>()));
+    }
+    out.push_str(&format!(
+        "{} +{}\n",
+        " ".repeat(9),
+        "-".repeat(width)
+    ));
+    out.push_str(&format!(
+        "{} {:<12.0}{:>w$.0}\n",
+        " ".repeat(9),
+        x0,
+        x1,
+        w = width.saturating_sub(12)
+    ));
+    for (i, (name, _)) in series.iter().enumerate() {
+        out.push_str(&format!("  {} {}\n", GLYPHS[i % GLYPHS.len()], name));
+    }
+    out
+}
+
+/// Parse a 2-column CSV (with header) into points.
+pub fn parse_csv(content: &str) -> Vec<(f64, f64)> {
+    content
+        .lines()
+        .skip(1)
+        .filter_map(|l| {
+            let mut it = l.split(',');
+            let x = it.next()?.trim().parse().ok()?;
+            let y = it.next()?.trim().parse().ok()?;
+            Some((x, y))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn curve(k: f64) -> Vec<(f64, f64)> {
+        (0..50).map(|i| (i as f64, (-k * i as f64).exp())).collect()
+    }
+
+    #[test]
+    fn renders_two_series_with_legend() {
+        let s = vec![
+            ("fzoo".to_string(), curve(0.2)),
+            ("mezo".to_string(), curve(0.02)),
+        ];
+        let out = render(&s, 60, 12, false);
+        assert!(out.contains("o fzoo"));
+        assert!(out.contains("x mezo"));
+        assert!(out.lines().count() > 12);
+        // both glyphs appear in the grid
+        assert!(out.matches('o').count() > 5);
+        assert!(out.matches('x').count() > 5);
+    }
+
+    #[test]
+    fn log_scale_spreads_decades() {
+        let s = vec![(
+            "loss".to_string(),
+            vec![(0.0, 100.0), (1.0, 1.0), (2.0, 0.01)],
+        )];
+        let lin = render(&s, 40, 9, false);
+        let log = render(&s, 40, 9, true);
+        // in log space the three points occupy top/middle/bottom rows
+        let rows_with_o = |s: &str| {
+            s.lines()
+                .enumerate()
+                .filter(|(_, l)| l.contains(" |") && l.split(" |").nth(1).is_some_and(|g| g.contains('o')))
+                .map(|(i, _)| i)
+                .collect::<Vec<_>>()
+        };
+        let lr = rows_with_o(&log);
+        assert_eq!(lr.len(), 3, "{log}");
+        assert!(rows_with_o(&lin).len() <= 3);
+    }
+
+    #[test]
+    fn empty_and_degenerate_inputs() {
+        assert!(render(&[], 40, 8, false).contains("no finite data"));
+        let s = vec![("flat".to_string(), vec![(0.0, 1.0), (1.0, 1.0)])];
+        let out = render(&s, 40, 8, false);
+        assert!(out.contains('o'));
+        let nan = vec![("nan".to_string(), vec![(f64::NAN, f64::NAN)])];
+        assert!(render(&nan, 40, 8, false).contains("no finite data"));
+    }
+
+    #[test]
+    fn csv_parse_roundtrip() {
+        let pts = parse_csv("x,y\n0,2.5\n9,1.25\nbad,line\n");
+        assert_eq!(pts, vec![(0.0, 2.5), (9.0, 1.25)]);
+    }
+}

@@ -1,0 +1,124 @@
+//! Markdown/CSV report assembly for the experiment harness.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::Result;
+
+#[derive(Debug, Clone, Default)]
+pub struct Report {
+    pub id: String,
+    pub title: String,
+    /// free-form preamble (workload, parameters, caveats)
+    pub notes: Vec<String>,
+    sections: Vec<String>,
+    /// (name, header, rows) CSV side-files
+    csvs: Vec<(String, String, Vec<String>)>,
+}
+
+impl Report {
+    pub fn new(id: &str, title: &str) -> Self {
+        Self {
+            id: id.into(),
+            title: title.into(),
+            ..Default::default()
+        }
+    }
+
+    pub fn note(&mut self, s: impl Into<String>) {
+        self.notes.push(s.into());
+    }
+
+    /// Add a markdown table: `header` column names, `rows` of cells.
+    pub fn table(&mut self, caption: &str, header: &[&str], rows: &[Vec<String>]) {
+        let mut s = String::new();
+        let _ = writeln!(s, "\n**{caption}**\n");
+        let _ = writeln!(s, "| {} |", header.join(" | "));
+        let _ = writeln!(s, "|{}|", vec!["---"; header.len()].join("|"));
+        for r in rows {
+            let _ = writeln!(s, "| {} |", r.join(" | "));
+        }
+        self.sections.push(s);
+    }
+
+    pub fn paragraph(&mut self, text: &str) {
+        self.sections.push(format!("\n{text}\n"));
+    }
+
+    /// Register a CSV data series (written next to the markdown).
+    pub fn csv(&mut self, name: &str, header: &str, rows: Vec<String>) {
+        self.csvs.push((name.into(), header.into(), rows));
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "# {} — {}", self.id, self.title);
+        for n in &self.notes {
+            let _ = writeln!(s, "> {n}");
+        }
+        for sec in &self.sections {
+            s.push_str(sec);
+        }
+        if !self.csvs.is_empty() {
+            let _ = writeln!(s, "\nData series:");
+            for (name, _, _) in &self.csvs {
+                let _ = writeln!(s, "- `{}_{name}.csv`", self.id);
+            }
+        }
+        s
+    }
+
+    /// Write `<dir>/<id>.md` and all CSVs.
+    pub fn write(&self, dir: impl AsRef<Path>) -> Result<()> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join(format!("{}.md", self.id)), self.to_markdown())?;
+        for (name, header, rows) in &self.csvs {
+            let mut out = String::new();
+            let _ = writeln!(out, "{header}");
+            for r in rows {
+                let _ = writeln!(out, "{r}");
+            }
+            std::fs::write(dir.join(format!("{}_{name}.csv", self.id)), out)?;
+        }
+        Ok(())
+    }
+}
+
+pub fn fmt_pct(x: f64) -> String {
+    format!("{:.1}", 100.0 * x)
+}
+
+pub fn fmt_x(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.1}x")
+    } else {
+        "—".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_shape() {
+        let mut r = Report::new("tab1", "Test table");
+        r.note("synthetic workload");
+        r.table("acc", &["method", "sst2"], &[vec!["FZOO".into(), "93.3".into()]]);
+        let md = r.to_markdown();
+        assert!(md.contains("# tab1"));
+        assert!(md.contains("| FZOO | 93.3 |"));
+        assert!(md.contains("> synthetic"));
+    }
+
+    #[test]
+    fn csv_written() {
+        let mut r = Report::new("figx", "curve");
+        r.csv("loss", "fwd,loss", vec!["0,2.0".into(), "9,1.5".into()]);
+        let dir = std::env::temp_dir().join("fzoo_report_test");
+        r.write(&dir).unwrap();
+        let csv = std::fs::read_to_string(dir.join("figx_loss.csv")).unwrap();
+        assert!(csv.starts_with("fwd,loss"));
+    }
+}

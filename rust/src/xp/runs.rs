@@ -1,0 +1,90 @@
+//! Shared run infrastructure for the experiment harness: one `RunSpec` =
+//! one (model, task, optimizer, steps) training run producing a `History`.
+
+use anyhow::Result;
+
+use crate::coordinator::{History, TrainOpts, Trainer};
+use crate::data::TaskKind;
+use crate::optim::OptimizerKind;
+use crate::runtime::{Runtime, Session};
+
+#[derive(Debug, Clone)]
+pub struct RunSpec {
+    pub model: String,
+    pub task: TaskKind,
+    pub optimizer: OptimizerKind,
+    pub steps: u64,
+    pub eval_every: u64,
+    pub eval_batches: usize,
+    pub k_shot: Option<usize>,
+    pub run_seed: u64,
+}
+
+impl RunSpec {
+    pub fn new(model: &str, task: TaskKind, optimizer: OptimizerKind, steps: u64) -> Self {
+        Self {
+            model: model.into(),
+            task,
+            optimizer,
+            steps,
+            eval_every: 0,
+            eval_batches: 8,
+            k_shot: None,
+            run_seed: 0,
+        }
+    }
+
+    pub fn eval_every(mut self, n: u64) -> Self {
+        self.eval_every = n;
+        self
+    }
+
+    pub fn k_shot(mut self, k: usize) -> Self {
+        self.k_shot = Some(k);
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.run_seed = s;
+        self
+    }
+}
+
+/// Execute one run from the model's *pretrained* checkpoint (built on
+/// first use — see coordinator::pretrain).
+pub fn run_one(rt: &Runtime, spec: &RunSpec) -> Result<History> {
+    let mut session = Session::open_pretrained(rt, &spec.model)?;
+    let mut task = spec.task.instantiate(session.model_config(), spec.run_seed)?;
+    if let Some(k) = spec.k_shot {
+        task = task.with_k_shot(k);
+    }
+    let opts = TrainOpts {
+        steps: spec.steps,
+        eval_every: spec.eval_every,
+        eval_batches: spec.eval_batches,
+        target_loss: None,
+        schedule: Default::default(),
+        run_seed: spec.run_seed,
+        verbose: false,
+    };
+    let mut trainer = Trainer::with_opts(
+        rt,
+        &mut session,
+        task,
+        spec.optimizer.clone(),
+        opts,
+    );
+    trainer.train(spec.steps)
+}
+
+/// Average final accuracy over several seeds (the paper averages 5 runs).
+pub fn run_avg_accuracy(rt: &Runtime, spec: &RunSpec, seeds: &[u64]) -> Result<f64> {
+    let mut acc = 0.0;
+    for &s in seeds {
+        let mut sp = spec.clone();
+        sp.run_seed = s;
+        let h = run_one(rt, &sp)?;
+        acc += h.final_accuracy().unwrap_or(0.0);
+    }
+    Ok(acc / seeds.len() as f64)
+}

@@ -1,0 +1,158 @@
+//! Counter-based Rademacher hash — bit-for-bit parity with
+//! `python/compile/kernels/rademacher.py`.
+//!
+//! The AOT graphs regenerate every perturbation direction `u_i` from
+//! `(seed, global_param_index)` via this hash; the Rust side never needs
+//! `u_i` on the hot path (the whole point of the seed trick), but tests,
+//! analysis tools and the in-process reference optimizers do. If you change
+//! anything here, change the Python side and the shared golden vectors in
+//! `python/tests/test_rademacher.py` / `tests::goldens` together.
+
+pub const GOLDEN: u32 = 0x9E37_79B1;
+
+/// murmur3 fmix32 finalizer: a full-avalanche bijection on u32.
+#[inline(always)]
+pub fn mix32(mut x: u32) -> u32 {
+    x ^= x >> 16;
+    x = x.wrapping_mul(0x85EB_CA6B);
+    x ^= x >> 13;
+    x = x.wrapping_mul(0xC2B2_AE35);
+    x ^= x >> 16;
+    x
+}
+
+/// Hash of `(seed, idx)` — matches `rademacher.hash_u32`.
+#[inline(always)]
+pub fn hash_u32(seed: u32, idx: u32) -> u32 {
+    mix32(idx.wrapping_mul(GOLDEN).wrapping_add(seed))
+}
+
+/// The +/-1 sign for global parameter index `idx` under `seed`.
+#[inline(always)]
+pub fn rademacher_sign(seed: u32, idx: u32) -> f32 {
+    1.0 - 2.0 * ((hash_u32(seed, idx) & 1) as f32)
+}
+
+/// Per-perturbation-stream seed; stream 0 is the clean pass. Matches
+/// `rademacher.stream_seed`.
+#[inline(always)]
+pub fn stream_seed(seed_base: u32, stream: u32) -> u32 {
+    mix32(seed_base.wrapping_add(stream).wrapping_mul(GOLDEN))
+}
+
+/// Materialise a full direction (tests / analysis only — O(d) memory,
+/// exactly what the AOT path avoids).
+pub fn rademacher_vec(seed: u32, d: usize) -> Vec<f32> {
+    (0..d as u32).map(|i| rademacher_sign(seed, i)).collect()
+}
+
+/// SplitMix64: the deterministic generator behind all synthetic data.
+/// (Distinct from the perturbation hash on purpose — data streams and
+/// perturbation streams must never alias.)
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed.wrapping_add(0x9E37_79B9_7F4A_7C15) }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[0, n)`.
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        self.next_u64() % n.max(1)
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    #[inline]
+    pub fn unit(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Standard normal via Box-Muller (analysis-side only; the AOT graphs
+    /// use jax.random and are NOT parity-matched with this).
+    pub fn gauss(&mut self) -> f64 {
+        let u1 = self.unit().max(1e-300);
+        let u2 = self.unit();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Same goldens as python/tests/test_rademacher.py — drift on either
+    /// side breaks forward/update direction agreement.
+    #[test]
+    fn goldens_mix32() {
+        for (x, want) in [
+            (0u32, 0x0u32),
+            (1, 0x514E_28B7),
+            (42, 0x087F_CD5C),
+            (0xDEAD_BEEF, 0x0DE5_C6A9),
+            (0xFFFF_FFFF, 0x81F1_6F39),
+        ] {
+            assert_eq!(mix32(x), want, "mix32({x:#x})");
+        }
+    }
+
+    #[test]
+    fn goldens_signs_seed7() {
+        let want = [
+            1.0f32, -1.0, 1.0, 1.0, 1.0, 1.0, -1.0, 1.0, 1.0, 1.0, 1.0, 1.0,
+            1.0, -1.0, -1.0, -1.0,
+        ];
+        for (i, w) in want.iter().enumerate() {
+            assert_eq!(rademacher_sign(7, i as u32), *w, "idx {i}");
+        }
+    }
+
+    #[test]
+    fn signs_roughly_balanced() {
+        let v = rademacher_vec(99, 65536);
+        let mean: f32 = v.iter().sum::<f32>() / v.len() as f32;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+    }
+
+    #[test]
+    fn streams_decorrelated() {
+        let a = rademacher_vec(stream_seed(5, 1), 16384);
+        let b = rademacher_vec(stream_seed(5, 2), 16384);
+        let dot: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot / 16384.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn splitmix_deterministic() {
+        let mut a = SplitMix64::new(123);
+        let mut b = SplitMix64::new(123);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = SplitMix64::new(124);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn gauss_moments() {
+        let mut r = SplitMix64::new(7);
+        let n = 20000;
+        let xs: Vec<f64> = (0..n).map(|_| r.gauss()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+}

@@ -1,0 +1,431 @@
+//! Optimizer-level invariants over the real tiny artifacts: the FZOO
+//! update must decompose exactly into the paper's Algorithm-1 algebra,
+//! runs must be bit-replayable from seeds, and the accounting the
+//! experiment harness relies on (forwards per step) must match what the
+//! optimizers actually execute.
+
+use fzoo::coordinator::{TrainOpts, Trainer};
+use fzoo::data::{Batcher, TaskKind};
+use fzoo::optim::{sample_std, step_seed, Objective, OptimizerKind};
+use fzoo::optim::{Fzoo, FzooMode, Optimizer};
+use fzoo::runtime::{
+    lit_scalar_f32, lit_scalar_u32, scalar_f32, to_vec_f32, Runtime, Session,
+};
+use fzoo::zorng::{rademacher_vec, stream_seed};
+
+fn runtime() -> Runtime {
+    Runtime::load("artifacts").expect("run `make artifacts` first")
+}
+
+/// Probe the fused losses executable directly (same inputs the optimizer
+/// uses) so tests can recompute what the optimizer should have done.
+fn probe_losses(rt: &Runtime, s: &Session, task: TaskKind, seed: u32, eps: f32) -> Vec<f32> {
+    let t = task.instantiate(s.model_config(), 0).unwrap();
+    let mut b = Batcher::new(t, &s.entry.config, 0);
+    let batch = b.next_train();
+    probe_batch(rt, s, &batch, seed, eps)
+}
+
+/// Probe with an explicit batch (needed when recomputing a mid-run step,
+/// where the batcher has already advanced).
+fn probe_batch(
+    rt: &Runtime,
+    s: &Session,
+    batch: &fzoo::data::Batch,
+    seed: u32,
+    eps: f32,
+) -> Vec<f32> {
+    let (ids, labels, mask) = batch.literals().unwrap();
+    let exe = rt.executable(&s.model, "fzoo_losses").unwrap();
+    let mut inputs = s.param_inputs().unwrap();
+    inputs.extend([ids, labels, mask]);
+    inputs.push(lit_scalar_u32(seed));
+    inputs.push(lit_scalar_f32(eps));
+    to_vec_f32(&exe.run(&inputs).unwrap()[0]).unwrap()
+}
+
+/// The FZOO step must equal theta' = theta - sum_i coeff_i * u_i with
+/// coeff_i = eta (l_i - l_0) / (N sigma) and u_i regenerated from the
+/// step seed — Algorithm 1 verified end to end through the AOT graphs.
+#[test]
+fn fzoo_step_is_exactly_algorithm_one() {
+    let rt = runtime();
+    let mut s = Session::open(&rt, "tiny-enc").unwrap();
+    let theta0 = s.trainable().to_vec();
+    let d = theta0.len();
+
+    let (eta, eps, run_seed, step) = (1e-2f32, 1e-3f32, 5u64, 3u64);
+    let seed = step_seed(run_seed, step);
+    let losses = probe_losses(&rt, &s, TaskKind::Sst2, seed, eps);
+    let n = losses.len() - 1;
+    let sigma = sample_std(&losses[1..]);
+    assert!(sigma > 0.0);
+
+    let task = TaskKind::Sst2.instantiate(s.model_config(), 0).unwrap();
+    let mut batcher = Batcher::new(task, &s.entry.config, 0);
+    let batch = batcher.next_train();
+    let mut opt = Fzoo::new(eta, eps, n, FzooMode::Parallel, Objective::Ce, run_seed);
+    let out = opt.step(&rt, &mut s, &batch, step).unwrap();
+
+    // reported telemetry matches the independent probe
+    assert!((out.loss - losses[0]).abs() < 1e-5, "l0 mismatch");
+    assert!(
+        (out.sigma.unwrap() - sigma).abs() < 1e-5 * sigma.max(1.0),
+        "sigma mismatch: {} vs {sigma}",
+        out.sigma.unwrap()
+    );
+    assert_eq!(out.forwards, (n + 1) as f64);
+
+    // the parameter walk matches the closed-form update
+    let mut want = theta0.clone();
+    for i in 0..n {
+        let c = eta * (losses[i + 1] - losses[0]) / (n as f32 * sigma);
+        let u = rademacher_vec(stream_seed(seed, (i + 1) as u32), d);
+        for (w, ui) in want.iter_mut().zip(&u) {
+            *w -= c * ui;
+        }
+    }
+    let max = s
+        .trainable()
+        .iter()
+        .zip(&want)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max < 1e-6, "Algorithm 1 algebra broken: max diff {max}");
+    // and it actually moved
+    let moved: f32 = s
+        .trainable()
+        .iter()
+        .zip(&theta0)
+        .map(|(a, b)| (a - b).abs())
+        .sum();
+    assert!(moved > 0.0, "update was a no-op");
+}
+
+/// Prop 3.2 consequence: the sigma-normalized step length is ~ eta/eps *
+/// sqrt(d N/(N-1)) / N * ||coeff-direction||; concretely ||dtheta||^2 must
+/// match d * sum_i c_i^2 up to the (small, zero-mean) u_i cross terms.
+#[test]
+fn fzoo_step_norm_matches_rademacher_geometry() {
+    let rt = runtime();
+    let mut s = Session::open(&rt, "tiny-enc").unwrap();
+    let theta0 = s.trainable().to_vec();
+    let d = theta0.len();
+    let (eta, eps, run_seed, step) = (1e-2f32, 1e-3f32, 11u64, 1u64);
+    let seed = step_seed(run_seed, step);
+    let losses = probe_losses(&rt, &s, TaskKind::Sst2, seed, eps);
+    let n = losses.len() - 1;
+    let sigma = sample_std(&losses[1..]);
+
+    let task = TaskKind::Sst2.instantiate(s.model_config(), 0).unwrap();
+    let mut batcher = Batcher::new(task, &s.entry.config, 0);
+    let batch = batcher.next_train();
+    let mut opt = Fzoo::new(eta, eps, n, FzooMode::Parallel, Objective::Ce, run_seed);
+    opt.step(&rt, &mut s, &batch, step).unwrap();
+
+    let dtheta_sq: f64 = s
+        .trainable()
+        .iter()
+        .zip(&theta0)
+        .map(|(a, b)| ((a - b) as f64).powi(2))
+        .sum();
+    let c_sq: f64 = (0..n)
+        .map(|i| ((eta * (losses[i + 1] - losses[0]) / (n as f32 * sigma)) as f64).powi(2))
+        .sum();
+    let ideal = d as f64 * c_sq;
+    // cross terms are O(sqrt(d)) vs the O(d) diagonal: 25% slack is generous
+    assert!(
+        (dtheta_sq - ideal).abs() < 0.25 * ideal,
+        "||dtheta||^2 = {dtheta_sq:.3e}, d*sum c^2 = {ideal:.3e}"
+    );
+}
+
+/// set_lr_scale(0) (the schedule hook) must freeze the parameters while
+/// still reporting telemetry.
+#[test]
+fn zero_lr_scale_freezes_parameters() {
+    let rt = runtime();
+    let mut s = Session::open(&rt, "tiny-enc").unwrap();
+    let theta0 = s.trainable().to_vec();
+    let task = TaskKind::Sst2.instantiate(s.model_config(), 0).unwrap();
+    let mut batcher = Batcher::new(task, &s.entry.config, 0);
+    let batch = batcher.next_train();
+    let n = s.entry.config.n_pert;
+    let mut opt = Fzoo::new(1e-2, 1e-3, n, FzooMode::Parallel, Objective::Ce, 0);
+    opt.set_lr_scale(0.0);
+    let out = opt.step(&rt, &mut s, &batch, 0).unwrap();
+    assert!(out.loss.is_finite());
+    assert_eq!(s.trainable(), &theta0[..], "eta=0 step must not move theta");
+}
+
+/// The min_sigma guard: a degenerate (flat) probe batch must skip the
+/// update rather than divide by ~0 and explode.
+#[test]
+fn degenerate_sigma_skips_update() {
+    let rt = runtime();
+    let mut s = Session::open(&rt, "tiny-enc").unwrap();
+    let theta0 = s.trainable().to_vec();
+    let task = TaskKind::Sst2.instantiate(s.model_config(), 0).unwrap();
+    let mut batcher = Batcher::new(task, &s.entry.config, 0);
+    let batch = batcher.next_train();
+    let n = s.entry.config.n_pert;
+    let mut opt = Fzoo::new(1e-2, 1e-3, n, FzooMode::Parallel, Objective::Ce, 0);
+    opt.min_sigma = f32::MAX; // force the guard
+    let out = opt.step(&rt, &mut s, &batch, 0).unwrap();
+    assert_eq!(s.trainable(), &theta0[..], "guarded step must be a no-op");
+    assert_eq!(out.forwards, (n + 1) as f64, "probe forwards still happened");
+}
+
+/// FZOO-R (Algorithm 2): the second step's sigma must be the std of the
+/// current and previous probe losses concatenated.
+#[test]
+fn fzoo_r_sigma_concatenates_previous_losses() {
+    let rt = runtime();
+    let mut s = Session::open(&rt, "tiny-enc").unwrap();
+    let (eta, eps, run_seed) = (1e-3f32, 1e-3f32, momo());
+    fn momo() -> u64 {
+        21
+    }
+    let task = TaskKind::Sst2.instantiate(s.model_config(), 0).unwrap();
+    let mut batcher = Batcher::new(task, &s.entry.config, 0);
+
+    let n = s.entry.config.n_pert;
+    let mut opt = Fzoo::new(eta, eps, n, FzooMode::Reuse, Objective::Ce, run_seed);
+
+    // step 0: sigma == std(l^0) (no history yet); capture l^0 first
+    let l_prev = probe_losses(&rt, &s, TaskKind::Sst2, step_seed(run_seed, 0), eps);
+    let b0 = batcher.next_train();
+    let out0 = opt.step(&rt, &mut s, &b0, 0).unwrap();
+    assert!(
+        (out0.sigma.unwrap() - sample_std(&l_prev[1..])).abs() < 1e-5,
+        "first FZOO-R step must behave like plain FZOO"
+    );
+
+    // step 1: probe the *new* theta on the *same batch* the optimizer
+    // will see, with step 1's seed; then verify sigma is std(l^1 ++ l^0)
+    let b1 = batcher.next_train();
+    let l_curr = probe_batch(&rt, &s, &b1, step_seed(run_seed, 1), eps);
+    let out1 = opt.step(&rt, &mut s, &b1, 1).unwrap();
+    let mut all = l_curr[1..].to_vec();
+    all.extend_from_slice(&l_prev[1..]);
+    let want = sample_std(&all);
+    let got = out1.sigma.unwrap();
+    assert!(
+        (got - want).abs() < 1e-4 * want.max(1.0),
+        "FZOO-R sigma {got} != std(curr ++ prev) {want}"
+    );
+}
+
+/// Bit-level replay: the same (model, task, optimizer, seed) trained twice
+/// must produce the identical loss trajectory — the whole training path is
+/// a pure function of the seeds.
+#[test]
+fn training_is_bit_replayable() {
+    let rt = runtime();
+    let run = || {
+        let mut s = Session::open(&rt, "tiny-enc").unwrap();
+        let task = TaskKind::Rte.instantiate(s.model_config(), 3).unwrap();
+        let opts = TrainOpts {
+            steps: 6,
+            run_seed: 3,
+            eval_every: 0,
+            ..Default::default()
+        };
+        let mut tr = Trainer::with_opts(
+            &rt,
+            &mut s,
+            task,
+            OptimizerKind::fzoo(1e-3, 1e-3),
+            opts,
+        );
+        let h = tr.train(6).unwrap();
+        (
+            h.records.iter().map(|r| r.loss).collect::<Vec<_>>(),
+            s.trainable().to_vec(),
+        )
+    };
+    let (l1, t1) = run();
+    let (l2, t2) = run();
+    assert_eq!(l1, l2, "loss trajectory must replay exactly");
+    assert_eq!(t1, t2, "final parameters must replay exactly");
+}
+
+/// Forward accounting drives every speed claim in the paper tables: the
+/// History counters must equal steps x forwards_per_step for each family.
+#[test]
+fn forward_accounting_matches_family() {
+    let rt = runtime();
+    let n_pert = Session::open(&rt, "tiny-enc").unwrap().entry.config.n_pert;
+    for (kind, per) in [
+        (OptimizerKind::fzoo(1e-3, 1e-3), (n_pert + 1) as f64),
+        (OptimizerKind::mezo(1e-4, 1e-3), 2.0),
+    ] {
+        let mut s = Session::open(&rt, "tiny-enc").unwrap();
+        let task = TaskKind::Sst2.instantiate(s.model_config(), 0).unwrap();
+        let opts = TrainOpts {
+            steps: 4,
+            eval_every: 0,
+            ..Default::default()
+        };
+        let mut tr = Trainer::with_opts(&rt, &mut s, task, kind, opts);
+        let h = tr.train(4).unwrap();
+        let total = h.records.last().unwrap().forwards;
+        assert_eq!(total, per * 4.0, "forwards accounting for {per}");
+    }
+    // Adam: 1 fwd + 1 bwd == 4 forward-equivalents (paper Fig. 1 convention)
+    let mut s = Session::open(&rt, "tiny-enc").unwrap();
+    let task = TaskKind::Sst2.instantiate(s.model_config(), 0).unwrap();
+    let opts = TrainOpts {
+        steps: 4,
+        eval_every: 0,
+        ..Default::default()
+    };
+    let mut tr = Trainer::with_opts(&rt, &mut s, task, OptimizerKind::adam(1e-3), opts);
+    let h = tr.train(4).unwrap();
+    assert_eq!(h.records.last().unwrap().forward_equiv, 16.0);
+}
+
+/// MeZO's two-sided probe at eps and the projected-gradient coefficient
+/// must be antisymmetric in the seed direction: stepping with coeff c then
+/// -c along the same seed restores theta exactly.
+#[test]
+fn gauss_update_inverts_with_negated_coeff() {
+    let rt = runtime();
+    let s = Session::open(&rt, "tiny-enc").unwrap();
+    let upd = rt.executable("tiny-enc", "gauss_update").unwrap();
+    let theta0 = s.trainable().to_vec();
+    let fwd = upd
+        .run(&[
+            s.trainable_lit().unwrap(),
+            lit_scalar_u32(123),
+            lit_scalar_f32(0.37),
+        ])
+        .unwrap();
+    let back = upd
+        .run(&[fwd.into_iter().next().unwrap(), lit_scalar_u32(123), lit_scalar_f32(-0.37)])
+        .unwrap();
+    let got = to_vec_f32(&back[0]).unwrap();
+    let max = got
+        .iter()
+        .zip(&theta0)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max < 1e-5, "c then -c must round-trip theta (max {max})");
+}
+
+// ---------------------------------------------------------------------------
+// failure injection
+// ---------------------------------------------------------------------------
+
+#[test]
+fn runtime_load_missing_dir_errors() {
+    let err = match Runtime::load("/definitely/not/here") {
+        Ok(_) => panic!("loading a missing dir must fail"),
+        Err(e) => e,
+    };
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("manifest") || msg.contains("artifacts") || msg.contains("No such"),
+        "unhelpful error: {msg}"
+    );
+}
+
+#[test]
+fn unknown_model_and_exe_error_cleanly() {
+    let rt = runtime();
+    assert!(Session::open(&rt, "gpt5-prox").is_err());
+    assert!(rt.executable("tiny-enc", "does_not_exist").is_err());
+}
+
+#[test]
+fn wrong_coeff_length_is_rejected() {
+    let rt = runtime();
+    let s = Session::open(&rt, "tiny-enc").unwrap();
+    let upd = rt.executable("tiny-enc", "zo_update").unwrap();
+    // zo_update expects coeffs[n_pert]; hand it 3 instead
+    let bad = fzoo::runtime::lit_f32(&[0.1, 0.2, 0.3], &[3]).unwrap();
+    let res = upd.run(&[s.trainable_lit().unwrap(), lit_scalar_u32(1), bad]);
+    assert!(res.is_err(), "shape mismatch must surface as an error");
+}
+
+#[test]
+fn f1_objective_unavailable_on_cls_artifacts() {
+    // tiny-enc has no fwd_f1 graph: requesting the non-differentiable
+    // objective must fail with a useful message, not a panic.
+    let rt = runtime();
+    let mut s = Session::open(&rt, "tiny-enc").unwrap();
+    let task = TaskKind::Sst2.instantiate(s.model_config(), 0).unwrap();
+    let mut batcher = Batcher::new(task, &s.entry.config, 0);
+    let batch = batcher.next_train();
+    let n = s.entry.config.n_pert;
+    let mut opt = Fzoo::new(1e-3, 1e-3, n, FzooMode::Parallel, Objective::F1, 0);
+    assert!(opt.step(&rt, &mut s, &batch, 0).is_err());
+}
+
+/// eval_logits must agree with the loss graph's implied prediction:
+/// reusing the same batch, the argmax class of the logits determines
+/// accuracy; check logits are finite and the right shape.
+#[test]
+fn eval_logits_finite_and_shaped() {
+    let rt = runtime();
+    let s = Session::open(&rt, "tiny-enc").unwrap();
+    let cfg = &s.entry.config;
+    let task = TaskKind::Sst2.instantiate(s.model_config(), 0).unwrap();
+    let b = Batcher::new(task, cfg, 0);
+    let (ids, _labels, mask) = b.eval_batch(0).literals().unwrap();
+    let exe = rt.executable("tiny-enc", "eval_logits").unwrap();
+    let out = exe.run(&[s.trainable_lit().unwrap(), ids, mask]).unwrap();
+    let logits = to_vec_f32(&out[0]).unwrap();
+    assert_eq!(logits.len(), cfg.batch * cfg.n_classes);
+    assert!(logits.iter().all(|x| x.is_finite()));
+}
+
+/// fwd_loss is a pure function: identical inputs give the identical
+/// scalar (the PJRT CPU backend must not introduce nondeterminism).
+#[test]
+fn fwd_loss_is_pure() {
+    let rt = runtime();
+    let s = Session::open(&rt, "tiny-enc").unwrap();
+    let exe = rt.executable("tiny-enc", "fwd_loss").unwrap();
+    let task = TaskKind::Sst2.instantiate(s.model_config(), 0).unwrap();
+    let b = Batcher::new(task, &s.entry.config, 0);
+    let mut vals = Vec::new();
+    for _ in 0..3 {
+        let (ids, labels, mask) = b.eval_batch(0).literals().unwrap();
+        let out = exe
+            .run(&[s.trainable_lit().unwrap(), ids, labels, mask])
+            .unwrap();
+        vals.push(scalar_f32(&out[0]).unwrap());
+    }
+    assert_eq!(vals[0], vals[1]);
+    assert_eq!(vals[1], vals[2]);
+}
+
+/// FZOO-R (Algorithm 2) must halve the probe count when the artifacts
+/// carry the half-N graphs (opt125-prox ships fzoo_losses_n4).
+#[test]
+fn fzoo_r_halves_probe_forwards_when_supported() {
+    let rt = runtime();
+    if rt.manifest.model("opt125-prox").is_err() {
+        return; // reduced artifact set
+    }
+    let s = Session::open(&rt, "opt125-prox").unwrap();
+    let n_pert = s.entry.config.n_pert;
+    let kind = fzoo::optim::OptimizerKind::Fzoo {
+        eta: 1e-3,
+        eps: 1e-3,
+        mode: fzoo::optim::FzooModeCfg::Reuse,
+        n: None,
+        objective: Objective::Ce,
+    };
+    let opt = kind.build(&s, 0);
+    assert_eq!(
+        opt.forwards_per_step(),
+        (n_pert / 2 + 1) as f64,
+        "FZOO-R must run half the probes"
+    );
+    // tiny-enc has no n2 graphs: falls back to full N
+    let st = Session::open(&rt, "tiny-enc").unwrap();
+    let opt_t = kind.build(&st, 0);
+    assert_eq!(opt_t.forwards_per_step(), (st.entry.config.n_pert + 1) as f64);
+}

@@ -1,0 +1,215 @@
+//! Seeded property tests on coordinator invariants (in-tree proptest
+//! substitute, `util::proptest`). These cover the pure-Rust logic —
+//! routing/batching/state invariants that must hold for every input.
+
+use fzoo::coordinator::LrSchedule;
+use fzoo::data::{Batcher, Split, TaskKind};
+use fzoo::optim::{sample_std, step_seed};
+use fzoo::runtime::ModelConfig;
+use fzoo::util::json;
+use fzoo::util::proptest::{check, Gen};
+use fzoo::zorng::{mix32, rademacher_sign, stream_seed, SplitMix64};
+
+fn cfg_with(g: &mut Gen, head: &str) -> ModelConfig {
+    ModelConfig {
+        name: "prop".into(),
+        arch: if g.bool() { "encoder" } else { "decoder" }.into(),
+        vocab: *g.pick(&[128usize, 256, 512, 2048]),
+        dim: 32,
+        layers: 2,
+        heads: 2,
+        seq: *g.pick(&[16usize, 32, 64]),
+        n_classes: 8,
+        head: head.into(),
+        batch: *g.pick(&[2usize, 4, 8]),
+        n_pert: 4,
+        mlp_ratio: 4,
+        n_prefix: 0,
+        extra_n: vec![],
+    }
+}
+
+#[test]
+fn prop_examples_deterministic_and_in_vocab() {
+    check("examples_valid", 100, |g| {
+        let kind = *g.pick(&TaskKind::ALL);
+        let head = if kind.is_span() { "span" } else { "cls" };
+        let cfg = cfg_with(g, head);
+        let task = kind.instantiate(&cfg, g.u64(0, 1 << 20)).unwrap();
+        let split = if g.bool() { Split::Train } else { Split::Eval };
+        let ix = g.u64(0, 1 << 30);
+        let a = task.example(split, ix);
+        let b = task.example(split, ix);
+        assert_eq!(a.ids, b.ids, "{kind:?} nondeterministic");
+        assert_eq!(a.mask, b.mask);
+        for (&t, &m) in a.ids.iter().zip(&a.mask) {
+            assert!((t as usize) < cfg.vocab, "{kind:?}: token {t} >= vocab");
+            assert!(m == 0.0 || m == 1.0);
+            if m == 0.0 {
+                assert_eq!(t, 0, "{kind:?}: non-PAD under mask");
+            }
+        }
+        // mask is a prefix (no holes): once 0, stays 0
+        let mut seen_zero = false;
+        for &m in &a.mask {
+            if m == 0.0 {
+                seen_zero = true;
+            } else {
+                assert!(!seen_zero, "{kind:?}: mask hole");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_batcher_epoch_partitions_dataset() {
+    check("batcher_partition", 40, |g| {
+        let cfg = cfg_with(g, "cls");
+        let k = g.usize(2, 8);
+        let task = TaskKind::Sst2
+            .instantiate(&cfg, g.u64(0, 99))
+            .unwrap()
+            .with_k_shot(k);
+        let n = task.train_len();
+        let mut b = Batcher::new(task, &cfg, g.u64(0, 99));
+        // one full epoch = ceil(n / batch) batches covers each index once
+        // (wrap only at the boundary)
+        let mut count = 0usize;
+        let epoch0 = b.epoch();
+        while b.epoch() == epoch0 {
+            let batch = b.next_train();
+            count += batch.b;
+            if count > 4 * n {
+                panic!("epoch never advanced");
+            }
+        }
+        // within batch_size of n (the wrap can pull a few from next epoch)
+        assert!(count >= n && count <= n + cfg.batch, "count {count}, n {n}");
+    });
+}
+
+#[test]
+fn prop_sample_std_invariances() {
+    check("std_invariance", 200, |g| {
+        let n = g.usize(2, 32);
+        let xs = g.vec_f32(n, -5.0, 5.0);
+        let s = sample_std(&xs);
+        assert!(s >= 0.0 && s.is_finite());
+        // shift invariance
+        let shifted: Vec<f32> = xs.iter().map(|x| x + 3.25).collect();
+        assert!((sample_std(&shifted) - s).abs() < 1e-3 + 1e-3 * s);
+        // scale equivariance
+        let scaled: Vec<f32> = xs.iter().map(|x| x * 2.0).collect();
+        assert!((sample_std(&scaled) - 2.0 * s).abs() < 1e-3 + 1e-3 * s);
+    });
+}
+
+#[test]
+fn prop_hash_streams_bit_balanced() {
+    check("hash_balance", 20, |g| {
+        let seed = g.u32();
+        let mut sum = 0f64;
+        for i in 0..4096u32 {
+            sum += rademacher_sign(seed, i) as f64;
+        }
+        assert!((sum / 4096.0).abs() < 0.10, "seed {seed}: bias {sum}");
+    });
+}
+
+#[test]
+fn prop_stream_and_step_seeds_injective_in_practice() {
+    check("seed_collisions", 10, |g| {
+        let base = g.u32();
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..256 {
+            seen.insert(stream_seed(base, i));
+        }
+        assert!(seen.len() >= 255, "stream seed collisions");
+        let mut seen2 = std::collections::HashSet::new();
+        for s in 0..512u64 {
+            seen2.insert(step_seed(base as u64, s));
+        }
+        assert!(seen2.len() >= 510, "step seed collisions");
+    });
+}
+
+#[test]
+fn prop_mix32_bijective_on_samples() {
+    check("mix32_inj", 50, |g| {
+        let a = g.u32();
+        let b = g.u32();
+        if a != b {
+            assert_ne!(mix32(a), mix32(b), "mix32 collision {a} {b}");
+        }
+    });
+}
+
+#[test]
+fn prop_schedule_scale_bounded() {
+    check("schedule_bounds", 100, |g| {
+        let total = g.u64(2, 1000);
+        let step = g.u64(0, total - 1);
+        let scheds = [
+            LrSchedule::Constant,
+            LrSchedule::Linear { end: g.f32(0.0, 1.0) },
+            LrSchedule::Cosine { min: g.f32(0.0, 0.9) },
+            LrSchedule::Warmup { steps: g.u64(1, total) },
+        ];
+        for s in scheds {
+            let v = s.scale(step, total);
+            assert!(
+                (0.0..=1.0 + 1e-6).contains(&v),
+                "{s:?} scale({step},{total}) = {v}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    check("json_roundtrip", 100, |g| {
+        // build a random JSON value tree
+        fn build(g: &mut Gen, depth: usize) -> json::Value {
+            match if depth == 0 { g.usize(0, 3) } else { g.usize(0, 5) } {
+                0 => json::Value::Null,
+                1 => json::Value::Bool(g.bool()),
+                2 => json::Value::Num((g.i64(-1_000_000, 1_000_000)) as f64),
+                3 => {
+                    let n = g.usize(0, 8);
+                    json::Value::Str(
+                        (0..n).map(|_| *g.pick(&['a', 'β', '"', '\\', '\n', 'z'])).collect(),
+                    )
+                }
+                4 => json::Value::Arr(
+                    (0..g.usize(0, 4)).map(|_| build(g, depth - 1)).collect(),
+                ),
+                _ => json::Value::Obj(
+                    (0..g.usize(0, 4))
+                        .map(|i| (format!("k{i}"), build(g, depth - 1)))
+                        .collect(),
+                ),
+            }
+        }
+        let v = build(g, 3);
+        let text = v.to_string();
+        let back = json::parse(&text).unwrap_or_else(|e| panic!("reparse {text}: {e}"));
+        assert_eq!(v, back, "roundtrip failed for {text}");
+    });
+}
+
+#[test]
+fn prop_splitmix_streams_do_not_collide() {
+    check("splitmix_streams", 30, |g| {
+        let s1 = g.u64(0, u64::MAX / 2);
+        let s2 = s1 + 1 + g.u64(0, 1000);
+        let mut a = SplitMix64::new(s1);
+        let mut b = SplitMix64::new(s2);
+        let mut equal = 0;
+        for _ in 0..64 {
+            if a.next_u64() == b.next_u64() {
+                equal += 1;
+            }
+        }
+        assert!(equal <= 1, "adjacent-seed streams collide");
+    });
+}
