@@ -1,0 +1,16 @@
+PY ?= python3
+
+.PHONY: artifacts check pytest
+
+# AOT-compile the model graphs + manifest (python/compile/aot.py).
+# Incremental; use FORCE=1 to rebuild everything.
+artifacts:
+	cd python && $(PY) -m compile.aot --out ../artifacts $(if $(FORCE),--force,)
+
+# Pre-PR gate: formatting, lints (warnings are errors), tier-1 build+tests.
+check:
+	./scripts/check.sh
+
+# Build-time (Python) test suite.
+pytest:
+	cd python && $(PY) -m pytest tests -q

@@ -61,7 +61,18 @@ fn main() -> Result<()> {
     );
     let h = trainer.train(steps)?;
 
+    // checkpoint boundary: the trained parameters cross device -> host
+    // exactly once, here (the d-sized vector never moved during steps)
+    drop(trainer);
+    let ckpt: Vec<u8> = session
+        .trainable_host()?
+        .iter()
+        .flat_map(|f| f.to_le_bytes())
+        .collect();
     std::fs::create_dir_all("reports")?;
+    let ckpt_path = format!("reports/e2e_{model}.theta.bin");
+    std::fs::write(&ckpt_path, ckpt)?;
+    println!("checkpoint ({} f32) -> {ckpt_path}", d);
     let path = format!("reports/e2e_{model}.csv");
     let mut csv = String::from("step,forward_passes,loss,sigma,wall_ms\n");
     for r in &h.records {

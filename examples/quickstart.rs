@@ -52,5 +52,15 @@ fn main() -> Result<()> {
         history.records.first().and_then(|r| r.sigma).unwrap_or(0.0),
         history.records.last().and_then(|r| r.sigma).unwrap_or(0.0),
     );
+
+    // 4. during training the parameters stayed resident on device; export
+    //    is an explicit device -> host sync boundary
+    drop(trainer);
+    let theta = session.trainable_host()?;
+    println!(
+        "exported {} parameters (explicit sync; steps themselves never \
+         round-tripped theta through the host)",
+        theta.len()
+    );
     Ok(())
 }

@@ -35,10 +35,18 @@ from .steps import executables
 DTYPE_NAMES = {"float32": "f32", "int32": "i32", "uint32": "u32"}
 
 
-def to_hlo_text(lowered) -> str:
+MANIFEST_VERSION = 2
+
+
+def to_hlo_text(lowered, n_outputs: int) -> str:
+    """Lower to HLO text. Manifest v2 root contract: single-output graphs
+    get an *array* root (``return_tuple=False``) so the Rust runtime can
+    keep the result on device as a ``DeviceVec`` with no host sync; only
+    multi-output graphs are tuple-rooted (PJRT cannot split a tuple buffer
+    device-side, so those outputs cross the host when read)."""
     mlir_mod = lowered.compiler_ir("stablehlo")
     comp = xc._xla.mlir.mlir_module_to_xla_computation(
-        str(mlir_mod), use_tuple_args=False, return_tuple=True
+        str(mlir_mod), use_tuple_args=False, return_tuple=n_outputs > 1
     )
     return comp.as_hlo_text()
 
@@ -74,12 +82,13 @@ def lower_model(cfg, out_dir: str, manifest: dict, verbose=True):
         t0 = time.time()
         args = [s for _, s in specs]
         lowered = jax.jit(fn).lower(*args)
-        text = to_hlo_text(lowered)
+        # output specs from the lowered signature (also decides the root
+        # kind: 1 output -> array root, >1 -> tuple root)
+        outs = jax.eval_shape(fn, *args)
+        text = to_hlo_text(lowered, len(outs))
         fname = f"{cfg.name}/{exe_name}.hlo.txt"
         with open(os.path.join(out_dir, fname), "w") as f:
             f.write(text)
-        # output specs from the lowered signature
-        outs = jax.eval_shape(fn, *args)
         entry["executables"][exe_name] = {
             "file": fname,
             "inputs": [spec_json(n, s) for n, s in specs],
@@ -113,11 +122,17 @@ def main() -> None:
     out_dir = os.path.abspath(args.out)
     os.makedirs(out_dir, exist_ok=True)
     mpath = os.path.join(out_dir, "manifest.json")
-    manifest = {"version": 1, "models": {}}
+    manifest = {"version": MANIFEST_VERSION, "models": {}}
     if os.path.exists(mpath) and not args.force:
         with open(mpath) as f:
             manifest = json.load(f)
         manifest.setdefault("models", {})
+        # v1 artifacts were tuple-rooted everywhere; the root contract
+        # changed, so incremental reuse across versions is unsound.
+        if manifest.get("version", 1) < MANIFEST_VERSION:
+            print("manifest is pre-v2 (tuple roots): full rebuild", flush=True)
+            manifest = {"version": MANIFEST_VERSION, "models": {}}
+        manifest["version"] = MANIFEST_VERSION
 
     src_mtime = max(
         os.path.getmtime(os.path.join(r, f))

@@ -2,8 +2,10 @@
 
 Each function returns ``(fn, input_specs)`` where ``fn`` is the pure JAX
 function to lower and ``input_specs`` is the ordered list of
-``(name, ShapeDtypeStruct)`` the Rust runtime feeds at execute time. All
-functions return tuples (lowered with ``return_tuple=True``).
+``(name, ShapeDtypeStruct)`` the Rust runtime binds *by name* at execute
+time. Root contract (manifest v2): single-output graphs lower with an
+array root (``return_tuple=False``) so the Rust runtime can keep the
+result on device; only multi-output graphs are tuple-rooted.
 
 The contract with the Rust coordinator (rust/src/optim):
 
@@ -187,7 +189,11 @@ def make_gauss_update_scaled(cfg: ModelConfig):
 
 
 def make_adam_zo_update(cfg: ModelConfig):
-    """ZO-Adam baseline [49]: moments are explicit d-vector state."""
+    """ZO-Adam baseline [49]: moments are explicit d-vector state.
+
+    Legacy fused form (3 outputs -> tuple root -> one host round trip per
+    step). The split single-output graphs below keep the whole step device
+    resident; this one is retained for v1-artifact compatibility."""
     d = layout(cfg).d
 
     def fn(theta, m, v, seed, coeff, lr, beta1, beta2, eps_adam, t):
@@ -204,8 +210,46 @@ def make_adam_zo_update(cfg: ModelConfig):
                 ("t", _sds((), F32))]
 
 
+def make_adam_zo_m(cfg: ModelConfig):
+    """ZO-Adam first moment, split out as a single-output graph so the
+    moment state lives on device (array root, no host sync)."""
+    d = layout(cfg).d
+
+    def fn(m, seed, coeff, beta1):
+        return (beta1 * m + (1.0 - beta1) * coeff * _gauss(seed, d),)
+    return fn, [("m", _sds((d,), F32)), ("seed", _sds((), U32)),
+                ("coeff", _sds((), F32)), ("beta1", _sds((), F32))]
+
+
+def make_adam_zo_v(cfg: ModelConfig):
+    """ZO-Adam second moment (single-output, device resident)."""
+    d = layout(cfg).d
+
+    def fn(v, seed, coeff, beta2):
+        g = coeff * _gauss(seed, d)
+        return (beta2 * v + (1.0 - beta2) * g * g,)
+    return fn, [("v", _sds((d,), F32)), ("seed", _sds((), U32)),
+                ("coeff", _sds((), F32)), ("beta2", _sds((), F32))]
+
+
+def make_adam_zo_step(cfg: ModelConfig):
+    """ZO-Adam parameter step from already-updated moments (single output;
+    exactly the math of the fused graph's first output)."""
+    d = layout(cfg).d
+
+    def fn(theta, m, v, lr, beta1, beta2, eps_adam, t):
+        mh = m / (1.0 - beta1 ** t)
+        vh = v / (1.0 - beta2 ** t)
+        return (theta - lr * mh / (jnp.sqrt(vh) + eps_adam),)
+    return fn, [_theta_spec(cfg), ("m", _sds((d,), F32)), ("v", _sds((d,), F32)),
+                ("lr", _sds((), F32)), ("beta1", _sds((), F32)),
+                ("beta2", _sds((), F32)), ("eps_adam", _sds((), F32)),
+                ("t", _sds((), F32))]
+
+
 def make_momentum_zo_update(cfg: ModelConfig):
-    """ZO-SGD-MMT baseline [49]."""
+    """ZO-SGD-MMT baseline [49]. Legacy fused form (2 outputs); see
+    ``make_momentum_zo_m`` for the device-resident split."""
     d = layout(cfg).d
 
     def fn(theta, m, seed, coeff, lr, beta):
@@ -215,6 +259,18 @@ def make_momentum_zo_update(cfg: ModelConfig):
     return fn, [_theta_spec(cfg), ("m", _sds((d,), F32)),
                 ("seed", _sds((), U32)), ("coeff", _sds((), F32)),
                 ("lr", _sds((), F32)), ("beta", _sds((), F32))]
+
+
+def make_momentum_zo_m(cfg: ModelConfig):
+    """ZO-SGD-MMT momentum buffer m' = beta * m + coeff * z(seed), split
+    out single-output; the parameter step is then ``sgd_apply(theta, m',
+    lr)`` — both graphs stay device resident."""
+    d = layout(cfg).d
+
+    def fn(m, seed, coeff, beta):
+        return (beta * m + coeff * _gauss(seed, d),)
+    return fn, [("m", _sds((d,), F32)), ("seed", _sds((), U32)),
+                ("coeff", _sds((), F32)), ("beta", _sds((), F32))]
 
 
 def make_grad_loss(cfg: ModelConfig, objective="ce"):
@@ -323,6 +379,17 @@ def make_prefix_gauss_update(cfg: ModelConfig):
                 ("coeff", _sds((), F32))]
 
 
+def make_prefix_sgd_apply(cfg: ModelConfig):
+    """In-graph axpy on the prefix: prefix' = prefix - lr * g. Gives the
+    first-order baselines a device-resident apply in PEFT mode too."""
+    dp = prefix_dim(cfg)
+
+    def fn(prefix, g, lr):
+        return (prefix - lr * g,)
+    return fn, [("prefix", _sds((dp,), F32)), ("g", _sds((dp,), F32)),
+                ("lr", _sds((), F32))]
+
+
 def make_prefix_grad_loss(cfg: ModelConfig, objective="ce"):
     def loss(prefix, base, ids, labels, mask):
         ps = prefix.reshape(1, cfg.n_prefix, cfg.dim)
@@ -351,6 +418,7 @@ def executables(cfg: ModelConfig) -> dict:
             "mezo_losses": make_prefix_mezo_losses(cfg),
             "gauss_update": make_prefix_gauss_update(cfg),
             "grad_loss": make_prefix_grad_loss(cfg),
+            "sgd_apply": make_prefix_sgd_apply(cfg),
         }
         return exes
 
@@ -366,7 +434,11 @@ def executables(cfg: ModelConfig) -> dict:
         "gauss_update": make_gauss_update(cfg),
         "gauss_update_scaled": make_gauss_update_scaled(cfg),
         "adam_zo_update": make_adam_zo_update(cfg),
+        "adam_zo_m": make_adam_zo_m(cfg),
+        "adam_zo_v": make_adam_zo_v(cfg),
+        "adam_zo_step": make_adam_zo_step(cfg),
         "momentum_zo_update": make_momentum_zo_update(cfg),
+        "momentum_zo_m": make_momentum_zo_m(cfg),
         "grad_loss": make_grad_loss(cfg),
         "sgd_apply": make_sgd_apply(cfg),
     }
@@ -374,7 +446,9 @@ def executables(cfg: ModelConfig) -> dict:
         exes[f"fzoo_losses_n{extra}"] = make_fzoo_losses(cfg, extra)
         exes[f"zo_update_n{extra}"] = make_zo_update(cfg, extra)
     if cfg.head == "span":
-        exes["fwd_f1"] = make_fwd_loss(cfg, objective="f1")
+        # named fwd_loss_f1 so the Rust side's uniform `<exe><suffix>`
+        # naming (Objective::suffix) resolves it
+        exes["fwd_loss_f1"] = make_fwd_loss(cfg, objective="f1")
         exes["fzoo_losses_f1"] = make_fzoo_losses(cfg, n, objective="f1")
         exes["mezo_losses_f1"] = make_mezo_losses(cfg, objective="f1")
         exes["hizoo_losses_f1"] = make_hizoo_losses(cfg, objective="f1")

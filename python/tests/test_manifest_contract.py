@@ -71,6 +71,11 @@ class TestManifestOnDisk:
         for name in DEFAULT_SET:
             assert name in manifest["models"], name
 
+    def test_manifest_version_is_v2(self, manifest):
+        # v2 = single-output graphs are array-rooted (device-resident
+        # outputs); the Rust runtime keys its root handling on this
+        assert manifest.get("version", 1) >= 2
+
     def test_d_matches_recomputed_layout(self, manifest):
         for name in DEFAULT_SET:
             entry = manifest["models"][name]
@@ -104,6 +109,23 @@ class TestManifestOnDisk:
             exes = set(entry["executables"])
             if cfg.n_prefix == 0:  # FT artifact set
                 assert {"fzoo_losses", "zo_update", "mezo_losses", "gauss_update"} <= exes, name
+                # device-resident split of the state-carrying baselines
+                assert {"adam_zo_m", "adam_zo_v", "adam_zo_step",
+                        "momentum_zo_m", "sgd_apply"} <= exes, name
+            else:  # PEFT set now carries an in-graph apply too
+                assert "sgd_apply" in exes, name
+
+    def test_single_output_update_graphs_stay_single_output(self, manifest):
+        # the device-resident hot path depends on these staying 1-output
+        # (array root); growing a second output silently re-tuples them
+        for name in DEFAULT_SET:
+            entry = manifest["models"][name]
+            for exe in ("zo_update", "gauss_update", "sgd_apply",
+                        "adam_zo_m", "adam_zo_v", "adam_zo_step",
+                        "momentum_zo_m"):
+                spec = entry["executables"].get(exe)
+                if spec is not None:
+                    assert len(spec["outputs"]) == 1, f"{name}/{exe}"
 
     def test_fzoo_losses_output_is_n_plus_one(self, manifest):
         for name in DEFAULT_SET:

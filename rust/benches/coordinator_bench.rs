@@ -39,8 +39,14 @@ fn main() {
     });
 
     let batch = batcher.next_train();
-    b.run("batch_literals_16x64", || {
-        black_box(batch.literals().unwrap());
+    b.run("batch_literals_build_16x64", || {
+        // clone starts with a cold cache: measures actual tensor assembly
+        let fresh = batch.clone();
+        black_box(fresh.literals().unwrap().0);
+    });
+    b.run("batch_literals_cached_16x64", || {
+        // steady-state hot path: probe/update/eval all reuse these
+        black_box(batch.literals().unwrap().0);
     });
 
     let losses: Vec<f32> = (0..9).map(|i| 1.0 + 0.01 * i as f32).collect();

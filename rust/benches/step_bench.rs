@@ -1,21 +1,29 @@
 //! Per-step hot-path bench — backs Table 5/13 (wallclock per step: Adam vs
 //! MeZO vs FZOO vs FZOO-w/o-parallel) and the §3.3 fused-vs-sequential
-//! speedup claim. Uses the in-tree micro-bench harness (offline build has
-//! no criterion); `cargo bench` runs this binary directly.
+//! speedup claim, plus the device-resident-session comparison: one series
+//! steps on device-resident parameters (the production path), a second
+//! adds the per-step full-vector download/re-upload the pre-binding API
+//! performed, so the host↔device traffic the redesign removed is directly
+//! measurable. Results are recorded to `BENCH_step.json`.
+//!
+//! Uses the in-tree micro-bench harness (offline build has no criterion);
+//! `cargo bench` runs this binary directly.
 
 use fzoo::coordinator::TrainOpts;
 use fzoo::data::TaskKind;
 use fzoo::optim::OptimizerKind;
 use fzoo::runtime::{Runtime, Session};
 use fzoo::util::bench::{black_box, Bench};
+use fzoo::util::json::Value;
 
 fn main() {
-    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    let rt = Runtime::load(dir).expect("run `make artifacts` before cargo bench");
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let rt = Runtime::load(root.join("artifacts")).expect("run `make artifacts` before cargo bench");
 
     let mut b = Bench::new(2, 8);
     println!("== step_bench: per-optimizer wallclock per training step ==");
 
+    let mut ratios: Vec<(String, String, f64)> = Vec::new();
     for model in ["roberta-prox", "opt125-prox"] {
         if rt.manifest.model(model).is_err() {
             eprintln!("skipping {model}: artifacts not built");
@@ -58,5 +66,92 @@ fn main() {
                  {r:.2}x (paper: 1.92x on OPT-125M/CUDA)\n"
             );
         }
+
+        // Device-resident vs legacy host-roundtrip step. `_device` is the
+        // plain hot path (parameters never leave the device); `_hostsync`
+        // downloads the full trainable vector and re-uploads it after
+        // every step — exactly the O(d) traffic the positional
+        // `run(&[Literal])` API paid on each update.
+        let kind = OptimizerKind::by_name("fzoo", 1e-4, 1e-3).unwrap();
+        let mut session = Session::open(&rt, model).unwrap();
+        let task = TaskKind::Sst2
+            .instantiate(session.model_config(), 0)
+            .unwrap();
+        let opts = TrainOpts {
+            steps: 1,
+            eval_batches: 0,
+            ..Default::default()
+        };
+        let mut trainer =
+            fzoo::coordinator::Trainer::with_opts(&rt, &mut session, task, kind, opts);
+        let _ = trainer.train(1).unwrap();
+        let mut step = 1u64;
+        b.run(&format!("{model}/fzoo_step_device"), || {
+            let batch = trainer.batcher.next_train();
+            let out = trainer
+                .optimizer
+                .step(&rt, trainer.session, &batch, step)
+                .unwrap();
+            step += 1;
+            black_box(out.loss);
+        });
+        b.run(&format!("{model}/fzoo_step_hostsync"), || {
+            let batch = trainer.batcher.next_train();
+            let out = trainer
+                .optimizer
+                .step(&rt, trainer.session, &batch, step)
+                .unwrap();
+            step += 1;
+            let theta = trainer.session.trainable_host().unwrap().to_vec();
+            trainer.session.set_trainable(&rt, theta).unwrap();
+            black_box(out.loss);
+        });
+        if let Some(r) = b.ratio(
+            &format!("{model}/fzoo_step_hostsync"),
+            &format!("{model}/fzoo_step_device"),
+        ) {
+            println!(
+                "--> {model}: per-step host round trip costs {r:.2}x over \
+                 device-resident\n"
+            );
+            ratios.push((
+                model.to_string(),
+                "host_roundtrip_vs_device".to_string(),
+                r,
+            ));
+        }
     }
+
+    // Record the baseline (regenerated on every `cargo bench` run).
+    let results: Vec<Value> = b
+        .results()
+        .iter()
+        .map(|r| {
+            Value::obj(vec![
+                ("name", Value::str(r.name.as_str())),
+                ("mean_ms", Value::num(r.mean() * 1e3)),
+                ("median_ms", Value::num(r.median() * 1e3)),
+                ("stddev_ms", Value::num(r.stddev() * 1e3)),
+            ])
+        })
+        .collect();
+    let ratio_objs: Vec<Value> = ratios
+        .iter()
+        .map(|(model, what, r)| {
+            Value::obj(vec![
+                ("model", Value::str(model.as_str())),
+                ("ratio", Value::str(what.as_str())),
+                ("value", Value::num(*r)),
+            ])
+        })
+        .collect();
+    let doc = Value::obj(vec![
+        ("bench", Value::str("step_bench")),
+        ("platform", Value::str(rt.platform())),
+        ("results", Value::Arr(results)),
+        ("ratios", Value::Arr(ratio_objs)),
+    ]);
+    let out = root.join("BENCH_step.json");
+    std::fs::write(&out, doc.to_string()).expect("writing BENCH_step.json");
+    println!("baseline recorded -> {}", out.display());
 }

@@ -21,7 +21,9 @@ pub struct EvalOut {
     pub examples: usize,
 }
 
-/// Run `eval_logits` over `n_batches` eval batches and score.
+/// Run `eval_logits` over `n_batches` eval batches and score. Binds the
+/// session's *device-resident* parameters directly — evaluation needs no
+/// host sync of theta.
 pub fn evaluate(
     rt: &Runtime,
     s: &Session,
@@ -41,16 +43,19 @@ pub fn evaluate(
     for bi in 0..n_batches {
         let batch = batcher.eval_batch(bi);
         let (ids, labels, mask) = batch.literals()?;
-        let mut inputs = s.param_inputs()?;
-        inputs.push(ids);
-        inputs.push(mask);
-        let outs = exe.run(&inputs)?;
+        let outs = s
+            .bind_params(exe.call())?
+            .literal("ids", ids)?
+            .literal("mask", mask)?
+            .run()?;
 
-        let (ids2, labels2, mask2) = batch.literals()?;
-        let mut linputs = s.param_inputs()?;
-        linputs.extend([ids2, labels2, mask2]);
-        loss_sum += scalar_f32(&fwd.run(&linputs)?[0])?;
-        drop(labels);
+        let louts = s
+            .bind_params(fwd.call())?
+            .literal("ids", ids)?
+            .literal("labels", labels)?
+            .literal("mask", mask)?
+            .run()?;
+        loss_sum += scalar_f32(&louts[0])?;
 
         if span {
             let start = to_vec_f32(&outs[0])?; // [B, T]

@@ -97,7 +97,8 @@ fn pretrain(rt: &Runtime, model: &str, steps: u64, seed: u64) -> Result<Vec<f32>
             eprintln!("[pretrain] {model} step {} loss {:.4}", step + 1, out.loss);
         }
     }
-    Ok(session.theta)
+    // checkpoint boundary: pull the trained parameters off the device
+    session.into_theta()
 }
 
 /// Copy leaves by name from a source checkpoint into a destination init
@@ -140,11 +141,11 @@ impl Session {
                 .to_string();
             let src_entry = rt.manifest.model(&sibling)?.clone();
             let src_theta = ensure_pretrained(rt, &sibling, steps, seed)?;
-            let mut theta = session.theta.clone();
+            let mut theta = session.theta_host()?.to_vec();
             transplant(&src_entry, &src_theta, &session.entry, &mut theta);
-            session.theta = theta;
+            session.set_theta(rt, theta)?; // re-uploads the frozen base
         } else {
-            session.theta = ensure_pretrained(rt, model, steps, seed)?;
+            session.set_theta(rt, ensure_pretrained(rt, model, steps, seed)?)?;
         }
         Ok(session)
     }

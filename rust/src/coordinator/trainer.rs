@@ -275,6 +275,11 @@ impl<'rt, 's> Trainer<'rt, 's> {
             });
         }
 
+        // End of training is an explicit sync boundary: refresh the host
+        // mirror once so exporters/checkpoints read current parameters.
+        // (Steps and evals above ran entirely on device-resident state.)
+        self.session.sync_to_host()?;
+
         history.total_wall_s = t_start.elapsed().as_secs_f64();
         Ok(history)
     }

@@ -1,6 +1,8 @@
 //! Batching: epoch shuffling over the (virtual) train set, padding to the
 //! model's fixed (B, T) geometry, and literal-ready buffers.
 
+use std::cell::OnceCell;
+
 use anyhow::Result;
 use xla::Literal;
 
@@ -15,8 +17,10 @@ pub enum Split {
     Eval,
 }
 
-/// One model-geometry batch, flattened row-major.
-#[derive(Debug, Clone)]
+/// One model-geometry batch, flattened row-major. The XLA literals are
+/// built once on first use and cached — a batch feeds several executions
+/// per step (probe, update, eval), and rebuilding three tensors per call
+/// was measurable coordinator overhead.
 pub struct Batch {
     pub b: usize,
     pub t: usize,
@@ -24,18 +28,71 @@ pub struct Batch {
     pub mask: Vec<f32>,    // [B*T]
     pub labels: Vec<i32>,  // [B] (cls) or [B*2] (span)
     pub span: bool,
+    lits: OnceCell<(Literal, Literal, Literal)>,
 }
 
 impl Batch {
-    pub fn literals(&self) -> Result<(Literal, Literal, Literal)> {
-        let ids = lit_i32(&self.ids, &[self.b, self.t])?;
-        let mask = lit_f32(&self.mask, &[self.b, self.t])?;
-        let labels = if self.span {
-            lit_i32(&self.labels, &[self.b, 2])?
-        } else {
-            lit_i32(&self.labels, &[self.b])?
-        };
+    pub fn new(
+        b: usize,
+        t: usize,
+        ids: Vec<i32>,
+        mask: Vec<f32>,
+        labels: Vec<i32>,
+        span: bool,
+    ) -> Self {
+        Self {
+            b,
+            t,
+            ids,
+            mask,
+            labels,
+            span,
+            lits: OnceCell::new(),
+        }
+    }
+
+    /// `(ids, labels, mask)` literals for this batch, built once and
+    /// reused across every execution that binds them.
+    pub fn literals(&self) -> Result<(&Literal, &Literal, &Literal)> {
+        if self.lits.get().is_none() {
+            let ids = lit_i32(&self.ids, &[self.b, self.t])?;
+            let mask = lit_f32(&self.mask, &[self.b, self.t])?;
+            let labels = if self.span {
+                lit_i32(&self.labels, &[self.b, 2])?
+            } else {
+                lit_i32(&self.labels, &[self.b])?
+            };
+            // a racing set is impossible (&self, single thread) and would
+            // only mean an identical tuple was built twice anyway
+            let _ = self.lits.set((ids, labels, mask));
+        }
+        let (ids, labels, mask) = self.lits.get().expect("just initialised");
         Ok((ids, labels, mask))
+    }
+}
+
+impl Clone for Batch {
+    fn clone(&self) -> Self {
+        // the literal cache is per-instance; clones rebuild on demand
+        Self::new(
+            self.b,
+            self.t,
+            self.ids.clone(),
+            self.mask.clone(),
+            self.labels.clone(),
+            self.span,
+        )
+    }
+}
+
+impl std::fmt::Debug for Batch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Batch")
+            .field("b", &self.b)
+            .field("t", &self.t)
+            .field("span", &self.span)
+            .field("cached_literals", &self.lits.get().is_some())
+            .finish()
     }
 }
 
@@ -118,14 +175,7 @@ impl Batcher {
                 }
             }
         }
-        Batch {
-            b,
-            t,
-            ids,
-            mask,
-            labels,
-            span,
-        }
+        Batch::new(b, t, ids, mask, labels, span)
     }
 }
 

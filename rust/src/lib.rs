@@ -7,7 +7,10 @@
 //! * **L3 (this crate)** — the training coordinator: it owns the event
 //!   loop, parameters, seeds, the adaptive σ-normalized step rule, the
 //!   optimizer zoo, the synthetic task suite and the experiment harness.
-//!   Python never runs on the training path.
+//!   Python never runs on the training path. Parameters live on device
+//!   (`runtime::DeviceVec`) across steps; executables are invoked through
+//!   the named-binding `Call` API and only scalars cross the host↔device
+//!   boundary on the hot path.
 //!
 //! Quick taste (see `examples/quickstart.rs`):
 //!

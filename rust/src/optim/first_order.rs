@@ -1,9 +1,13 @@
 //! First-order baselines: SGD, Adam [20] and normalized-SGD [2] (FZOO's
 //! first-order inspiration). Gradients come from the AOT `grad_loss`
 //! executable (jax.value_and_grad on the clean forward); moment math runs
-//! host-side over the flat vector and the axpy is applied in-graph via
-//! `sgd_apply` (or host-side for the tiny prefix family, which carries no
-//! `sgd_apply` artifact).
+//! host-side over the gradient vector and the axpy is applied in-graph via
+//! `sgd_apply` against the device-resident parameters (host-side only when
+//! a v1 artifact set lacks the graph).
+//!
+//! Boundary traffic per step: the *gradient* crosses device→host (the
+//! moment math is inherently host-side) and the *direction* crosses
+//! host→device; the parameter vector itself stays on device.
 //!
 //! Accounting: one backward = 3 forwards [Alman & Song 2024], so a
 //! first-order step costs 4 forward-equivalents — the convention behind
@@ -12,7 +16,7 @@
 use anyhow::Result;
 
 use crate::data::Batch;
-use crate::runtime::{lit_f32, lit_scalar_f32, scalar_f32, to_vec_f32, Runtime, Session};
+use crate::runtime::{scalar_f32, to_vec_f32, Runtime, Session};
 
 use super::{Objective, Optimizer, StepOut};
 
@@ -111,27 +115,33 @@ impl Optimizer for FirstOrder {
         );
         let exe = rt.executable(&s.model, "grad_loss")?;
         let (ids, labels, mask) = batch.literals()?;
-        let mut inputs = s.param_inputs()?;
-        inputs.extend([ids, labels, mask]);
-        let outs = exe.run(&inputs)?;
+        let outs = s
+            .bind_params(exe.call())?
+            .literal("ids", ids)?
+            .literal("labels", labels)?
+            .literal("mask", mask)?
+            .run()?;
         let loss = scalar_f32(&outs[0])?;
         let grad = to_vec_f32(&outs[1])?;
         let dir = self.direction(grad);
 
-        if s.entry.executables.contains_key("sgd_apply") && !s.entry.config.is_prefix() {
+        if s.entry.executables.contains_key("sgd_apply") {
             let apply = rt.executable(&s.model, "sgd_apply")?;
-            let d = s.d_trainable();
-            let out = apply.run(&[
-                s.trainable_lit()?,
-                lit_f32(&dir, &[d])?,
-                lit_scalar_f32(self.lr),
-            ])?;
-            *s.trainable_mut() = to_vec_f32(&out[0])?;
+            let theta2 = apply
+                .call()
+                .device(s.trainable_name(), s.trainable_dev())?
+                .vec_f32("g", &dir)?
+                .scalar_f32("lr", self.lr)?
+                .run_device()?;
+            s.set_trainable_dev(theta2);
         } else {
+            // v1-artifact fallback: host axpy + re-upload
             let lr = self.lr;
-            for (p, u) in s.trainable_mut().iter_mut().zip(&dir) {
+            let mut theta = s.trainable_host()?.to_vec();
+            for (p, u) in theta.iter_mut().zip(&dir) {
                 *p -= lr * u;
             }
+            s.set_trainable(rt, theta)?;
         }
 
         Ok(StepOut {

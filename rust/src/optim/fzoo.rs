@@ -11,13 +11,16 @@
 //! 4. `zo_update` regenerates each `u_i` from the seed and applies
 //!    `theta -= sum_i coeff_i * u_i` — the sigma-normalized
 //!    (normalized-SGD-equivalent, Prop 3.2) adaptive step.
+//!
+//! Device residency: theta is bound from the session's `DeviceVec` and the
+//! update graph's output is swapped back in as the next step's input —
+//! only the N+1 probe losses and the N coefficients (scalars) cross the
+//! host↔device boundary per step.
 
 use anyhow::Result;
 
 use crate::data::Batch;
-use crate::runtime::{
-    lit_f32, lit_scalar_f32, lit_scalar_u32, scalar_f32, to_vec_f32, Runtime, Session,
-};
+use crate::runtime::{scalar_f32, to_vec_f32, Runtime, Session};
 
 use super::{sample_std, step_seed, Objective, Optimizer, StepOut};
 
@@ -69,16 +72,23 @@ impl Fzoo {
         }
     }
 
-    /// Executable-name suffix for a non-default N (the `extra_n` ablation
-    /// artifacts) and/or the F1 objective.
-    fn losses_exe(&self, s: &Session) -> String {
-        let base = if self.n == s.entry.config.n_pert {
-            format!("fzoo_losses{}", self.objective.suffix())
-        } else {
-            // N-ablation graphs are CE-only
-            format!("fzoo_losses_n{}", self.n)
-        };
-        base
+    /// Executable name for the fused probe. Non-default N selects the
+    /// `extra_n` ablation artifacts — those are CE-only, so combining an
+    /// N override with the F1 objective is refused loudly rather than
+    /// silently training the wrong objective.
+    fn losses_exe(&self, s: &Session) -> Result<String> {
+        if self.n == s.entry.config.n_pert {
+            return Ok(format!("fzoo_losses{}", self.objective.suffix()));
+        }
+        anyhow::ensure!(
+            self.objective == Objective::Ce,
+            "FZOO N-ablation graphs (fzoo_losses_n{}) are CE-only; the F1 \
+             objective needs the artifact default N={} (model '{}')",
+            self.n,
+            s.entry.config.n_pert,
+            s.model
+        );
+        Ok(format!("fzoo_losses_n{}", self.n))
     }
 
     fn update_exe(&self, s: &Session) -> String {
@@ -102,45 +112,51 @@ impl Fzoo {
         match self.mode {
             FzooMode::Sequential => {
                 // Algorithm 3: perturb / forward / discard, one stream at a
-                // time. Only exists for FT models (tab5 ablations).
+                // time. Only exists for FT models (tab5 ablations). Each
+                // perturbed theta is produced and consumed on device.
                 let fwd = rt.executable(
                     &s.model,
                     &format!("fwd_loss{}", self.objective.suffix()),
                 )?;
                 let perturb = rt.executable(&s.model, "rad_perturb")?;
                 let mut out = Vec::with_capacity(n_probe + 1);
-                let l0 = fwd.run(&[
-                    s.trainable_lit()?,
-                    batch.literals()?.0,
-                    batch.literals()?.1,
-                    batch.literals()?.2,
-                ])?;
+                let l0 = fwd
+                    .call()
+                    .device("theta", s.trainable_dev())?
+                    .literal("ids", ids)?
+                    .literal("labels", labels)?
+                    .literal("mask", mask)?
+                    .run()?;
                 out.push(scalar_f32(&l0[0])?);
                 for i in 1..=n_probe {
-                    let pert = perturb.run(&[
-                        s.trainable_lit()?,
-                        lit_scalar_u32(seed),
-                        lit_scalar_u32(i as u32),
-                        lit_scalar_f32(self.eps),
-                    ])?;
-                    let (ids_i, labels_i, mask_i) = batch.literals()?;
-                    let li = fwd.run(&[
-                        pert.into_iter().next().unwrap(),
-                        ids_i,
-                        labels_i,
-                        mask_i,
-                    ])?;
+                    let pert = perturb
+                        .call()
+                        .device("theta", s.trainable_dev())?
+                        .scalar_u32("seed", seed)?
+                        .scalar_u32("stream", i as u32)?
+                        .scalar_f32("eps", self.eps)?
+                        .run_device()?;
+                    let li = fwd
+                        .call()
+                        .device("theta", &pert)?
+                        .literal("ids", ids)?
+                        .literal("labels", labels)?
+                        .literal("mask", mask)?
+                        .run()?;
                     out.push(scalar_f32(&li[0])?);
                 }
                 Ok(out)
             }
             _ => {
-                let exe = rt.executable(&s.model, &self.losses_exe(s))?;
-                let mut inputs = s.param_inputs()?;
-                inputs.extend([ids, labels, mask]);
-                inputs.push(lit_scalar_u32(seed));
-                inputs.push(lit_scalar_f32(self.eps));
-                let outs = exe.run(&inputs)?;
+                let exe = rt.executable(&s.model, &self.losses_exe(s)?)?;
+                let outs = s
+                    .bind_params(exe.call())?
+                    .literal("ids", ids)?
+                    .literal("labels", labels)?
+                    .literal("mask", mask)?
+                    .scalar_u32("seed", seed)?
+                    .scalar_f32("eps", self.eps)?
+                    .run()?;
                 to_vec_f32(&outs[0])
             }
         }
@@ -202,12 +218,13 @@ impl Optimizer for Fzoo {
             .map(|&li| self.eta * (li - l0) / (self.n as f32 * sigma))
             .collect();
         let upd = rt.executable(&s.model, &self.update_exe(s))?;
-        let out = upd.run(&[
-            s.trainable_lit()?,
-            lit_scalar_u32(seed),
-            lit_f32(&coeffs, &[coeffs.len()])?,
-        ])?;
-        *s.trainable_mut() = to_vec_f32(&out[0])?;
+        let theta2 = upd
+            .call()
+            .device(s.trainable_name(), s.trainable_dev())?
+            .scalar_u32("seed", seed)?
+            .vec_f32("coeffs", &coeffs)?
+            .run_device()?;
+        s.set_trainable_dev(theta2);
 
         Ok(StepOut {
             loss: l0,

@@ -8,12 +8,13 @@
 //!
 //! Prefix-family artifacts have no dedicated `hizoo_losses`; we compose the
 //! same three-point probe from `fwd_loss` + `mezo_losses` (one extra
-//! forward, identical math).
+//! forward, identical math). Theta stays device-resident throughout; only
+//! the three probe scalars cross the host per step.
 
 use anyhow::Result;
 
 use crate::data::Batch;
-use crate::runtime::{lit_scalar_f32, lit_scalar_u32, scalar_f32, to_vec_f32, Runtime, Session};
+use crate::runtime::{scalar_f32, Runtime, Session};
 
 use super::{step_seed, Objective, Optimizer, StepOut};
 
@@ -49,11 +50,14 @@ impl HiZoo {
         let sfx = self.objective.suffix();
         if s.entry.executables.contains_key(&format!("hizoo_losses{sfx}")) {
             let exe = rt.executable(&s.model, &format!("hizoo_losses{sfx}"))?;
-            let mut inputs = s.param_inputs()?;
-            inputs.extend([ids, labels, mask]);
-            inputs.push(lit_scalar_u32(seed));
-            inputs.push(lit_scalar_f32(self.eps));
-            let outs = exe.run(&inputs)?;
+            let outs = s
+                .bind_params(exe.call())?
+                .literal("ids", ids)?
+                .literal("labels", labels)?
+                .literal("mask", mask)?
+                .scalar_u32("seed", seed)?
+                .scalar_f32("eps", self.eps)?
+                .run()?;
             Ok((
                 scalar_f32(&outs[0])?,
                 scalar_f32(&outs[1])?,
@@ -63,16 +67,22 @@ impl HiZoo {
         } else {
             // compose from fwd_loss + mezo_losses (prefix family)
             let fwd = rt.executable(&s.model, &format!("fwd_loss{sfx}"))?;
-            let mut inputs = s.param_inputs()?;
-            let (i2, l2, m2) = batch.literals()?;
-            inputs.extend([i2, l2, m2]);
-            let l0 = scalar_f32(&fwd.run(&inputs)?[0])?;
+            let l0 = scalar_f32(
+                &s.bind_params(fwd.call())?
+                    .literal("ids", ids)?
+                    .literal("labels", labels)?
+                    .literal("mask", mask)?
+                    .run()?[0],
+            )?;
             let mz = rt.executable(&s.model, &format!("mezo_losses{sfx}"))?;
-            let mut inputs = s.param_inputs()?;
-            inputs.extend([ids, labels, mask]);
-            inputs.push(lit_scalar_u32(seed));
-            inputs.push(lit_scalar_f32(self.eps));
-            let outs = mz.run(&inputs)?;
+            let outs = s
+                .bind_params(mz.call())?
+                .literal("ids", ids)?
+                .literal("labels", labels)?
+                .literal("mask", mask)?
+                .scalar_u32("seed", seed)?
+                .scalar_f32("eps", self.eps)?
+                .run()?;
             Ok((l0, scalar_f32(&outs[0])?, scalar_f32(&outs[1])?, 3.0))
         }
     }
@@ -108,8 +118,13 @@ impl Optimizer for HiZoo {
         let pg = (lp - lm) / (2.0 * self.eps);
         let coeff = self.lr * pg / self.sigma_ema.sqrt();
         let exe = rt.executable(&s.model, "gauss_update")?;
-        let out = exe.run(&[s.trainable_lit()?, lit_scalar_u32(seed), lit_scalar_f32(coeff)])?;
-        *s.trainable_mut() = to_vec_f32(&out[0])?;
+        let theta2 = exe
+            .call()
+            .device(s.trainable_name(), s.trainable_dev())?
+            .scalar_u32("seed", seed)?
+            .scalar_f32("coeff", coeff)?
+            .run_device()?;
+        s.set_trainable_dev(theta2);
 
         Ok(StepOut {
             loss: l0,

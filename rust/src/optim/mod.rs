@@ -1,8 +1,11 @@
 //! The optimizer zoo: FZOO (+ variants) and every baseline in the paper's
-//! tables, all driving the AOT step graphs. Parameters are only ever
-//! touched through the update executables — Rust computes *scalars*
-//! (loss statistics, step-size coefficients) and the graphs regenerate the
-//! perturbation directions from seeds.
+//! tables, all driving the AOT step graphs through the named-binding
+//! `Call` API. Parameters are only ever touched through the update
+//! executables — Rust computes *scalars* (loss statistics, step-size
+//! coefficients) and the graphs regenerate the perturbation directions
+//! from seeds. Parameters and d-vector optimizer state stay resident on
+//! device between steps (`runtime::DeviceVec`); the step path never
+//! round-trips an O(d) vector through the host.
 
 pub mod first_order;
 pub mod fzoo;
@@ -53,7 +56,11 @@ impl Objective {
     }
 }
 
-pub trait Optimizer: Send {
+/// One optimizer driving one `Session`. Not `Send`: optimizers may hold
+/// device-resident state (`DeviceVec` moments) pinned to the runtime's
+/// PJRT client thread; concurrent multi-run serving wraps each (session,
+/// optimizer) pair in its own thread instead of moving them.
+pub trait Optimizer {
     fn name(&self) -> String;
     fn step(&mut self, rt: &Runtime, s: &mut Session, batch: &Batch, step: u64)
         -> Result<StepOut>;

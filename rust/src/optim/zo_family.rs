@@ -2,13 +2,18 @@
 //! ZO-SGD-Sign, ZO-SGD-MMT, ZO-SGD-Cons, ZO-Adam. All use the two-sided
 //! Gaussian SPSA estimate `pg = (l+ - l-) / (2 eps)` with the MeZO seed
 //! trick (directions regenerated inside the update graphs).
+//!
+//! Device residency: theta and the d-vector moments (ZO-MMT's m, ZO-Adam's
+//! m/v) live on device as `DeviceVec`s. On v2 artifacts the moments are
+//! advanced through the split single-output graphs (`momentum_zo_m`,
+//! `adam_zo_m/v/step`) so nothing O(d) crosses the host; on v1 artifacts
+//! the fused multi-output graphs are used and their tuple result crosses
+//! the host once per step (documented fallback).
 
 use anyhow::Result;
 
 use crate::data::Batch;
-use crate::runtime::{
-    lit_f32, lit_scalar_f32, lit_scalar_u32, scalar_f32, to_vec_f32, Runtime, Session,
-};
+use crate::runtime::{scalar_f32, to_vec_f32, DeviceVec, Runtime, Session};
 
 use super::{step_seed, Objective, Optimizer, StepOut};
 
@@ -34,10 +39,11 @@ pub struct ZoFamily {
     pub flavor: ZoFlavor,
     objective: Objective,
     run_seed: u64,
-    // d-vector states (only allocated for the flavors that need them —
-    // exactly the memory multiples Table 7 reports)
-    m: Vec<f32>,
-    v: Vec<f32>,
+    d: usize,
+    // device-resident d-vector states (only allocated for the flavors
+    // that need them — exactly the memory multiples Table 7 reports)
+    m: Option<DeviceVec>,
+    v: Option<DeviceVec>,
     t: f32,
     pub beta1: f32,
     pub beta2: f32,
@@ -53,11 +59,6 @@ impl ZoFamily {
         run_seed: u64,
         d: usize,
     ) -> Self {
-        let (m, v) = match flavor {
-            ZoFlavor::Momentum => (vec![0.0; d], Vec::new()),
-            ZoFlavor::Adam => (vec![0.0; d], vec![0.0; d]),
-            _ => (Vec::new(), Vec::new()),
-        };
         Self {
             lr,
             lr_base: lr,
@@ -65,8 +66,9 @@ impl ZoFamily {
             flavor,
             objective,
             run_seed,
-            m,
-            v,
+            d,
+            m: None,
+            v: None,
             t: 0.0,
             beta1: 0.9,
             beta2: 0.999,
@@ -86,11 +88,14 @@ impl ZoFamily {
             &format!("mezo_losses{}", self.objective.suffix()),
         )?;
         let (ids, labels, mask) = batch.literals()?;
-        let mut inputs = s.param_inputs()?;
-        inputs.extend([ids, labels, mask]);
-        inputs.push(lit_scalar_u32(seed));
-        inputs.push(lit_scalar_f32(self.eps));
-        let outs = exe.run(&inputs)?;
+        let outs = s
+            .bind_params(exe.call())?
+            .literal("ids", ids)?
+            .literal("labels", labels)?
+            .literal("mask", mask)?
+            .scalar_u32("seed", seed)?
+            .scalar_f32("eps", self.eps)?
+            .run()?;
         Ok((scalar_f32(&outs[0])?, scalar_f32(&outs[1])?))
     }
 
@@ -100,16 +105,36 @@ impl ZoFamily {
             &format!("fwd_loss{}", self.objective.suffix()),
         )?;
         let (ids, labels, mask) = batch.literals()?;
-        let mut inputs = s.param_inputs()?;
-        inputs.extend([ids, labels, mask]);
-        scalar_f32(&exe.run(&inputs)?[0])
+        let outs = s
+            .bind_params(exe.call())?
+            .literal("ids", ids)?
+            .literal("labels", labels)?
+            .literal("mask", mask)?
+            .run()?;
+        scalar_f32(&outs[0])
     }
 
+    /// theta' = theta - coeff * z(seed), device to device. Returns the
+    /// *previous* device buffer, which doubles as a zero-copy backup for
+    /// reject/restore flavors.
     fn gauss_update(&self, rt: &Runtime, s: &mut Session, seed: u32, coeff: f32)
-        -> Result<()> {
+        -> Result<DeviceVec> {
         let exe = rt.executable(&s.model, "gauss_update")?;
-        let out = exe.run(&[s.trainable_lit()?, lit_scalar_u32(seed), lit_scalar_f32(coeff)])?;
-        *s.trainable_mut() = to_vec_f32(&out[0])?;
+        let theta2 = exe
+            .call()
+            .device(s.trainable_name(), s.trainable_dev())?
+            .scalar_u32("seed", seed)?
+            .scalar_f32("coeff", coeff)?
+            .run_device()?;
+        Ok(s.set_trainable_dev(theta2))
+    }
+
+    /// Lazily allocate a device-resident zero moment vector.
+    fn zeros_moment(rt: &Runtime, slot: &mut Option<DeviceVec>, d: usize)
+        -> Result<()> {
+        if slot.is_none() {
+            *slot = Some(rt.upload_f32(&vec![0.0; d])?);
+        }
         Ok(())
     }
 }
@@ -150,56 +175,116 @@ impl Optimizer for ZoFamily {
             }
             ZoFlavor::Sign => {
                 let exe = rt.executable(&s.model, "gauss_sign_update")?;
-                let out = exe.run(&[
-                    s.trainable_lit()?,
-                    lit_scalar_u32(seed),
-                    lit_scalar_f32(self.lr * pg.signum()),
-                ])?;
-                *s.trainable_mut() = to_vec_f32(&out[0])?;
+                let theta2 = exe
+                    .call()
+                    .device(s.trainable_name(), s.trainable_dev())?
+                    .scalar_u32("seed", seed)?
+                    .scalar_f32("coeff", self.lr * pg.signum())?
+                    .run_device()?;
+                s.set_trainable_dev(theta2);
             }
             ZoFlavor::Conservative => {
                 let l0 = self.fwd_loss(rt, s, batch)?;
-                let backup = s.trainable().to_vec();
-                self.gauss_update(rt, s, seed, self.lr * pg)?;
+                let backup = self.gauss_update(rt, s, seed, self.lr * pg)?;
                 let l_new = self.fwd_loss(rt, s, batch)?;
                 forwards = 4.0;
                 if l_new > l0 {
-                    *s.trainable_mut() = backup; // reject the step
+                    s.set_trainable_dev(backup); // reject the step, bit-exact
                 }
             }
             ZoFlavor::Momentum => {
-                let exe = rt.executable(&s.model, "momentum_zo_update")?;
-                let d = s.d_trainable();
-                let out = exe.run(&[
-                    s.trainable_lit()?,
-                    lit_f32(&self.m, &[d])?,
-                    lit_scalar_u32(seed),
-                    lit_scalar_f32(pg),
-                    lit_scalar_f32(self.lr),
-                    lit_scalar_f32(self.beta1),
-                ])?;
-                *s.trainable_mut() = to_vec_f32(&out[0])?;
-                self.m = to_vec_f32(&out[1])?;
+                Self::zeros_moment(rt, &mut self.m, self.d)?;
+                if s.entry.executables.contains_key("momentum_zo_m") {
+                    // split graphs: m and theta both advance on device
+                    let mexe = rt.executable(&s.model, "momentum_zo_m")?;
+                    let m2 = mexe
+                        .call()
+                        .device("m", self.m.as_ref().unwrap())?
+                        .scalar_u32("seed", seed)?
+                        .scalar_f32("coeff", pg)?
+                        .scalar_f32("beta", self.beta1)?
+                        .run_device()?;
+                    let apply = rt.executable(&s.model, "sgd_apply")?;
+                    let theta2 = apply
+                        .call()
+                        .device(s.trainable_name(), s.trainable_dev())?
+                        .device("g", &m2)?
+                        .scalar_f32("lr", self.lr)?
+                        .run_device()?;
+                    s.set_trainable_dev(theta2);
+                    self.m = Some(m2);
+                } else {
+                    // v1-artifact fallback: fused graph, tuple crosses host
+                    let exe = rt.executable(&s.model, "momentum_zo_update")?;
+                    let outs = exe
+                        .call()
+                        .device("theta", s.trainable_dev())?
+                        .device("m", self.m.as_ref().unwrap())?
+                        .scalar_u32("seed", seed)?
+                        .scalar_f32("coeff", pg)?
+                        .scalar_f32("lr", self.lr)?
+                        .scalar_f32("beta", self.beta1)?
+                        .run()?;
+                    s.set_trainable(rt, to_vec_f32(&outs[0])?)?;
+                    self.m = Some(rt.upload_f32(&to_vec_f32(&outs[1])?)?);
+                }
             }
             ZoFlavor::Adam => {
                 self.t += 1.0;
-                let exe = rt.executable(&s.model, "adam_zo_update")?;
-                let d = s.d_trainable();
-                let out = exe.run(&[
-                    s.trainable_lit()?,
-                    lit_f32(&self.m, &[d])?,
-                    lit_f32(&self.v, &[d])?,
-                    lit_scalar_u32(seed),
-                    lit_scalar_f32(pg),
-                    lit_scalar_f32(self.lr),
-                    lit_scalar_f32(self.beta1),
-                    lit_scalar_f32(self.beta2),
-                    lit_scalar_f32(self.adam_eps),
-                    lit_scalar_f32(self.t),
-                ])?;
-                *s.trainable_mut() = to_vec_f32(&out[0])?;
-                self.m = to_vec_f32(&out[1])?;
-                self.v = to_vec_f32(&out[2])?;
+                Self::zeros_moment(rt, &mut self.m, self.d)?;
+                Self::zeros_moment(rt, &mut self.v, self.d)?;
+                if s.entry.executables.contains_key("adam_zo_step") {
+                    let m2 = rt
+                        .executable(&s.model, "adam_zo_m")?
+                        .call()
+                        .device("m", self.m.as_ref().unwrap())?
+                        .scalar_u32("seed", seed)?
+                        .scalar_f32("coeff", pg)?
+                        .scalar_f32("beta1", self.beta1)?
+                        .run_device()?;
+                    let v2 = rt
+                        .executable(&s.model, "adam_zo_v")?
+                        .call()
+                        .device("v", self.v.as_ref().unwrap())?
+                        .scalar_u32("seed", seed)?
+                        .scalar_f32("coeff", pg)?
+                        .scalar_f32("beta2", self.beta2)?
+                        .run_device()?;
+                    let theta2 = rt
+                        .executable(&s.model, "adam_zo_step")?
+                        .call()
+                        .device(s.trainable_name(), s.trainable_dev())?
+                        .device("m", &m2)?
+                        .device("v", &v2)?
+                        .scalar_f32("lr", self.lr)?
+                        .scalar_f32("beta1", self.beta1)?
+                        .scalar_f32("beta2", self.beta2)?
+                        .scalar_f32("eps_adam", self.adam_eps)?
+                        .scalar_f32("t", self.t)?
+                        .run_device()?;
+                    s.set_trainable_dev(theta2);
+                    self.m = Some(m2);
+                    self.v = Some(v2);
+                } else {
+                    // v1-artifact fallback: fused graph, tuple crosses host
+                    let exe = rt.executable(&s.model, "adam_zo_update")?;
+                    let outs = exe
+                        .call()
+                        .device("theta", s.trainable_dev())?
+                        .device("m", self.m.as_ref().unwrap())?
+                        .device("v", self.v.as_ref().unwrap())?
+                        .scalar_u32("seed", seed)?
+                        .scalar_f32("coeff", pg)?
+                        .scalar_f32("lr", self.lr)?
+                        .scalar_f32("beta1", self.beta1)?
+                        .scalar_f32("beta2", self.beta2)?
+                        .scalar_f32("eps_adam", self.adam_eps)?
+                        .scalar_f32("t", self.t)?
+                        .run()?;
+                    s.set_trainable(rt, to_vec_f32(&outs[0])?)?;
+                    self.m = Some(rt.upload_f32(&to_vec_f32(&outs[1])?)?);
+                    self.v = Some(rt.upload_f32(&to_vec_f32(&outs[2])?)?);
+                }
             }
         }
 

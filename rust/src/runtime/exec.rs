@@ -1,0 +1,385 @@
+//! Execution layer: compiled step graphs (`Executable`), the named-binding
+//! `Call` builder, and `DeviceVec` — a flat f32 vector resident in PJRT
+//! device memory.
+//!
+//! Invocation is *by manifest input name*, never by position. Every bind
+//! validates against the `ExeSpec` immediately, so a wrong shape or an
+//! unknown input fails as a Rust error before anything reaches XLA (which
+//! runs with `strict_shape_checking=false` and would SEGFAULT on a
+//! mismatched buffer).
+//!
+//! Root contract (manifest v2, see `python/compile/aot.py`): graphs with a
+//! single output are lowered with an *array* root, so `run_device()` can
+//! hand the result back as a `DeviceVec` without any host sync — this is
+//! what keeps the optimizer hot paths free of per-step O(d) host↔device
+//! round trips. Multi-output graphs keep a tuple root (PJRT cannot split a
+//! tuple buffer device-side) and are read back with `run()`. v1 artifacts
+//! (tuple roots everywhere) still work: `run_device()` transparently falls
+//! back to a fetch/untuple/re-upload round trip.
+
+use anyhow::Result;
+use xla::Literal;
+
+use super::manifest::{ExeSpec, IoSpec};
+use super::{lit_f32, to_vec_f32};
+
+// ---------------------------------------------------------------------------
+// DeviceVec
+// ---------------------------------------------------------------------------
+
+/// A flat f32 vector held in PJRT device memory. Produced by
+/// `Runtime::upload_f32` or `Call::run_device`, consumed by
+/// `Call::device`. Crossing back to the host is always explicit
+/// (`to_host`), so parameter traffic is visible at the call site.
+pub struct DeviceVec {
+    buf: xla::PjRtBuffer,
+    len: usize,
+}
+
+impl DeviceVec {
+    pub(crate) fn from_buffer(buf: xla::PjRtBuffer, len: usize) -> Self {
+        Self { buf, len }
+    }
+
+    /// Element count (f32s).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Copy device -> host. This is the *only* way device-resident data
+    /// reaches the host — an explicit sync point, never implicit.
+    pub fn to_host(&self) -> Result<Vec<f32>> {
+        let lit = self
+            .buf
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("device -> host copy ({} f32s): {e}", self.len))?;
+        to_vec_f32(&lit)
+    }
+
+    pub(crate) fn buffer(&self) -> &xla::PjRtBuffer {
+        &self.buf
+    }
+}
+
+impl std::fmt::Debug for DeviceVec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "DeviceVec({} f32, device-resident)", self.len)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Executable
+// ---------------------------------------------------------------------------
+
+/// A compiled step graph plus its IO contract. Invoked through the
+/// `call()` builder; there is no positional entry point.
+pub struct Executable {
+    pub name: String,
+    pub(crate) exe: xla::PjRtLoadedExecutable,
+    pub spec: ExeSpec,
+    /// Compiled root is a tuple (manifest v1 artifacts, or any graph with
+    /// more than one output). Array-rooted graphs can return device
+    /// buffers with no host sync.
+    pub(crate) tuple_root: bool,
+}
+
+impl Executable {
+    /// Start a named-binding invocation. Bind every manifest input, then
+    /// finish with `run()` (host outputs) or `run_device()` (single-output
+    /// graphs, result stays on device).
+    pub fn call(&self) -> Call<'_> {
+        Call {
+            exe: self,
+            slots: self.spec.inputs.iter().map(|_| None).collect(),
+        }
+    }
+
+    /// True when `run_device()` completes without a host round trip.
+    pub fn is_device_resident(&self) -> bool {
+        !self.tuple_root && self.spec.outputs.len() == 1
+    }
+
+    /// Upload one literal as a Rust-owned `PjRtBuffer`.
+    ///
+    /// NOTE: staging through owned buffers + `execute_b` is deliberate —
+    /// the vendored shim's C `execute` path leaks every input device
+    /// buffer (it `release()`s the unique_ptrs and never frees them),
+    /// which bleeds ~1MB of theta per step and OOMs long training runs.
+    /// Rust-owned buffers are freed on Drop.
+    fn stage(&self, lit: &Literal, what: &str) -> Result<xla::PjRtBuffer> {
+        self.exe
+            .client()
+            .buffer_from_host_literal(None, lit)
+            .map_err(|e| anyhow::anyhow!("staging {} {what}: {e}", self.name))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Call builder
+// ---------------------------------------------------------------------------
+
+enum Arg<'a> {
+    Device(&'a DeviceVec),
+    Borrowed(&'a Literal),
+    Owned(Literal),
+}
+
+/// One invocation of an `Executable`: inputs bound by manifest name and
+/// validated at bind time. Slots are positioned internally from the
+/// manifest, so bind order never matters.
+pub struct Call<'a> {
+    exe: &'a Executable,
+    slots: Vec<Option<Arg<'a>>>,
+}
+
+impl<'a> Call<'a> {
+    /// Index of input `name`, erroring on unknown names and double binds.
+    fn slot_index(&self, name: &str) -> Result<usize> {
+        let idx = self.exe.spec.input_index(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "{}: no input named '{name}' (manifest inputs: {:?})",
+                self.exe.name,
+                self.exe.spec.inputs.iter().map(|i| &i.name).collect::<Vec<_>>()
+            )
+        })?;
+        anyhow::ensure!(
+            self.slots[idx].is_none(),
+            "{}: input '{name}' bound twice",
+            self.exe.name
+        );
+        Ok(idx)
+    }
+
+    fn input_spec(&self, idx: usize) -> &IoSpec {
+        &self.exe.spec.inputs[idx]
+    }
+
+    /// Bind a device-resident vector (no host traffic). A `DeviceVec` is
+    /// flat by construction, so only rank-1 inputs accept one — binding it
+    /// to a multi-dim or scalar slot is a shape mismatch and must fail
+    /// here, not inside XLA (the segfault guard).
+    pub fn device(mut self, name: &str, v: &'a DeviceVec) -> Result<Self> {
+        let idx = self.slot_index(name)?;
+        let spec = self.input_spec(idx);
+        anyhow::ensure!(
+            spec.dtype == "f32",
+            "{}: input '{name}' is {}, DeviceVec carries f32",
+            self.exe.name,
+            spec.dtype
+        );
+        anyhow::ensure!(
+            spec.shape.len() == 1 && v.len() == spec.shape[0],
+            "{}: input '{name}' has manifest shape {:?}; a DeviceVec is flat \
+             and holds {} elements — only a matching rank-1 input can bind it",
+            self.exe.name,
+            spec.shape,
+            v.len()
+        );
+        self.slots[idx] = Some(Arg::Device(v));
+        Ok(self)
+    }
+
+    /// Bind a host literal (e.g. a cached batch tensor). The shape is
+    /// checked against the manifest here, preserving the segfault guard.
+    pub fn literal(mut self, name: &str, lit: &'a Literal) -> Result<Self> {
+        let idx = self.slot_index(name)?;
+        check_literal_shape(&self.exe.name, self.input_spec(idx), lit)?;
+        self.slots[idx] = Some(Arg::Borrowed(lit));
+        Ok(self)
+    }
+
+    /// Bind an f32 scalar input.
+    pub fn scalar_f32(mut self, name: &str, v: f32) -> Result<Self> {
+        let idx = self.slot_index(name)?;
+        let spec = self.input_spec(idx);
+        anyhow::ensure!(
+            spec.shape.is_empty() && spec.dtype == "f32",
+            "{}: input '{name}' is not an f32 scalar ({} {:?})",
+            self.exe.name,
+            spec.dtype,
+            spec.shape
+        );
+        self.slots[idx] = Some(Arg::Owned(Literal::scalar(v)));
+        Ok(self)
+    }
+
+    /// Bind a u32 scalar input (seeds, stream ids).
+    pub fn scalar_u32(mut self, name: &str, v: u32) -> Result<Self> {
+        let idx = self.slot_index(name)?;
+        let spec = self.input_spec(idx);
+        anyhow::ensure!(
+            spec.shape.is_empty() && spec.dtype == "u32",
+            "{}: input '{name}' is not a u32 scalar ({} {:?})",
+            self.exe.name,
+            spec.dtype,
+            spec.shape
+        );
+        self.slots[idx] = Some(Arg::Owned(Literal::scalar(v)));
+        Ok(self)
+    }
+
+    /// Bind a small host f32 vector (e.g. FZOO step coefficients); the
+    /// literal takes its shape from the manifest.
+    pub fn vec_f32(mut self, name: &str, data: &[f32]) -> Result<Self> {
+        let idx = self.slot_index(name)?;
+        let spec = self.input_spec(idx);
+        anyhow::ensure!(
+            spec.dtype == "f32",
+            "{}: input '{name}' is {}, not f32",
+            self.exe.name,
+            spec.dtype
+        );
+        anyhow::ensure!(
+            data.len() == spec.elems(),
+            "{}: input '{name}' expects {} elements {:?}, got {}",
+            self.exe.name,
+            spec.elems(),
+            spec.shape,
+            data.len()
+        );
+        let lit = lit_f32(data, &spec.shape)?;
+        self.slots[idx] = Some(Arg::Owned(lit));
+        Ok(self)
+    }
+
+    /// Stage + execute; returns the raw per-replica output buffers and the
+    /// executable (which outlives the consumed builder).
+    fn execute(self) -> Result<(Vec<Vec<xla::PjRtBuffer>>, &'a Executable)> {
+        let exe = self.exe;
+        let missing: Vec<&str> = exe
+            .spec
+            .inputs
+            .iter()
+            .zip(&self.slots)
+            .filter(|(_, s)| s.is_none())
+            .map(|(i, _)| i.name.as_str())
+            .collect();
+        anyhow::ensure!(
+            missing.is_empty(),
+            "{}: unbound inputs {missing:?}",
+            exe.name
+        );
+        // Stage host-side args as Rust-owned buffers (freed on Drop);
+        // device-resident args are borrowed in place.
+        let mut staged: Vec<Option<xla::PjRtBuffer>> = Vec::with_capacity(self.slots.len());
+        for (slot, spec) in self.slots.iter().zip(&exe.spec.inputs) {
+            staged.push(match slot.as_ref().unwrap() {
+                Arg::Device(_) => None,
+                Arg::Borrowed(l) => Some(exe.stage(l, &spec.name)?),
+                Arg::Owned(l) => Some(exe.stage(l, &spec.name)?),
+            });
+        }
+        let args: Vec<&xla::PjRtBuffer> = self
+            .slots
+            .iter()
+            .zip(&staged)
+            .map(|(slot, st)| match slot.as_ref().unwrap() {
+                Arg::Device(v) => v.buffer(),
+                _ => st.as_ref().unwrap(),
+            })
+            .collect();
+        let bufs = exe
+            .exe
+            .execute_b::<&xla::PjRtBuffer>(&args)
+            .map_err(|e| anyhow::anyhow!("executing {}: {e}", exe.name))?;
+        anyhow::ensure!(
+            !bufs.is_empty() && !bufs[0].is_empty(),
+            "{}: execution returned no output buffers",
+            exe.name
+        );
+        Ok((bufs, exe))
+    }
+
+    /// Execute and fetch every output to the host as literals.
+    pub fn run(self) -> Result<Vec<Literal>> {
+        let (bufs, exe) = self.execute()?;
+        let outs = if exe.tuple_root {
+            let mut lit = bufs[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow::anyhow!("fetching {} output: {e}", exe.name))?;
+            lit.decompose_tuple()
+                .map_err(|e| anyhow::anyhow!("untupling {} output: {e}", exe.name))?
+        } else {
+            let mut v = Vec::with_capacity(bufs[0].len());
+            for b in &bufs[0] {
+                v.push(
+                    b.to_literal_sync()
+                        .map_err(|e| anyhow::anyhow!("fetching {} output: {e}", exe.name))?,
+                );
+            }
+            v
+        };
+        anyhow::ensure!(
+            outs.len() == exe.spec.outputs.len(),
+            "{}: {} outputs, manifest says {}",
+            exe.name,
+            outs.len(),
+            exe.spec.outputs.len()
+        );
+        Ok(outs)
+    }
+
+    /// Execute a single-output graph and keep the result on device. With
+    /// v2 (array-rooted) artifacts this performs no host transfer at all;
+    /// with v1 tuple-rooted artifacts it falls back to a correct (but
+    /// host-round-tripping) fetch/untuple/re-upload.
+    pub fn run_device(self) -> Result<DeviceVec> {
+        let (bufs, exe) = self.execute()?;
+        anyhow::ensure!(
+            exe.spec.outputs.len() == 1,
+            "{}: run_device needs a single-output graph, this one has {} \
+             (tuple-rooted results must cross the host; use run())",
+            exe.name,
+            exe.spec.outputs.len()
+        );
+        let out_spec = &exe.spec.outputs[0];
+        anyhow::ensure!(
+            out_spec.dtype == "f32",
+            "{}: run_device output is {}, not f32",
+            exe.name,
+            out_spec.dtype
+        );
+        if exe.tuple_root {
+            // v1 artifact fallback: the root is a one-element tuple.
+            let mut lit = bufs[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow::anyhow!("fetching {} output: {e}", exe.name))?;
+            let mut outs = lit
+                .decompose_tuple()
+                .map_err(|e| anyhow::anyhow!("untupling {} output: {e}", exe.name))?;
+            anyhow::ensure!(
+                outs.len() == 1,
+                "{}: {} outputs in a run_device tuple",
+                exe.name,
+                outs.len()
+            );
+            let buf = exe.stage(&outs.remove(0), "output")?;
+            Ok(DeviceVec::from_buffer(buf, out_spec.elems()))
+        } else {
+            let buf = bufs
+                .into_iter()
+                .next()
+                .and_then(|replica| replica.into_iter().next())
+                .expect("non-empty checked in execute");
+            Ok(DeviceVec::from_buffer(buf, out_spec.elems()))
+        }
+    }
+}
+
+fn check_literal_shape(exe: &str, spec: &IoSpec, lit: &Literal) -> Result<()> {
+    let got = lit
+        .array_shape()
+        .map(|s| s.dims().iter().map(|&d| d as usize).collect::<Vec<_>>())
+        .unwrap_or_default();
+    anyhow::ensure!(
+        got == spec.shape,
+        "{exe}: input '{}' has shape {got:?}, manifest expects {:?}",
+        spec.name,
+        spec.shape
+    );
+    Ok(())
+}

@@ -103,6 +103,18 @@ pub struct ExeSpec {
     pub sha256: String,
 }
 
+impl ExeSpec {
+    /// Position of input `name` in the executable's argument list — the
+    /// lookup behind the named-binding `Call` API.
+    pub fn input_index(&self, name: &str) -> Option<usize> {
+        self.inputs.iter().position(|i| i.name == name)
+    }
+
+    pub fn input(&self, name: &str) -> Option<&IoSpec> {
+        self.input_index(name).map(|i| &self.inputs[i])
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct IoSpec {
     pub name: String,

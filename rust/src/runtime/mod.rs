@@ -1,13 +1,35 @@
 //! PJRT runtime: load HLO-text artifacts, compile once, execute from the
-//! hot path. Wraps the `xla` crate (`PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `compile` → `execute`), following
-//! /opt/xla-example/load_hlo.
+//! hot path with *device-resident* parameter state.
 //!
-//! All graphs are lowered with `return_tuple=True`, so every execution
-//! returns one tuple literal which we decompose into the manifest-declared
-//! outputs.
+//! The execution API has three pieces:
+//!
+//! * [`Runtime`] — process-wide PJRT client + compiled-executable cache
+//!   (one `PjRtLoadedExecutable` per (model, executable)), plus
+//!   [`Runtime::upload_f32`] for moving host vectors into device memory.
+//! * [`Executable::call`] — a named-binding invocation builder. Inputs are
+//!   bound *by manifest name* (`.device(..)` for on-device vectors,
+//!   `.literal(..)` for cached batch tensors, `.scalar_f32/_u32(..)` and
+//!   `.vec_f32(..)` for host scalars/coefficients) and validated against
+//!   the `ExeSpec` at bind time. Finish with `run()` for host outputs or
+//!   `run_device()` to keep a single-output result on device.
+//! * [`Session`] — a model opened for training. Its trainable vector (and
+//!   frozen base in prefix mode) lives on device across steps; the host
+//!   mirror refreshes only at explicit sync points (`sync_to_host`,
+//!   `*_host` accessors). Optimizers chain update graphs device-to-device
+//!   via `Session::set_trainable_dev`, so the O(d) parameter vector never
+//!   crosses the host↔device boundary on the step path — only at init,
+//!   eval/export and checkpoints.
+//!
+//! Artifacts come from `make artifacts` (`python/compile/aot.py`),
+//! following /opt/xla-example/load_hlo. Manifest v2 lowers single-output
+//! graphs with an array root so their results can stay on device;
+//! multi-output graphs return one tuple literal which `run()` decomposes
+//! on the host. v1 (all-tuple) artifacts still execute correctly — the
+//! device-resident fast path just degrades to an explicit round trip.
 
+pub mod exec;
 pub mod manifest;
+pub mod session;
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -15,8 +37,10 @@ use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{Context, Result};
+pub use exec::{Call, DeviceVec, Executable};
 pub use manifest::{ExeSpec, IoSpec, Manifest, ModelConfig, ModelEntry};
-use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
+pub use session::Session;
+use xla::{Literal, PjRtClient};
 
 /// Process-wide PJRT client + compiled-executable cache.
 pub struct Runtime {
@@ -56,6 +80,18 @@ impl Runtime {
         *self.compile_seconds.lock().unwrap()
     }
 
+    /// Upload a flat host vector into device memory. Parameters and
+    /// optimizer state cross the boundary here (init / checkpoint-load)
+    /// and then stay resident.
+    pub fn upload_f32(&self, data: &[f32]) -> Result<DeviceVec> {
+        let lit = Literal::vec1(data);
+        let buf = self
+            .client
+            .buffer_from_host_literal(None, &lit)
+            .map_err(|e| anyhow::anyhow!("uploading {} f32s: {e}", data.len()))?;
+        Ok(DeviceVec::from_buffer(buf, data.len()))
+    }
+
     /// Compile-on-demand with caching: one `PjRtLoadedExecutable` per
     /// (model, executable) for the whole process.
     pub fn executable(&self, model: &str, exe: &str) -> Result<Arc<Executable>> {
@@ -84,15 +120,17 @@ impl Runtime {
             .compile(&comp)
             .map_err(|e| anyhow::anyhow!("compiling {model}/{exe}: {e}"))?;
         *self.compile_seconds.lock().unwrap() += t0.elapsed().as_secs_f64();
+        // Root contract: manifest v2 lowers single-output graphs with an
+        // array root (device-returnable); v1 artifacts and multi-output
+        // graphs are tuple-rooted.
+        let tuple_root = self.manifest.version < 2 || spec.outputs.len() > 1;
         let wrapped = Arc::new(Executable {
             name: format!("{model}/{exe}"),
             exe: exe_compiled,
             spec,
+            tuple_root,
         });
-        self.cache
-            .lock()
-            .unwrap()
-            .insert(key, wrapped.clone());
+        self.cache.lock().unwrap().insert(key, wrapped.clone());
         Ok(wrapped)
     }
 
@@ -147,77 +185,6 @@ fn read_f32_bin(path: &Path, expect: usize) -> Result<Vec<f32>> {
         .collect())
 }
 
-/// A compiled step graph plus its IO contract.
-pub struct Executable {
-    pub name: String,
-    exe: PjRtLoadedExecutable,
-    pub spec: ExeSpec,
-}
-
-impl Executable {
-    /// Execute with literal inputs; returns the decomposed output tuple.
-    pub fn run(&self, inputs: &[Literal]) -> Result<Vec<Literal>> {
-        anyhow::ensure!(
-            inputs.len() == self.spec.inputs.len(),
-            "{}: got {} inputs, expected {} ({:?})",
-            self.name,
-            inputs.len(),
-            self.spec.inputs.len(),
-            self.spec.inputs.iter().map(|i| &i.name).collect::<Vec<_>>()
-        );
-        // XLA runs with strict_shape_checking=false (the shim's default)
-        // and SEGFAULTS on mismatched buffers — validate against the
-        // manifest contract first so bad inputs fail as Rust errors.
-        for (l, spec) in inputs.iter().zip(&self.spec.inputs) {
-            let got = l
-                .array_shape()
-                .map(|s| s.dims().iter().map(|&d| d as usize).collect::<Vec<_>>())
-                .unwrap_or_default();
-            anyhow::ensure!(
-                got == spec.shape,
-                "{}: input '{}' has shape {:?}, manifest expects {:?}",
-                self.name,
-                spec.name,
-                got,
-                spec.shape
-            );
-        }
-        // NOTE: do not use `execute::<Literal>` here — the vendored shim's
-        // C `execute` path leaks every input device buffer (it `release()`s
-        // the unique_ptrs and never frees them), which bleeds ~1MB of theta
-        // per step and OOMs long training runs. Staging through Rust-owned
-        // `PjRtBuffer`s (freed on Drop) and `execute_b` is leak-free.
-        let client = self.exe.client();
-        let mut staged = Vec::with_capacity(inputs.len());
-        for l in inputs {
-            staged.push(
-                client
-                    .buffer_from_host_literal(None, l)
-                    .map_err(|e| anyhow::anyhow!("staging {} input: {e}", self.name))?,
-            );
-        }
-        let bufs = self
-            .exe
-            .execute_b::<xla::PjRtBuffer>(&staged)
-            .map_err(|e| anyhow::anyhow!("executing {}: {e}", self.name))?;
-        drop(staged);
-        let mut lit = bufs[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("fetching {} output: {e}", self.name))?;
-        let outs = lit
-            .decompose_tuple()
-            .map_err(|e| anyhow::anyhow!("untupling {} output: {e}", self.name))?;
-        anyhow::ensure!(
-            outs.len() == self.spec.outputs.len(),
-            "{}: {} outputs, manifest says {}",
-            self.name,
-            outs.len(),
-            self.spec.outputs.len()
-        );
-        Ok(outs)
-    }
-}
-
 // ---------------------------------------------------------------------------
 // literal helpers
 // ---------------------------------------------------------------------------
@@ -237,14 +204,6 @@ pub fn lit_i32(data: &[i32], shape: &[usize]) -> Result<Literal> {
     l.reshape(&dims).map_err(|e| anyhow::anyhow!("reshape i32: {e}"))
 }
 
-pub fn lit_scalar_f32(v: f32) -> Literal {
-    Literal::scalar(v)
-}
-
-pub fn lit_scalar_u32(v: u32) -> Literal {
-    Literal::scalar(v)
-}
-
 pub fn to_vec_f32(l: &Literal) -> Result<Vec<f32>> {
     l.to_vec::<f32>().map_err(|e| anyhow::anyhow!("literal -> Vec<f32>: {e}"))
 }
@@ -252,87 +211,4 @@ pub fn to_vec_f32(l: &Literal) -> Result<Vec<f32>> {
 pub fn scalar_f32(l: &Literal) -> Result<f32> {
     l.get_first_element::<f32>()
         .map_err(|e| anyhow::anyhow!("literal -> f32: {e}"))
-}
-
-// ---------------------------------------------------------------------------
-// Session: one model's state (parameters + compiled exes) for training
-// ---------------------------------------------------------------------------
-
-/// A model opened for training: flat parameters (and optional trainable
-/// prefix) plus the manifest entry. Optimizers mutate `theta` through the
-/// AOT update graphs; nothing in Rust touches individual weights.
-pub struct Session {
-    pub model: String,
-    pub entry: ModelEntry,
-    /// full parameters (frozen base in prefix mode)
-    pub theta: Vec<f32>,
-    /// trainable prefix (empty unless prefix mode)
-    pub prefix: Vec<f32>,
-}
-
-impl Session {
-    pub fn open(rt: &Runtime, model: &str) -> Result<Self> {
-        let entry = rt.manifest.model(model)?.clone();
-        let theta = rt.init_params(model)?;
-        let prefix = if entry.config.is_prefix() {
-            rt.init_prefix(model)?
-        } else {
-            Vec::new()
-        };
-        Ok(Self {
-            model: model.to_string(),
-            entry,
-            theta,
-            prefix,
-        })
-    }
-
-    pub fn model_config(&self) -> &ModelConfig {
-        &self.entry.config
-    }
-
-    /// The vector the optimizer trains (prefix in PEFT mode, else theta).
-    pub fn trainable(&self) -> &[f32] {
-        if self.entry.config.is_prefix() {
-            &self.prefix
-        } else {
-            &self.theta
-        }
-    }
-
-    pub fn trainable_mut(&mut self) -> &mut Vec<f32> {
-        if self.entry.config.is_prefix() {
-            &mut self.prefix
-        } else {
-            &mut self.theta
-        }
-    }
-
-    pub fn d_trainable(&self) -> usize {
-        if self.entry.config.is_prefix() {
-            self.entry.d_prefix
-        } else {
-            self.entry.d
-        }
-    }
-
-    /// Literal of the trainable vector.
-    pub fn trainable_lit(&self) -> Result<Literal> {
-        lit_f32(self.trainable(), &[self.trainable().len()])
-    }
-
-    /// Literal of the frozen base (prefix mode only).
-    pub fn base_lit(&self) -> Result<Literal> {
-        lit_f32(&self.theta, &[self.theta.len()])
-    }
-
-    /// Leading inputs for loss/eval executables: `[theta]` in FT mode,
-    /// `[prefix, base]` in prefix mode.
-    pub fn param_inputs(&self) -> Result<Vec<Literal>> {
-        if self.entry.config.is_prefix() {
-            Ok(vec![self.trainable_lit()?, self.base_lit()?])
-        } else {
-            Ok(vec![self.trainable_lit()?])
-        }
-    }
 }

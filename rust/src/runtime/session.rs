@@ -1,0 +1,218 @@
+//! `Session`: one model opened for training, with its parameters resident
+//! in device memory.
+//!
+//! The trainable vector (and the frozen base in prefix mode) lives on
+//! device as a `DeviceVec` and stays there across steps — optimizers swap
+//! in each step's updated buffer with `set_trainable_dev` and the
+//! parameters never touch the host on the hot path. A host mirror is kept
+//! for init/checkpoint/export; it only refreshes at the *explicit* sync
+//! points (`sync_to_host` and the `*_host` accessors), so every host↔device
+//! crossing of the parameter vector is visible at a call site.
+
+use anyhow::Result;
+
+use super::exec::{Call, DeviceVec};
+use super::manifest::{ModelConfig, ModelEntry};
+use super::Runtime;
+
+/// A model opened for training: device-resident flat parameters (and
+/// optional trainable prefix) plus the manifest entry. Optimizers mutate
+/// the parameters only through the AOT update graphs; nothing in Rust
+/// touches individual weights.
+pub struct Session {
+    pub model: String,
+    pub entry: ModelEntry,
+    /// host mirror of the full parameter vector (frozen base in prefix
+    /// mode); may lag the device copy until `sync_to_host`
+    theta: Vec<f32>,
+    /// host mirror of the trainable prefix (empty unless prefix mode)
+    prefix: Vec<f32>,
+    /// the authoritative trainable vector, resident on device
+    dev_trainable: DeviceVec,
+    /// frozen base, uploaded once at open (prefix mode only)
+    dev_base: Option<DeviceVec>,
+    /// device copy is ahead of the host mirror
+    dirty: bool,
+}
+
+impl Session {
+    pub fn open(rt: &Runtime, model: &str) -> Result<Self> {
+        let entry = rt.manifest.model(model)?.clone();
+        let theta = rt.init_params(model)?;
+        let (prefix, dev_trainable, dev_base) = if entry.config.is_prefix() {
+            let prefix = rt.init_prefix(model)?;
+            let dev = rt.upload_f32(&prefix)?;
+            (prefix, dev, Some(rt.upload_f32(&theta)?))
+        } else {
+            (Vec::new(), rt.upload_f32(&theta)?, None)
+        };
+        Ok(Self {
+            model: model.to_string(),
+            entry,
+            theta,
+            prefix,
+            dev_trainable,
+            dev_base,
+            dirty: false,
+        })
+    }
+
+    pub fn model_config(&self) -> &ModelConfig {
+        &self.entry.config
+    }
+
+    pub fn is_prefix(&self) -> bool {
+        self.entry.config.is_prefix()
+    }
+
+    pub fn d_trainable(&self) -> usize {
+        if self.is_prefix() {
+            self.entry.d_prefix
+        } else {
+            self.entry.d
+        }
+    }
+
+    /// Manifest input name of the trainable vector in the step graphs
+    /// (`"prefix"` in PEFT mode, `"theta"` otherwise).
+    pub fn trainable_name(&self) -> &'static str {
+        if self.is_prefix() {
+            "prefix"
+        } else {
+            "theta"
+        }
+    }
+
+    /// The device-resident trainable vector (bind with `Call::device`).
+    pub fn trainable_dev(&self) -> &DeviceVec {
+        &self.dev_trainable
+    }
+
+    /// Swap in a new device-resident trainable vector (an update graph's
+    /// output) and return the previous one — handy for reject/restore
+    /// optimizers that keep a zero-copy backup.
+    pub fn set_trainable_dev(&mut self, v: DeviceVec) -> DeviceVec {
+        debug_assert_eq!(
+            v.len(),
+            self.d_trainable(),
+            "trainable swap with mismatched length"
+        );
+        self.dirty = true;
+        std::mem::replace(&mut self.dev_trainable, v)
+    }
+
+    /// Bind this session's parameters onto `call` by manifest name:
+    /// `theta` in FT mode, `prefix` + `base` in prefix mode. Pure device
+    /// bindings — no host traffic.
+    pub fn bind_params<'a>(&'a self, call: Call<'a>) -> Result<Call<'a>> {
+        if self.is_prefix() {
+            call.device("prefix", &self.dev_trainable)?.device(
+                "base",
+                self.dev_base.as_ref().expect("prefix session holds a base"),
+            )
+        } else {
+            call.device("theta", &self.dev_trainable)
+        }
+    }
+
+    /// Copy the device-resident trainable vector back into the host
+    /// mirror. No-op when the mirror is already current. This is the
+    /// explicit eval/export/checkpoint boundary.
+    pub fn sync_to_host(&mut self) -> Result<()> {
+        if !self.dirty {
+            return Ok(());
+        }
+        let host = self.dev_trainable.to_host()?;
+        if self.is_prefix() {
+            self.prefix = host;
+        } else {
+            self.theta = host;
+        }
+        self.dirty = false;
+        Ok(())
+    }
+
+    /// Host view of the trainable vector (syncs first if the device copy
+    /// is ahead).
+    pub fn trainable_host(&mut self) -> Result<&[f32]> {
+        self.sync_to_host()?;
+        Ok(if self.is_prefix() {
+            &self.prefix
+        } else {
+            &self.theta
+        })
+    }
+
+    /// Host view of the full parameter vector (the frozen base in prefix
+    /// mode, which never moves during training).
+    pub fn theta_host(&mut self) -> Result<&[f32]> {
+        if !self.is_prefix() {
+            self.sync_to_host()?;
+        }
+        Ok(&self.theta)
+    }
+
+    /// Host view of the trainable prefix (prefix mode only).
+    pub fn prefix_host(&mut self) -> Result<&[f32]> {
+        anyhow::ensure!(self.is_prefix(), "model '{}' has no prefix", self.model);
+        self.sync_to_host()?;
+        Ok(&self.prefix)
+    }
+
+    /// Replace the full parameter vector (checkpoint load / pretrained
+    /// transplant) and re-upload. In prefix mode this replaces the frozen
+    /// *base*; the trainable prefix is untouched.
+    pub fn set_theta(&mut self, rt: &Runtime, theta: Vec<f32>) -> Result<()> {
+        anyhow::ensure!(
+            theta.len() == self.entry.d,
+            "set_theta: {} values, model '{}' has d = {}",
+            theta.len(),
+            self.model,
+            self.entry.d
+        );
+        if self.is_prefix() {
+            self.dev_base = Some(rt.upload_f32(&theta)?);
+        } else {
+            self.dev_trainable = rt.upload_f32(&theta)?;
+            self.dirty = false;
+        }
+        self.theta = theta;
+        Ok(())
+    }
+
+    /// Replace the trainable vector from host values and re-upload (used
+    /// by host-fallback paths on v1 artifacts; the device hot path goes
+    /// through `set_trainable_dev`).
+    pub fn set_trainable(&mut self, rt: &Runtime, v: Vec<f32>) -> Result<()> {
+        anyhow::ensure!(
+            v.len() == self.d_trainable(),
+            "set_trainable: {} values, model '{}' trains d = {}",
+            v.len(),
+            self.model,
+            self.d_trainable()
+        );
+        self.dev_trainable = rt.upload_f32(&v)?;
+        if self.is_prefix() {
+            self.prefix = v;
+        } else {
+            self.theta = v;
+        }
+        self.dirty = false;
+        Ok(())
+    }
+
+    /// Consume the session, returning the synced full parameter vector
+    /// (checkpoint/export convenience). FT mode only: a prefix session's
+    /// trained state lives in the prefix, which this would silently drop —
+    /// export those via `prefix_host` + `theta_host` instead.
+    pub fn into_theta(mut self) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            !self.is_prefix(),
+            "into_theta on prefix model '{}' would discard the trained \
+             prefix; export prefix_host() and theta_host() separately",
+            self.model
+        );
+        self.sync_to_host()?;
+        Ok(self.theta)
+    }
+}

@@ -1,0 +1,304 @@
+//! Contract tests for the named-binding execution API (`Executable::call`,
+//! `DeviceVec`, `Session` device-resident state): happy path, every
+//! bind-time validation failure (which must surface as Rust errors
+//! *before* anything reaches XLA — it runs with
+//! `strict_shape_checking=false` and segfaults on bad buffers), and the
+//! device/host sync consistency of `Session`.
+//!
+//! Requires `make artifacts` (the tiny-* models).
+
+use fzoo::data::{Batch, Batcher, Split, TaskKind};
+use fzoo::optim::{Fzoo, FzooMode, Objective, Optimizer};
+use fzoo::runtime::{lit_i32, scalar_f32, to_vec_f32, Runtime, Session};
+
+fn runtime() -> Runtime {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Runtime::load(dir).expect("run `make artifacts` before cargo test")
+}
+
+fn train_batch(s: &Session, task: TaskKind) -> Batch {
+    let t = task.instantiate(s.model_config(), 0).unwrap();
+    let b = Batcher::new(t, &s.entry.config, 0);
+    b.assemble(Split::Train, &[0, 1, 2, 3])
+}
+
+/// Happy path: inputs bound by name, in an order unrelated to the
+/// manifest's positional order, produce a correct execution.
+#[test]
+fn named_bindings_are_order_independent() {
+    let rt = runtime();
+    let s = Session::open(&rt, "tiny-enc").unwrap();
+    let exe = rt.executable("tiny-enc", "fwd_loss").unwrap();
+    let batch = train_batch(&s, TaskKind::Sst2);
+    let (ids, labels, mask) = batch.literals().unwrap();
+
+    // manifest order: theta, ids, labels, mask — bind reversed
+    let a = exe
+        .call()
+        .literal("mask", mask)
+        .unwrap()
+        .literal("labels", labels)
+        .unwrap()
+        .literal("ids", ids)
+        .unwrap()
+        .device("theta", s.trainable_dev())
+        .unwrap()
+        .run()
+        .unwrap();
+    let b = exe
+        .call()
+        .device("theta", s.trainable_dev())
+        .unwrap()
+        .literal("ids", ids)
+        .unwrap()
+        .literal("labels", labels)
+        .unwrap()
+        .literal("mask", mask)
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(
+        scalar_f32(&a[0]).unwrap(),
+        scalar_f32(&b[0]).unwrap(),
+        "bind order must not affect the execution"
+    );
+}
+
+/// A missing input must fail at run() with the unbound names listed.
+#[test]
+fn missing_input_is_reported_by_name() {
+    let rt = runtime();
+    let s = Session::open(&rt, "tiny-enc").unwrap();
+    let exe = rt.executable("tiny-enc", "fwd_loss").unwrap();
+    let batch = train_batch(&s, TaskKind::Sst2);
+    let (ids, _labels, _mask) = batch.literals().unwrap();
+    let err = exe
+        .call()
+        .device("theta", s.trainable_dev())
+        .unwrap()
+        .literal("ids", ids)
+        .unwrap()
+        .run()
+        .err()
+        .expect("unbound inputs must fail");
+    let msg = format!("{err}");
+    assert!(msg.contains("labels") && msg.contains("mask"), "{msg}");
+}
+
+/// Binding a name the manifest doesn't declare fails immediately and
+/// lists what is available.
+#[test]
+fn unknown_input_name_lists_available() {
+    let rt = runtime();
+    let exe = rt.executable("tiny-enc", "gauss_update").unwrap();
+    let err = exe.call().scalar_u32("sede", 1).err().expect("typo must fail");
+    let msg = format!("{err}");
+    assert!(msg.contains("sede") && msg.contains("seed"), "{msg}");
+}
+
+/// Shape mismatches must fail at bind time as Rust errors (the segfault
+/// guard): a wrongly-shaped batch tensor never reaches the client.
+#[test]
+fn literal_shape_mismatch_fails_at_bind_time() {
+    let rt = runtime();
+    let s = Session::open(&rt, "tiny-enc").unwrap();
+    let exe = rt.executable("tiny-enc", "fwd_loss").unwrap();
+    // ids should be [4, 16]; build [4, 8]
+    let bad = lit_i32(&[0; 32], &[4, 8]).unwrap();
+    let err = exe
+        .call()
+        .device("theta", s.trainable_dev())
+        .unwrap()
+        .literal("ids", &bad)
+        .err()
+        .expect("wrong shape must fail before reaching XLA");
+    let msg = format!("{err}");
+    assert!(msg.contains("manifest") && msg.contains("ids"), "{msg}");
+}
+
+/// A device vector of the wrong length is rejected at bind time too.
+#[test]
+fn device_vec_length_mismatch_fails_at_bind_time() {
+    let rt = runtime();
+    let exe = rt.executable("tiny-enc", "gauss_update").unwrap();
+    let short = rt.upload_f32(&[1.0, 2.0, 3.0]).unwrap();
+    let err = exe
+        .call()
+        .device("theta", &short)
+        .err()
+        .expect("short theta must fail");
+    assert!(format!("{err}").contains("theta"), "{err}");
+}
+
+/// Scalars are dtype-checked: a u32 slot refuses an f32 bind and vice
+/// versa.
+#[test]
+fn scalar_dtype_mismatch_fails_at_bind_time() {
+    let rt = runtime();
+    let exe = rt.executable("tiny-enc", "gauss_update").unwrap();
+    assert!(exe.call().scalar_f32("seed", 1.0).is_err());
+    assert!(exe.call().scalar_u32("coeff", 1).is_err());
+}
+
+/// Double-binding one input is a hard error, not a silent overwrite.
+#[test]
+fn duplicate_bind_is_rejected() {
+    let rt = runtime();
+    let exe = rt.executable("tiny-enc", "gauss_update").unwrap();
+    let err = exe
+        .call()
+        .scalar_u32("seed", 1)
+        .unwrap()
+        .scalar_u32("seed", 2)
+        .err()
+        .expect("duplicate bind must fail");
+    assert!(format!("{err}").contains("twice"), "{err}");
+}
+
+/// run_device is only for single-output graphs; multi-output (tuple
+/// rooted) graphs must refuse it with a pointer to run().
+#[test]
+fn run_device_refuses_multi_output_graphs() {
+    let rt = runtime();
+    let s = Session::open(&rt, "tiny-enc").unwrap();
+    let exe = rt.executable("tiny-enc", "mezo_losses").unwrap();
+    let batch = train_batch(&s, TaskKind::Sst2);
+    let (ids, labels, mask) = batch.literals().unwrap();
+    let err = exe
+        .call()
+        .device("theta", s.trainable_dev())
+        .unwrap()
+        .literal("ids", ids)
+        .unwrap()
+        .literal("labels", labels)
+        .unwrap()
+        .literal("mask", mask)
+        .unwrap()
+        .scalar_u32("seed", 1)
+        .unwrap()
+        .scalar_f32("eps", 1e-3)
+        .unwrap()
+        .run_device()
+        .err()
+        .expect("multi-output run_device must fail");
+    assert!(format!("{err}").contains("single-output"), "{err}");
+}
+
+/// upload -> to_host round-trips bit-exactly.
+#[test]
+fn device_vec_upload_roundtrip() {
+    let rt = runtime();
+    let data: Vec<f32> = (0..1000).map(|i| (i as f32).sin()).collect();
+    let dv = rt.upload_f32(&data).unwrap();
+    assert_eq!(dv.len(), 1000);
+    assert_eq!(dv.to_host().unwrap(), data);
+}
+
+/// Session sync consistency: after training steps, the device copy is the
+/// truth; sync_to_host must make the host mirror agree with it exactly,
+/// and the parameters must only have crossed at that explicit point.
+#[test]
+fn session_sync_consistency_after_steps() {
+    let rt = runtime();
+    let mut s = Session::open(&rt, "tiny-enc").unwrap();
+    let theta0 = s.trainable_host().unwrap().to_vec();
+    let task = TaskKind::Sst2.instantiate(s.model_config(), 0).unwrap();
+    let mut batcher = Batcher::new(task, &s.entry.config, 0);
+    let n = s.entry.config.n_pert;
+    let mut opt = Fzoo::new(1e-2, 1e-3, n, FzooMode::Parallel, Objective::Ce, 7);
+    for step in 0..3 {
+        let batch = batcher.next_train();
+        opt.step(&rt, &mut s, &batch, step).unwrap();
+    }
+    // device is the truth; read it directly...
+    let device_theta = s.trainable_dev().to_host().unwrap();
+    // ...then sync and compare the host mirror
+    s.sync_to_host().unwrap();
+    let host_theta = s.trainable_host().unwrap();
+    assert_eq!(device_theta, host_theta, "host mirror != device after sync");
+    assert_ne!(device_theta, theta0, "three steps must have moved theta");
+    // sync is idempotent
+    s.sync_to_host().unwrap();
+    assert_eq!(s.trainable_host().unwrap(), &device_theta[..]);
+}
+
+/// The update executables advertise device residency on v2 artifacts —
+/// the property the whole redesign exists to exploit.
+#[test]
+fn update_graphs_are_device_resident_on_v2_artifacts() {
+    let rt = runtime();
+    if rt.manifest.version < 2 {
+        return; // stale artifact set: fallback path, nothing to assert
+    }
+    for exe in ["zo_update", "gauss_update", "sgd_apply", "rad_perturb"] {
+        assert!(
+            rt.executable("tiny-enc", exe).unwrap().is_device_resident(),
+            "{exe} should run without host round trips"
+        );
+    }
+    // multi-output graphs are not device-returnable by contract
+    assert!(!rt.executable("tiny-enc", "mezo_losses").unwrap().is_device_resident());
+}
+
+/// End-to-end: a probe + update step via the binding API equals the same
+/// math computed from the host-side probe losses (no drift between the
+/// device-resident path and the reference).
+#[test]
+fn device_resident_step_matches_host_reference() {
+    let rt = runtime();
+    let mut s = Session::open(&rt, "tiny-enc").unwrap();
+    let batch = train_batch(&s, TaskKind::Sst2);
+    let (ids, labels, mask) = batch.literals().unwrap();
+    let fz = rt.executable("tiny-enc", "fzoo_losses").unwrap();
+    let losses = to_vec_f32(
+        &fz.call()
+            .device("theta", s.trainable_dev())
+            .unwrap()
+            .literal("ids", ids)
+            .unwrap()
+            .literal("labels", labels)
+            .unwrap()
+            .literal("mask", mask)
+            .unwrap()
+            .scalar_u32("seed", 11)
+            .unwrap()
+            .scalar_f32("eps", 1e-3)
+            .unwrap()
+            .run()
+            .unwrap()[0],
+    )
+    .unwrap();
+    let n = losses.len() - 1;
+    let sigma = fzoo::optim::sample_std(&losses[1..]);
+    let coeffs: Vec<f32> = losses[1..]
+        .iter()
+        .map(|&li| 1e-2 * (li - losses[0]) / (n as f32 * sigma))
+        .collect();
+    let upd = rt.executable("tiny-enc", "zo_update").unwrap();
+    let theta2 = upd
+        .call()
+        .device("theta", s.trainable_dev())
+        .unwrap()
+        .scalar_u32("seed", 11)
+        .unwrap()
+        .vec_f32("coeffs", &coeffs)
+        .unwrap()
+        .run_device()
+        .unwrap();
+    // reference: same walk via the parity hash on the host
+    let d = s.entry.d;
+    let mut want = s.theta_host().unwrap().to_vec();
+    for (i, c) in coeffs.iter().enumerate() {
+        let u = fzoo::zorng::rademacher_vec(fzoo::zorng::stream_seed(11, (i + 1) as u32), d);
+        for (w, ui) in want.iter_mut().zip(&u) {
+            *w -= c * ui;
+        }
+    }
+    let got = theta2.to_host().unwrap();
+    let max = got
+        .iter()
+        .zip(&want)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max < 1e-6, "device path drifted from reference: {max}");
+}

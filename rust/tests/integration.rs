@@ -1,13 +1,12 @@
 //! Integration tests over the real AOT artifacts (tiny models): load,
-//! compile, execute, and check the cross-language invariants.
+//! compile, execute through the named-binding API, and check the
+//! cross-language invariants.
 //!
 //! Requires `make artifacts` (the tiny-* models) to have run.
 
-use fzoo::data::{Batcher, Split, TaskKind};
+use fzoo::data::{Batch, Batcher, Split, TaskKind};
 use fzoo::optim::{sample_std, step_seed};
-use fzoo::runtime::{
-    lit_f32, lit_scalar_f32, lit_scalar_u32, scalar_f32, to_vec_f32, Runtime, Session,
-};
+use fzoo::runtime::{scalar_f32, to_vec_f32, Runtime, Session};
 use fzoo::zorng::{rademacher_vec, stream_seed};
 
 fn runtime() -> Runtime {
@@ -15,13 +14,10 @@ fn runtime() -> Runtime {
     Runtime::load(dir).expect("run `make artifacts` before cargo test")
 }
 
-fn batch_literals(
-    s: &Session,
-    task: TaskKind,
-) -> (xla::Literal, xla::Literal, xla::Literal) {
+fn train_batch(s: &Session, task: TaskKind) -> Batch {
     let t = task.instantiate(s.model_config(), 0).unwrap();
     let b = Batcher::new(t, &s.entry.config, 0);
-    b.assemble(Split::Train, &[0, 1, 2, 3]).literals().unwrap()
+    b.assemble(Split::Train, &[0, 1, 2, 3])
 }
 
 #[test]
@@ -29,9 +25,19 @@ fn fwd_loss_runs_and_is_near_chance() {
     let rt = runtime();
     let s = Session::open(&rt, "tiny-enc").unwrap();
     let exe = rt.executable("tiny-enc", "fwd_loss").unwrap();
-    let (ids, labels, mask) = batch_literals(&s, TaskKind::Sst2);
+    let batch = train_batch(&s, TaskKind::Sst2);
+    let (ids, labels, mask) = batch.literals().unwrap();
     let outs = exe
-        .run(&[s.trainable_lit().unwrap(), ids, labels, mask])
+        .call()
+        .device("theta", s.trainable_dev())
+        .unwrap()
+        .literal("ids", ids)
+        .unwrap()
+        .literal("labels", labels)
+        .unwrap()
+        .literal("mask", mask)
+        .unwrap()
+        .run()
         .unwrap();
     let loss = scalar_f32(&outs[0]).unwrap();
     assert!(loss.is_finite());
@@ -45,22 +51,38 @@ fn fzoo_losses_stream0_matches_fwd_loss() {
     let s = Session::open(&rt, "tiny-enc").unwrap();
     let fwd = rt.executable("tiny-enc", "fwd_loss").unwrap();
     let fz = rt.executable("tiny-enc", "fzoo_losses").unwrap();
-    let (ids, labels, mask) = batch_literals(&s, TaskKind::Sst2);
+    let batch = train_batch(&s, TaskKind::Sst2);
+    let (ids, labels, mask) = batch.literals().unwrap();
     let l0 = scalar_f32(
-        &fwd.run(&[s.trainable_lit().unwrap(), ids, labels, mask]).unwrap()[0],
+        &fwd.call()
+            .device("theta", s.trainable_dev())
+            .unwrap()
+            .literal("ids", ids)
+            .unwrap()
+            .literal("labels", labels)
+            .unwrap()
+            .literal("mask", mask)
+            .unwrap()
+            .run()
+            .unwrap()[0],
     )
     .unwrap();
-    let (ids, labels, mask) = batch_literals(&s, TaskKind::Sst2);
     let losses = to_vec_f32(
-        &fz.run(&[
-            s.trainable_lit().unwrap(),
-            ids,
-            labels,
-            mask,
-            lit_scalar_u32(42),
-            lit_scalar_f32(1e-3),
-        ])
-        .unwrap()[0],
+        &fz.call()
+            .device("theta", s.trainable_dev())
+            .unwrap()
+            .literal("ids", ids)
+            .unwrap()
+            .literal("labels", labels)
+            .unwrap()
+            .literal("mask", mask)
+            .unwrap()
+            .scalar_u32("seed", 42)
+            .unwrap()
+            .scalar_f32("eps", 1e-3)
+            .unwrap()
+            .run()
+            .unwrap()[0],
     )
     .unwrap();
     assert_eq!(losses.len(), s.entry.config.n_pert + 1);
@@ -71,27 +93,32 @@ fn fzoo_losses_stream0_matches_fwd_loss() {
 }
 
 /// THE cross-language invariant: the AOT `zo_update` graph must walk back
-/// exactly the Rademacher directions the Rust hash predicts.
+/// exactly the Rademacher directions the Rust hash predicts — with the
+/// update running device-to-device through the binding API.
 #[test]
 fn zo_update_matches_rust_hash_parity() {
     let rt = runtime();
-    let s = Session::open(&rt, "tiny-enc").unwrap();
+    let mut s = Session::open(&rt, "tiny-enc").unwrap();
     let d = s.entry.d;
     let upd = rt.executable("tiny-enc", "zo_update").unwrap();
     let n = s.entry.config.n_pert;
     let seed = 777u32;
     let coeffs: Vec<f32> = (0..n).map(|i| 1e-4 * (i as f32 + 1.0)).collect();
+    let theta0 = s.theta_host().unwrap().to_vec();
     let out = upd
-        .run(&[
-            s.trainable_lit().unwrap(),
-            lit_scalar_u32(seed),
-            lit_f32(&coeffs, &[n]).unwrap(),
-        ])
+        .call()
+        .device("theta", s.trainable_dev())
+        .unwrap()
+        .scalar_u32("seed", seed)
+        .unwrap()
+        .vec_f32("coeffs", &coeffs)
+        .unwrap()
+        .run_device()
         .unwrap();
-    let got = to_vec_f32(&out[0]).unwrap();
+    let got = out.to_host().unwrap();
 
     // reference walk in rust via the parity hash
-    let mut want = s.theta.clone();
+    let mut want = theta0;
     for (i, c) in coeffs.iter().enumerate() {
         let u = rademacher_vec(stream_seed(seed, (i + 1) as u32), d);
         for (w, ui) in want.iter_mut().zip(&u) {
@@ -109,21 +136,26 @@ fn zo_update_matches_rust_hash_parity() {
 #[test]
 fn rad_perturb_matches_rust_hash() {
     let rt = runtime();
-    let s = Session::open(&rt, "tiny-enc").unwrap();
+    let mut s = Session::open(&rt, "tiny-enc").unwrap();
     let d = s.entry.d;
     let exe = rt.executable("tiny-enc", "rad_perturb").unwrap();
     let out = exe
-        .run(&[
-            s.trainable_lit().unwrap(),
-            lit_scalar_u32(9),
-            lit_scalar_u32(3),
-            lit_scalar_f32(0.5),
-        ])
+        .call()
+        .device("theta", s.trainable_dev())
+        .unwrap()
+        .scalar_u32("seed", 9)
+        .unwrap()
+        .scalar_u32("stream", 3)
+        .unwrap()
+        .scalar_f32("eps", 0.5)
+        .unwrap()
+        .run_device()
         .unwrap();
-    let got = to_vec_f32(&out[0]).unwrap();
+    let got = out.to_host().unwrap();
+    let theta0 = s.theta_host().unwrap();
     let u = rademacher_vec(stream_seed(9, 3), d);
     for i in 0..d {
-        assert!((got[i] - (s.theta[i] + 0.5 * u[i])).abs() < 1e-6, "idx {i}");
+        assert!((got[i] - (theta0[i] + 0.5 * u[i])).abs() < 1e-6, "idx {i}");
     }
 }
 
@@ -132,28 +164,42 @@ fn mezo_losses_and_gauss_update_consistent() {
     // lp - lm should be reproducible, and gauss_update(coeff=0) must be a
     // no-op (same direction regenerated).
     let rt = runtime();
-    let s = Session::open(&rt, "tiny-enc").unwrap();
+    let mut s = Session::open(&rt, "tiny-enc").unwrap();
     let mz = rt.executable("tiny-enc", "mezo_losses").unwrap();
-    let (ids, labels, mask) = batch_literals(&s, TaskKind::Sst2);
+    let batch = train_batch(&s, TaskKind::Sst2);
+    let (ids, labels, mask) = batch.literals().unwrap();
     let outs = mz
-        .run(&[
-            s.trainable_lit().unwrap(),
-            ids,
-            labels,
-            mask,
-            lit_scalar_u32(5),
-            lit_scalar_f32(1e-3),
-        ])
+        .call()
+        .device("theta", s.trainable_dev())
+        .unwrap()
+        .literal("ids", ids)
+        .unwrap()
+        .literal("labels", labels)
+        .unwrap()
+        .literal("mask", mask)
+        .unwrap()
+        .scalar_u32("seed", 5)
+        .unwrap()
+        .scalar_f32("eps", 1e-3)
+        .unwrap()
+        .run()
         .unwrap();
     let (lp, lm) = (scalar_f32(&outs[0]).unwrap(), scalar_f32(&outs[1]).unwrap());
     assert!(lp.is_finite() && lm.is_finite() && (lp - lm).abs() > 0.0);
 
     let gu = rt.executable("tiny-enc", "gauss_update").unwrap();
     let out = gu
-        .run(&[s.trainable_lit().unwrap(), lit_scalar_u32(5), lit_scalar_f32(0.0)])
+        .call()
+        .device("theta", s.trainable_dev())
+        .unwrap()
+        .scalar_u32("seed", 5)
+        .unwrap()
+        .scalar_f32("coeff", 0.0)
+        .unwrap()
+        .run_device()
         .unwrap();
-    let got = to_vec_f32(&out[0]).unwrap();
-    assert_eq!(got, s.theta);
+    let got = out.to_host().unwrap();
+    assert_eq!(got, s.theta_host().unwrap());
 }
 
 #[test]
@@ -167,7 +213,16 @@ fn eval_logits_shapes_cls_and_span() {
         let b = Batcher::new(t, &s.entry.config, 0);
         let batch = b.eval_batch(0);
         let (ids, _labels, mask) = batch.literals().unwrap();
-        let outs = exe.run(&[s.trainable_lit().unwrap(), ids, mask]).unwrap();
+        let outs = exe
+            .call()
+            .device("theta", s.trainable_dev())
+            .unwrap()
+            .literal("ids", ids)
+            .unwrap()
+            .literal("mask", mask)
+            .unwrap()
+            .run()
+            .unwrap();
         if span {
             assert_eq!(outs.len(), 2);
             assert_eq!(to_vec_f32(&outs[0]).unwrap().len(), 4 * 16);
@@ -183,14 +238,27 @@ fn prefix_family_runs() {
     let rt = runtime();
     let s = Session::open(&rt, "tiny-enc-prefix").unwrap();
     assert!(s.entry.config.is_prefix());
-    assert_eq!(s.prefix.len(), s.entry.d_prefix);
+    assert_eq!(s.trainable_dev().len(), s.entry.d_prefix);
     let fz = rt.executable("tiny-enc-prefix", "fzoo_losses").unwrap();
-    let (ids, labels, mask) = batch_literals(&s, TaskKind::Sst2);
-    let mut inputs = s.param_inputs().unwrap();
-    inputs.extend([ids, labels, mask]);
-    inputs.push(lit_scalar_u32(1));
-    inputs.push(lit_scalar_f32(1e-2));
-    let losses = to_vec_f32(&fz.run(&inputs).unwrap()[0]).unwrap();
+    let batch = train_batch(&s, TaskKind::Sst2);
+    let (ids, labels, mask) = batch.literals().unwrap();
+    let losses = to_vec_f32(
+        &s.bind_params(fz.call())
+            .unwrap()
+            .literal("ids", ids)
+            .unwrap()
+            .literal("labels", labels)
+            .unwrap()
+            .literal("mask", mask)
+            .unwrap()
+            .scalar_u32("seed", 1)
+            .unwrap()
+            .scalar_f32("eps", 1e-2)
+            .unwrap()
+            .run()
+            .unwrap()[0],
+    )
+    .unwrap();
     assert_eq!(losses.len(), s.entry.config.n_pert + 1);
     assert!(sample_std(&losses[1..]) > 0.0);
 }

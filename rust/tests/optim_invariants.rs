@@ -2,23 +2,23 @@
 //! update must decompose exactly into the paper's Algorithm-1 algebra,
 //! runs must be bit-replayable from seeds, and the accounting the
 //! experiment harness relies on (forwards per step) must match what the
-//! optimizers actually execute.
+//! optimizers actually execute. All parameter state is device-resident;
+//! tests read it back through the explicit host accessors.
 
 use fzoo::coordinator::{TrainOpts, Trainer};
 use fzoo::data::{Batcher, TaskKind};
 use fzoo::optim::{sample_std, step_seed, Objective, OptimizerKind};
 use fzoo::optim::{Fzoo, FzooMode, Optimizer};
-use fzoo::runtime::{
-    lit_scalar_f32, lit_scalar_u32, scalar_f32, to_vec_f32, Runtime, Session,
-};
+use fzoo::runtime::{to_vec_f32, Runtime, Session};
 use fzoo::zorng::{rademacher_vec, stream_seed};
 
 fn runtime() -> Runtime {
     Runtime::load("artifacts").expect("run `make artifacts` first")
 }
 
-/// Probe the fused losses executable directly (same inputs the optimizer
-/// uses) so tests can recompute what the optimizer should have done.
+/// Probe the fused losses executable directly (same bindings the
+/// optimizer uses) so tests can recompute what the optimizer should have
+/// done.
 fn probe_losses(rt: &Runtime, s: &Session, task: TaskKind, seed: u32, eps: f32) -> Vec<f32> {
     let t = task.instantiate(s.model_config(), 0).unwrap();
     let mut b = Batcher::new(t, &s.entry.config, 0);
@@ -37,11 +37,22 @@ fn probe_batch(
 ) -> Vec<f32> {
     let (ids, labels, mask) = batch.literals().unwrap();
     let exe = rt.executable(&s.model, "fzoo_losses").unwrap();
-    let mut inputs = s.param_inputs().unwrap();
-    inputs.extend([ids, labels, mask]);
-    inputs.push(lit_scalar_u32(seed));
-    inputs.push(lit_scalar_f32(eps));
-    to_vec_f32(&exe.run(&inputs).unwrap()[0]).unwrap()
+    let outs = s
+        .bind_params(exe.call())
+        .unwrap()
+        .literal("ids", ids)
+        .unwrap()
+        .literal("labels", labels)
+        .unwrap()
+        .literal("mask", mask)
+        .unwrap()
+        .scalar_u32("seed", seed)
+        .unwrap()
+        .scalar_f32("eps", eps)
+        .unwrap()
+        .run()
+        .unwrap();
+    to_vec_f32(&outs[0]).unwrap()
 }
 
 /// The FZOO step must equal theta' = theta - sum_i coeff_i * u_i with
@@ -51,7 +62,7 @@ fn probe_batch(
 fn fzoo_step_is_exactly_algorithm_one() {
     let rt = runtime();
     let mut s = Session::open(&rt, "tiny-enc").unwrap();
-    let theta0 = s.trainable().to_vec();
+    let theta0 = s.trainable_host().unwrap().to_vec();
     let d = theta0.len();
 
     let (eta, eps, run_seed, step) = (1e-2f32, 1e-3f32, 5u64, 3u64);
@@ -85,16 +96,15 @@ fn fzoo_step_is_exactly_algorithm_one() {
             *w -= c * ui;
         }
     }
-    let max = s
-        .trainable()
+    let trained = s.trainable_host().unwrap().to_vec();
+    let max = trained
         .iter()
         .zip(&want)
         .map(|(a, b)| (a - b).abs())
         .fold(0.0f32, f32::max);
     assert!(max < 1e-6, "Algorithm 1 algebra broken: max diff {max}");
     // and it actually moved
-    let moved: f32 = s
-        .trainable()
+    let moved: f32 = trained
         .iter()
         .zip(&theta0)
         .map(|(a, b)| (a - b).abs())
@@ -109,7 +119,7 @@ fn fzoo_step_is_exactly_algorithm_one() {
 fn fzoo_step_norm_matches_rademacher_geometry() {
     let rt = runtime();
     let mut s = Session::open(&rt, "tiny-enc").unwrap();
-    let theta0 = s.trainable().to_vec();
+    let theta0 = s.trainable_host().unwrap().to_vec();
     let d = theta0.len();
     let (eta, eps, run_seed, step) = (1e-2f32, 1e-3f32, 11u64, 1u64);
     let seed = step_seed(run_seed, step);
@@ -124,7 +134,8 @@ fn fzoo_step_norm_matches_rademacher_geometry() {
     opt.step(&rt, &mut s, &batch, step).unwrap();
 
     let dtheta_sq: f64 = s
-        .trainable()
+        .trainable_host()
+        .unwrap()
         .iter()
         .zip(&theta0)
         .map(|(a, b)| ((a - b) as f64).powi(2))
@@ -146,7 +157,7 @@ fn fzoo_step_norm_matches_rademacher_geometry() {
 fn zero_lr_scale_freezes_parameters() {
     let rt = runtime();
     let mut s = Session::open(&rt, "tiny-enc").unwrap();
-    let theta0 = s.trainable().to_vec();
+    let theta0 = s.trainable_host().unwrap().to_vec();
     let task = TaskKind::Sst2.instantiate(s.model_config(), 0).unwrap();
     let mut batcher = Batcher::new(task, &s.entry.config, 0);
     let batch = batcher.next_train();
@@ -155,7 +166,11 @@ fn zero_lr_scale_freezes_parameters() {
     opt.set_lr_scale(0.0);
     let out = opt.step(&rt, &mut s, &batch, 0).unwrap();
     assert!(out.loss.is_finite());
-    assert_eq!(s.trainable(), &theta0[..], "eta=0 step must not move theta");
+    assert_eq!(
+        s.trainable_host().unwrap(),
+        &theta0[..],
+        "eta=0 step must not move theta"
+    );
 }
 
 /// The min_sigma guard: a degenerate (flat) probe batch must skip the
@@ -164,7 +179,7 @@ fn zero_lr_scale_freezes_parameters() {
 fn degenerate_sigma_skips_update() {
     let rt = runtime();
     let mut s = Session::open(&rt, "tiny-enc").unwrap();
-    let theta0 = s.trainable().to_vec();
+    let theta0 = s.trainable_host().unwrap().to_vec();
     let task = TaskKind::Sst2.instantiate(s.model_config(), 0).unwrap();
     let mut batcher = Batcher::new(task, &s.entry.config, 0);
     let batch = batcher.next_train();
@@ -172,7 +187,11 @@ fn degenerate_sigma_skips_update() {
     let mut opt = Fzoo::new(1e-2, 1e-3, n, FzooMode::Parallel, Objective::Ce, 0);
     opt.min_sigma = f32::MAX; // force the guard
     let out = opt.step(&rt, &mut s, &batch, 0).unwrap();
-    assert_eq!(s.trainable(), &theta0[..], "guarded step must be a no-op");
+    assert_eq!(
+        s.trainable_host().unwrap(),
+        &theta0[..],
+        "guarded step must be a no-op"
+    );
     assert_eq!(out.forwards, (n + 1) as f64, "probe forwards still happened");
 }
 
@@ -182,10 +201,7 @@ fn degenerate_sigma_skips_update() {
 fn fzoo_r_sigma_concatenates_previous_losses() {
     let rt = runtime();
     let mut s = Session::open(&rt, "tiny-enc").unwrap();
-    let (eta, eps, run_seed) = (1e-3f32, 1e-3f32, momo());
-    fn momo() -> u64 {
-        21
-    }
+    let (eta, eps, run_seed) = (1e-3f32, 1e-3f32, 21u64);
     let task = TaskKind::Sst2.instantiate(s.model_config(), 0).unwrap();
     let mut batcher = Batcher::new(task, &s.entry.config, 0);
 
@@ -218,7 +234,7 @@ fn fzoo_r_sigma_concatenates_previous_losses() {
 
 /// Bit-level replay: the same (model, task, optimizer, seed) trained twice
 /// must produce the identical loss trajectory — the whole training path is
-/// a pure function of the seeds.
+/// a pure function of the seeds, device residency notwithstanding.
 #[test]
 fn training_is_bit_replayable() {
     let rt = runtime();
@@ -239,9 +255,10 @@ fn training_is_bit_replayable() {
             opts,
         );
         let h = tr.train(6).unwrap();
+        drop(tr);
         (
             h.records.iter().map(|r| r.loss).collect::<Vec<_>>(),
-            s.trainable().to_vec(),
+            s.trainable_host().unwrap().to_vec(),
         )
     };
     let (l1, t1) = run();
@@ -287,24 +304,35 @@ fn forward_accounting_matches_family() {
 
 /// MeZO's two-sided probe at eps and the projected-gradient coefficient
 /// must be antisymmetric in the seed direction: stepping with coeff c then
-/// -c along the same seed restores theta exactly.
+/// -c along the same seed restores theta exactly — chained entirely on
+/// device (the first update's output buffer feeds the second update).
 #[test]
 fn gauss_update_inverts_with_negated_coeff() {
     let rt = runtime();
-    let s = Session::open(&rt, "tiny-enc").unwrap();
+    let mut s = Session::open(&rt, "tiny-enc").unwrap();
     let upd = rt.executable("tiny-enc", "gauss_update").unwrap();
-    let theta0 = s.trainable().to_vec();
+    let theta0 = s.trainable_host().unwrap().to_vec();
     let fwd = upd
-        .run(&[
-            s.trainable_lit().unwrap(),
-            lit_scalar_u32(123),
-            lit_scalar_f32(0.37),
-        ])
+        .call()
+        .device("theta", s.trainable_dev())
+        .unwrap()
+        .scalar_u32("seed", 123)
+        .unwrap()
+        .scalar_f32("coeff", 0.37)
+        .unwrap()
+        .run_device()
         .unwrap();
     let back = upd
-        .run(&[fwd.into_iter().next().unwrap(), lit_scalar_u32(123), lit_scalar_f32(-0.37)])
+        .call()
+        .device("theta", &fwd)
+        .unwrap()
+        .scalar_u32("seed", 123)
+        .unwrap()
+        .scalar_f32("coeff", -0.37)
+        .unwrap()
+        .run_device()
         .unwrap();
-    let got = to_vec_f32(&back[0]).unwrap();
+    let got = back.to_host().unwrap();
     let max = got
         .iter()
         .zip(&theta0)
@@ -338,19 +366,26 @@ fn unknown_model_and_exe_error_cleanly() {
 }
 
 #[test]
-fn wrong_coeff_length_is_rejected() {
+fn wrong_coeff_length_is_rejected_at_bind_time() {
     let rt = runtime();
     let s = Session::open(&rt, "tiny-enc").unwrap();
     let upd = rt.executable("tiny-enc", "zo_update").unwrap();
-    // zo_update expects coeffs[n_pert]; hand it 3 instead
-    let bad = fzoo::runtime::lit_f32(&[0.1, 0.2, 0.3], &[3]).unwrap();
-    let res = upd.run(&[s.trainable_lit().unwrap(), lit_scalar_u32(1), bad]);
-    assert!(res.is_err(), "shape mismatch must surface as an error");
+    // zo_update expects coeffs[n_pert]; hand it 3 instead — must fail as a
+    // Rust error at bind time, before anything reaches XLA
+    let res = upd
+        .call()
+        .device("theta", s.trainable_dev())
+        .unwrap()
+        .scalar_u32("seed", 1)
+        .unwrap()
+        .vec_f32("coeffs", &[0.1, 0.2, 0.3]);
+    let err = res.err().expect("shape mismatch must surface as an error");
+    assert!(format!("{err}").contains("coeffs"), "{err}");
 }
 
 #[test]
 fn f1_objective_unavailable_on_cls_artifacts() {
-    // tiny-enc has no fwd_f1 graph: requesting the non-differentiable
+    // tiny-enc has no *_f1 graphs: requesting the non-differentiable
     // objective must fail with a useful message, not a panic.
     let rt = runtime();
     let mut s = Session::open(&rt, "tiny-enc").unwrap();
@@ -362,6 +397,33 @@ fn f1_objective_unavailable_on_cls_artifacts() {
     assert!(opt.step(&rt, &mut s, &batch, 0).is_err());
 }
 
+/// A non-default N combined with the F1 objective must be refused loudly:
+/// the `extra_n` ablation graphs are CE-only, and the old code silently
+/// fell back to training cross-entropy instead.
+#[test]
+fn f1_with_n_override_is_refused_not_silently_ce() {
+    let rt = runtime();
+    if rt.manifest.model("tiny-enc-span").is_err() {
+        return; // reduced artifact set
+    }
+    let mut s = Session::open(&rt, "tiny-enc-span").unwrap();
+    let task = TaskKind::Squad.instantiate(s.model_config(), 0).unwrap();
+    let mut batcher = Batcher::new(task, &s.entry.config, 0);
+    let batch = batcher.next_train();
+    let n = s.entry.config.n_pert;
+    // default N + F1 works on the span artifacts...
+    let mut ok = Fzoo::new(1e-3, 1e-3, n, FzooMode::Parallel, Objective::F1, 0);
+    ok.step(&rt, &mut s, &batch, 0).unwrap();
+    // ...but an N override + F1 must error, mentioning both
+    let mut bad = Fzoo::new(1e-3, 1e-3, n * 2, FzooMode::Parallel, Objective::F1, 0);
+    let err = bad
+        .step(&rt, &mut s, &batch, 1)
+        .err()
+        .expect("N-override + F1 must be refused");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("CE-only") || msg.contains("F1"), "{msg}");
+}
+
 /// eval_logits must agree with the loss graph's implied prediction:
 /// reusing the same batch, the argmax class of the logits determines
 /// accuracy; check logits are finite and the right shape.
@@ -369,12 +431,22 @@ fn f1_objective_unavailable_on_cls_artifacts() {
 fn eval_logits_finite_and_shaped() {
     let rt = runtime();
     let s = Session::open(&rt, "tiny-enc").unwrap();
-    let cfg = &s.entry.config;
+    let cfg = s.entry.config.clone();
     let task = TaskKind::Sst2.instantiate(s.model_config(), 0).unwrap();
-    let b = Batcher::new(task, cfg, 0);
-    let (ids, _labels, mask) = b.eval_batch(0).literals().unwrap();
+    let b = Batcher::new(task, &cfg, 0);
+    let batch = b.eval_batch(0);
+    let (ids, _labels, mask) = batch.literals().unwrap();
     let exe = rt.executable("tiny-enc", "eval_logits").unwrap();
-    let out = exe.run(&[s.trainable_lit().unwrap(), ids, mask]).unwrap();
+    let out = exe
+        .call()
+        .device("theta", s.trainable_dev())
+        .unwrap()
+        .literal("ids", ids)
+        .unwrap()
+        .literal("mask", mask)
+        .unwrap()
+        .run()
+        .unwrap();
     let logits = to_vec_f32(&out[0]).unwrap();
     assert_eq!(logits.len(), cfg.batch * cfg.n_classes);
     assert!(logits.iter().all(|x| x.is_finite()));
@@ -389,13 +461,23 @@ fn fwd_loss_is_pure() {
     let exe = rt.executable("tiny-enc", "fwd_loss").unwrap();
     let task = TaskKind::Sst2.instantiate(s.model_config(), 0).unwrap();
     let b = Batcher::new(task, &s.entry.config, 0);
+    let batch = b.eval_batch(0);
+    let (ids, labels, mask) = batch.literals().unwrap();
     let mut vals = Vec::new();
     for _ in 0..3 {
-        let (ids, labels, mask) = b.eval_batch(0).literals().unwrap();
         let out = exe
-            .run(&[s.trainable_lit().unwrap(), ids, labels, mask])
+            .call()
+            .device("theta", s.trainable_dev())
+            .unwrap()
+            .literal("ids", ids)
+            .unwrap()
+            .literal("labels", labels)
+            .unwrap()
+            .literal("mask", mask)
+            .unwrap()
+            .run()
             .unwrap();
-        vals.push(scalar_f32(&out[0]).unwrap());
+        vals.push(fzoo::runtime::scalar_f32(&out[0]).unwrap());
     }
     assert_eq!(vals[0], vals[1]);
     assert_eq!(vals[1], vals[2]);

@@ -175,8 +175,8 @@ fn span_model_trains_with_f1_objective() {
 fn prefix_tuning_trains_prefix_only() {
     let rt = runtime();
     let mut session = Session::open(&rt, "tiny-enc-prefix").unwrap();
-    let base_before = session.theta.clone();
-    let prefix_before = session.prefix.clone();
+    let base_before = session.theta_host().unwrap().to_vec();
+    let prefix_before = session.prefix_host().unwrap().to_vec();
     let t = TaskKind::Sst2.instantiate(session.model_config(), 0).unwrap();
     let opts = TrainOpts {
         steps: 5,
@@ -191,8 +191,17 @@ fn prefix_tuning_trains_prefix_only() {
         opts,
     );
     tr.train(5).unwrap();
-    assert_eq!(session.theta, base_before, "base must stay frozen");
-    assert_ne!(session.prefix, prefix_before, "prefix must move");
+    drop(tr);
+    assert_eq!(
+        session.theta_host().unwrap(),
+        &base_before[..],
+        "base must stay frozen"
+    );
+    assert_ne!(
+        session.prefix_host().unwrap(),
+        &prefix_before[..],
+        "prefix must move"
+    );
 }
 
 #[test]

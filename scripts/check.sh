@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# Pre-PR gate (`make check`): run this before every PR.
+#
+#   1. cargo fmt --check          — formatting drift
+#   2. cargo clippy -D warnings   — lints, warnings are errors
+#   3. tier-1                     — cargo build --release && cargo test -q
+#
+# The Rust tests need the AOT artifacts (`make artifacts`) for the
+# integration/invariant suites; unit tests run without them.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== cargo fmt --check =="
+cargo fmt --check
+
+echo "== cargo clippy (all targets, -D warnings) =="
+cargo clippy --all-targets -- -D warnings
+
+echo "== tier-1: cargo build --release && cargo test -q =="
+cargo build --release
+cargo test -q
+
+echo "check: all gates passed"
