@@ -1,6 +1,6 @@
 PY ?= python3
 
-.PHONY: artifacts check pytest
+.PHONY: artifacts check ci pytest
 
 # AOT-compile the model graphs + manifest (python/compile/aot.py).
 # Incremental; use FORCE=1 to rebuild everything.
@@ -9,6 +9,11 @@ artifacts:
 
 # Pre-PR gate: formatting, lints (warnings are errors), tier-1 build+tests.
 check:
+	./scripts/check.sh
+
+# What CI runs (.github/workflows/ci.yml): artifacts for the tiny models,
+# then the full check gate. Runnable locally for parity with CI.
+ci: artifacts
 	./scripts/check.sh
 
 # Build-time (Python) test suite.

@@ -13,6 +13,7 @@ use fzoo::coordinator::TrainOpts;
 use fzoo::data::TaskKind;
 use fzoo::optim::OptimizerKind;
 use fzoo::runtime::{Runtime, Session};
+use fzoo::serve::{Event, RunHandle, RunManager, RunSpec as ServeRunSpec};
 use fzoo::util::bench::{black_box, Bench};
 use fzoo::util::json::Value;
 
@@ -120,6 +121,90 @@ fn main() {
                 r,
             ));
         }
+    }
+
+    // Serve scheduler tax: two concurrent runs interleaved at step
+    // granularity through RunManager vs the same two runs stepped
+    // back-to-back on the calling thread. Both execute 2*K steps per
+    // measured slice on the same single device, so the ratio isolates the
+    // channel/scheduler overhead (the useful work is identical).
+    let model = "roberta-prox";
+    if rt.manifest.model(model).is_ok() {
+        const K: u64 = 4;
+        let kind = || OptimizerKind::by_name("fzoo", 1e-4, 1e-3).unwrap();
+        let opts = |seed: u64| TrainOpts {
+            steps: 1,
+            eval_batches: 0,
+            run_seed: seed,
+            ..Default::default()
+        };
+
+        // sequential baseline: two trainers, no manager in the path
+        let mut s1 = Session::open(&rt, model).unwrap();
+        let task1 = TaskKind::Sst2.instantiate(s1.model_config(), 0).unwrap();
+        let mut t1 = fzoo::coordinator::Trainer::with_opts(&rt, &mut s1, task1, kind(), opts(0));
+        let mut s2 = Session::open(&rt, model).unwrap();
+        let task2 = TaskKind::Sst2.instantiate(s2.model_config(), 1).unwrap();
+        let mut t2 = fzoo::coordinator::Trainer::with_opts(&rt, &mut s2, task2, kind(), opts(1));
+        let _ = t1.train(1).unwrap(); // warm executable cache
+        let _ = t2.train(1).unwrap();
+        let mut step = 1u64;
+        b.run(&format!("{model}/2run_x{K}steps_sequential"), || {
+            for tr in [&mut t1, &mut t2] {
+                for _ in 0..K {
+                    let batch = tr.batcher.next_train();
+                    let out = tr.optimizer.step(&rt, tr.session, &batch, step).unwrap();
+                    step += 1;
+                    black_box(out.loss);
+                }
+            }
+        });
+
+        // multiplexed: same two runs through the run-manager thread
+        let mgr = RunManager::start(root.join("artifacts")).unwrap();
+        let client = mgr.client();
+        let submit = |seed: u64| {
+            client
+                .submit(ServeRunSpec::new(model, "sst2", kind(), 1_000_000).seed(seed))
+                .unwrap()
+        };
+        let (ha, hb) = (submit(0), submit(1));
+        let drain = |h: &RunHandle, k: u64| {
+            let mut got = 0;
+            while got < k {
+                match h.next_event() {
+                    Some(Event::Step(_)) => got += 1,
+                    Some(Event::Failed(e)) => panic!("serve run failed mid-bench: {e}"),
+                    Some(_) => {}
+                    None => panic!("serve event stream ended mid-bench"),
+                }
+            }
+        };
+        client.train_steps(ha.id, 1).unwrap(); // warm the manager's cache
+        client.train_steps(hb.id, 1).unwrap();
+        drain(&ha, 1);
+        drain(&hb, 1);
+        b.run(&format!("{model}/2run_x{K}steps_multiplexed"), || {
+            client.train_steps(ha.id, K).unwrap();
+            client.train_steps(hb.id, K).unwrap();
+            drain(&ha, K);
+            drain(&hb, K);
+        });
+        if let Some(r) = b.ratio(
+            &format!("{model}/2run_x{K}steps_multiplexed"),
+            &format!("{model}/2run_x{K}steps_sequential"),
+        ) {
+            println!(
+                "--> {model}: 2-run step-multiplexed costs {r:.2}x vs back-to-back \
+                 (scheduler+channel tax on identical device work)\n"
+            );
+            ratios.push((
+                model.to_string(),
+                "2run_multiplexed_vs_sequential".to_string(),
+                r,
+            ));
+        }
+        drop(mgr); // joins the worker thread
     }
 
     // Record the baseline (regenerated on every `cargo bench` run).

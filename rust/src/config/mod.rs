@@ -91,7 +91,89 @@ impl TrainConfig {
     }
 }
 
-fn opt_str(v: &Value, key: &str) -> Result<Option<String>> {
+/// `fzoo serve` job file: a list of run specs driven concurrently by one
+/// [`serve::RunManager`](crate::serve::RunManager).
+///
+/// ```json
+/// {
+///   "artifacts": "artifacts",
+///   "checkpoint_dir": "runs/ckpt",
+///   "log_dir": "runs",
+///   "jobs": [
+///     {"name": "a", "model": "tiny-enc", "task": "sst2", "steps": 100,
+///      "optimizer": {"kind": "fzoo", "lr": 1e-3, "eps": 1e-3},
+///      "checkpoint_every": 50, "run_seed": 1},
+///     {"model": "tiny-dec", "task": "boolq", "steps": 100,
+///      "optimizer": {"kind": "mezo", "lr": 1e-4, "eps": 1e-3},
+///      "resume_from": "runs/ckpt/b.step50.ckpt.json"}
+///   ]
+/// }
+/// ```
+///
+/// File-level `checkpoint_dir` is the default for jobs that don't set
+/// their own; `log_dir` gives every job without an explicit `log` a
+/// `<log_dir>/<name>.jsonl` metrics file.
+#[derive(Debug, Clone)]
+pub struct JobFile {
+    pub artifacts: String,
+    pub jobs: Vec<crate::serve::RunSpec>,
+}
+
+impl JobFile {
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::from_json_str(&text)
+            .with_context(|| format!("parsing {}", path.as_ref().display()))
+    }
+
+    pub fn from_json_str(text: &str) -> Result<Self> {
+        let v = json::parse(text)?;
+        let ckpt_dir = opt_str(&v, "checkpoint_dir")?;
+        let log_dir = opt_str(&v, "log_dir")?;
+        let mut jobs = Vec::new();
+        for (i, j) in v.req("jobs")?.as_arr()?.iter().enumerate() {
+            let mut spec = crate::serve::RunSpec::from_json(j)
+                .with_context(|| format!("jobs[{i}]"))?;
+            if spec.checkpoint_dir.is_none() {
+                spec.checkpoint_dir = ckpt_dir.clone();
+            }
+            if spec.log_path.is_none() {
+                if let Some(dir) = &log_dir {
+                    spec.log_path = Some(format!("{dir}/{}.jsonl", spec.display_name()));
+                }
+            }
+            jobs.push(spec);
+        }
+        anyhow::ensure!(!jobs.is_empty(), "job file lists no jobs");
+        // Names key the JSONL logs and checkpoint files — a duplicate
+        // would silently clobber a sibling run's outputs (and a later
+        // resume_from could restore the wrong run's parameters).
+        let mut names: Vec<String> = jobs.iter().map(|j| j.display_name()).collect();
+        names.sort();
+        if let Some(dup) = names.windows(2).find(|w| w[0] == w[1]) {
+            bail!(
+                "duplicate job name '{}' — give the runs distinct 'name's \
+                 (or distinct model/task/run_seed)",
+                dup[0]
+            );
+        }
+        // explicit 'log' paths can collide even with distinct names
+        let mut logs: Vec<&String> = jobs.iter().filter_map(|j| j.log_path.as_ref()).collect();
+        logs.sort();
+        if let Some(dup) = logs.windows(2).find(|w| w[0] == w[1]) {
+            bail!("two jobs write the same log file '{}'", dup[0]);
+        }
+        Ok(Self {
+            artifacts: opt_str(&v, "artifacts")?.unwrap_or_else(|| "artifacts".into()),
+            jobs,
+        })
+    }
+}
+
+/// Optional string field: absent and `null` both mean `None`. Shared with
+/// `serve::protocol`'s job parsing.
+pub(crate) fn opt_str(v: &Value, key: &str) -> Result<Option<String>> {
     Ok(match v.get(key) {
         Some(Value::Str(s)) => Some(s.clone()),
         Some(Value::Null) | None => None,
@@ -168,5 +250,41 @@ mod tests {
     #[test]
     fn missing_required_fields_error() {
         assert!(TrainConfig::from_json_str(r#"{"task":"sst2"}"#).is_err());
+    }
+
+    #[test]
+    fn job_file_defaults_propagate() {
+        let f = JobFile::from_json_str(
+            r#"{"artifacts":"arts","checkpoint_dir":"ck","log_dir":"runs",
+                "jobs":[
+                  {"name":"a","model":"tiny-enc","task":"sst2",
+                   "optimizer":{"kind":"fzoo","lr":1e-3,"eps":1e-3},
+                   "steps":10},
+                  {"model":"tiny-dec","task":"boolq","run_seed":3,
+                   "optimizer":{"kind":"mezo","lr":1e-4,"eps":1e-3},
+                   "steps":10,"checkpoint_dir":"other","log":"x.jsonl"}
+                ]}"#,
+        )
+        .unwrap();
+        assert_eq!(f.artifacts, "arts");
+        assert_eq!(f.jobs.len(), 2);
+        assert_eq!(f.jobs[0].checkpoint_dir.as_deref(), Some("ck"));
+        assert_eq!(f.jobs[0].log_path.as_deref(), Some("runs/a.jsonl"));
+        assert_eq!(f.jobs[1].checkpoint_dir.as_deref(), Some("other"));
+        assert_eq!(f.jobs[1].log_path.as_deref(), Some("x.jsonl"));
+        assert_eq!(f.jobs[1].display_name(), "tiny-dec-boolq-s3");
+    }
+
+    #[test]
+    fn job_file_empty_or_broken_errors() {
+        assert!(JobFile::from_json_str(r#"{"jobs":[]}"#).is_err());
+        assert!(JobFile::from_json_str(r#"{"jobs":[{"model":"m"}]}"#).is_err());
+        // duplicate display names would clobber each other's logs/checkpoints
+        let dup = r#"{"jobs":[
+            {"model":"m","task":"t","optimizer":{"kind":"fzoo"},"steps":1},
+            {"model":"m","task":"t","optimizer":{"kind":"mezo"},"steps":1}
+        ]}"#;
+        let err = JobFile::from_json_str(dup).unwrap_err().to_string();
+        assert!(err.contains("duplicate job name"), "{err}");
     }
 }

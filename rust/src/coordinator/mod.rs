@@ -9,7 +9,7 @@ pub mod pretrain;
 pub mod schedule;
 pub mod trainer;
 
-pub use metrics::{EvalOut, RunLogger};
+pub use metrics::{evaluate, EvalOut, RunLogger};
 pub use pretrain::{ensure_pretrained, pretrained_path};
 pub use schedule::LrSchedule;
-pub use trainer::{History, StepRecord, TrainOpts, Trainer};
+pub use trainer::{EvalRecord, History, StepOutcome, StepRecord, TrainLoop, TrainOpts, Trainer};

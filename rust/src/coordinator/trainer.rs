@@ -1,4 +1,19 @@
 //! The training event loop.
+//!
+//! The per-step logic lives in [`TrainLoop`], a *resumable* core that
+//! advances one step per call and carries every loop counter (step index,
+//! forward accounting, loss EMA, history) as explicit state. Two drivers
+//! share it:
+//!
+//! * [`Trainer::train`] — the classic blocking API: loop `step_once` to
+//!   completion, then `finalize`.
+//! * `serve::RunManager` — the multi-run scheduler: many `TrainLoop`s are
+//!   interleaved at step granularity on one runtime thread, and a loop can
+//!   be checkpointed mid-flight and resumed later (`resume_at`).
+//!
+//! Because all coupling between steps flows through `TrainLoop` fields,
+//! interleaving runs cannot change any run's numbers: a multiplexed run
+//! produces the bit-identical loss series it would produce alone.
 
 use std::time::Instant;
 
@@ -153,6 +168,240 @@ impl History {
     }
 }
 
+/// What one [`TrainLoop::step_once`] call produced.
+#[derive(Debug, Clone, Copy)]
+pub enum StepOutcome {
+    /// A step ran; the records were also appended to the loop's history.
+    Stepped {
+        record: StepRecord,
+        eval: Option<EvalRecord>,
+    },
+    /// The loop is already complete (plan exhausted or early-stopped);
+    /// nothing ran. Call [`TrainLoop::finalize`] once, then read history.
+    Finished,
+}
+
+/// Resumable single-run training core: one call advances one step. All
+/// loop state (step cursor, forward accounting, loss EMA, history) lives
+/// here so a run can be suspended between any two steps — the serve
+/// scheduler interleaves many of these over one runtime, and checkpoints
+/// capture/restore the counters via the accessors + [`TrainLoop::resume_at`].
+pub struct TrainLoop {
+    pub opts: TrainOpts,
+    history: History,
+    forwards: f64,
+    forward_equiv: f64,
+    ema_loss: Option<f64>,
+    next_step: u64,
+    finished: bool,
+}
+
+impl TrainLoop {
+    /// A fresh loop planning `opts.steps` steps.
+    pub fn new(optimizer: String, model: String, task: String, opts: TrainOpts) -> Self {
+        let finished = opts.steps == 0;
+        Self {
+            history: History {
+                optimizer,
+                model,
+                task,
+                // cap the pre-reserve: serve specs may plan huge step
+                // budgets that are only partially executed
+                records: Vec::with_capacity(opts.steps.min(4096) as usize),
+                evals: Vec::new(),
+                total_wall_s: 0.0,
+                steps_run: 0,
+                stopped_early: false,
+            },
+            forwards: 0.0,
+            forward_equiv: 0.0,
+            ema_loss: None,
+            next_step: 0,
+            finished,
+            opts,
+        }
+    }
+
+    /// Restore the loop cursor and cumulative counters from a checkpoint.
+    /// The caller is responsible for restoring the matching session
+    /// parameters, optimizer state and batcher position (`skip_batches`).
+    pub fn resume_at(
+        mut self,
+        step: u64,
+        forwards: f64,
+        forward_equiv: f64,
+        ema_loss: Option<f64>,
+    ) -> Self {
+        self.next_step = step;
+        self.forwards = forwards;
+        self.forward_equiv = forward_equiv;
+        self.ema_loss = ema_loss;
+        self.history.steps_run = step;
+        self.finished = step >= self.opts.steps;
+        // A checkpoint written at the early-stop step must not resume past
+        // the stop the unbroken run honored.
+        if let (Some(t), Some(ema)) = (self.opts.target_loss, ema_loss) {
+            if ema <= t as f64 {
+                self.history.stopped_early = true;
+                self.finished = true;
+            }
+        }
+        self
+    }
+
+    pub fn is_finished(&self) -> bool {
+        self.finished
+    }
+
+    /// The step index the next `step_once` call will run.
+    pub fn next_step(&self) -> u64 {
+        self.next_step
+    }
+
+    /// Cumulative actual forward passes (checkpointed so resumed runs
+    /// continue the paper's Fig. 1 x-axis without a discontinuity).
+    pub fn forwards(&self) -> f64 {
+        self.forwards
+    }
+
+    pub fn forward_equiv(&self) -> f64 {
+        self.forward_equiv
+    }
+
+    /// Moving-average train loss (the early-stop signal).
+    pub fn ema_loss(&self) -> Option<f64> {
+        self.ema_loss
+    }
+
+    pub fn history(&self) -> &History {
+        &self.history
+    }
+
+    /// Record that the run is being cut short (a serve `Stop` request);
+    /// pair with [`TrainLoop::finalize`].
+    pub fn mark_stopped_early(&mut self) {
+        self.history.stopped_early = true;
+    }
+
+    pub fn into_history(self) -> History {
+        self.history
+    }
+
+    /// Run exactly one training step (plus a scheduled eval when due).
+    /// Returns `Finished` without touching anything once the loop is done.
+    pub fn step_once(
+        &mut self,
+        rt: &Runtime,
+        session: &mut Session,
+        optimizer: &mut dyn Optimizer,
+        batcher: &mut Batcher,
+    ) -> Result<StepOutcome> {
+        if self.finished {
+            return Ok(StepOutcome::Finished);
+        }
+        let step = self.next_step;
+        let t_call = Instant::now();
+        let scale = self.opts.schedule.scale(step, self.opts.steps);
+        optimizer.set_lr_scale(scale);
+        let batch = batcher.next_train();
+        let t0 = Instant::now();
+        let out = optimizer.step(rt, session, &batch, step)?;
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        self.forwards += out.forwards;
+        self.forward_equiv += out.forward_equiv;
+        let record = StepRecord {
+            step,
+            loss: out.loss,
+            forwards: self.forwards,
+            forward_equiv: self.forward_equiv,
+            sigma: out.sigma,
+            wall_ms,
+        };
+        self.history.records.push(record);
+        self.ema_loss = Some(match self.ema_loss {
+            None => out.loss as f64,
+            Some(p) => 0.9 * p + 0.1 * out.loss as f64,
+        });
+        self.history.steps_run = step + 1;
+        self.next_step = step + 1;
+
+        let mut eval = None;
+        if self.opts.eval_every > 0 && (step + 1) % self.opts.eval_every == 0 {
+            let ev = evaluate(rt, session, batcher, self.opts.eval_batches)?;
+            let er = EvalRecord {
+                step: step + 1,
+                accuracy: ev.accuracy,
+                f1: ev.f1,
+                loss: ev.loss,
+            };
+            self.history.evals.push(er);
+            eval = Some(er);
+            if self.opts.verbose {
+                eprintln!(
+                    "[{}] step {:>5} loss {:.4} acc {:.3} ({:.0} fwd)",
+                    self.history.optimizer,
+                    step + 1,
+                    out.loss,
+                    ev.accuracy,
+                    self.forwards
+                );
+            }
+        } else if self.opts.verbose && (step + 1) % 20 == 0 {
+            eprintln!(
+                "[{}] step {:>5} loss {:.4} ({:.0} fwd)",
+                self.history.optimizer,
+                step + 1,
+                out.loss,
+                self.forwards
+            );
+        }
+
+        if let (Some(t), Some(ema)) = (self.opts.target_loss, self.ema_loss) {
+            if ema <= t as f64 {
+                self.history.stopped_early = true;
+                self.finished = true;
+            }
+        }
+        if self.next_step >= self.opts.steps {
+            self.finished = true;
+        }
+        self.history.total_wall_s += t_call.elapsed().as_secs_f64();
+        Ok(StepOutcome::Stepped { record, eval })
+    }
+
+    /// End-of-run boundary: a final eval if none landed on the last step,
+    /// then the explicit device→host parameter sync. Idempotent; marks the
+    /// loop finished (a `Stop` request finalizes a part-way run).
+    pub fn finalize(
+        &mut self,
+        rt: &Runtime,
+        session: &mut Session,
+        batcher: &Batcher,
+    ) -> Result<Option<EvalRecord>> {
+        self.finished = true;
+        let mut out = None;
+        if self.opts.eval_batches > 0
+            && self.history.evals.last().map(|e| e.step) != Some(self.history.steps_run)
+        {
+            let t0 = Instant::now();
+            let ev = evaluate(rt, session, batcher, self.opts.eval_batches)?;
+            let er = EvalRecord {
+                step: self.history.steps_run,
+                accuracy: ev.accuracy,
+                f1: ev.f1,
+                loss: ev.loss,
+            };
+            self.history.evals.push(er);
+            self.history.total_wall_s += t0.elapsed().as_secs_f64();
+            out = Some(er);
+        }
+        // Refresh the host mirror once so exporters/checkpoints read
+        // current parameters (steps ran entirely on device-resident state).
+        session.sync_to_host()?;
+        Ok(out)
+    }
+}
+
 /// Drives one (model, task, optimizer) run.
 pub struct Trainer<'rt, 's> {
     rt: &'rt Runtime,
@@ -194,93 +443,25 @@ impl<'rt, 's> Trainer<'rt, 's> {
         evaluate(self.rt, self.session, &self.batcher, self.opts.eval_batches)
     }
 
+    /// Blocking drive-to-completion over the shared [`TrainLoop`] core.
     pub fn train(&mut self, steps: u64) -> Result<History> {
-        let mut history = History {
-            optimizer: self.optimizer.name(),
-            model: self.session.model.clone(),
-            task: self.batcher.task.kind.name().to_string(),
-            records: Vec::with_capacity(steps as usize),
-            evals: Vec::new(),
-            total_wall_s: 0.0,
-            steps_run: 0,
-            stopped_early: false,
-        };
-        let t_start = Instant::now();
-        let mut forwards = 0.0f64;
-        let mut fequiv = 0.0f64;
-        let mut ema_loss: Option<f64> = None;
-
-        for step in 0..steps {
-            let scale = self.opts.schedule.scale(step, steps);
-            self.optimizer.set_lr_scale(scale);
-            let batch = self.batcher.next_train();
-            let t0 = Instant::now();
-            let out = self.optimizer.step(self.rt, self.session, &batch, step)?;
-            let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
-            forwards += out.forwards;
-            fequiv += out.forward_equiv;
-            history.records.push(StepRecord {
-                step,
-                loss: out.loss,
-                forwards,
-                forward_equiv: fequiv,
-                sigma: out.sigma,
-                wall_ms,
-            });
-            ema_loss = Some(match ema_loss {
-                None => out.loss as f64,
-                Some(p) => 0.9 * p + 0.1 * out.loss as f64,
-            });
-            history.steps_run = step + 1;
-
-            if self.opts.eval_every > 0 && (step + 1) % self.opts.eval_every == 0 {
-                let ev = self.evaluate()?;
-                history.evals.push(EvalRecord {
-                    step: step + 1,
-                    accuracy: ev.accuracy,
-                    f1: ev.f1,
-                    loss: ev.loss,
-                });
-                if self.opts.verbose {
-                    eprintln!(
-                        "[{}] step {:>5} loss {:.4} acc {:.3} ({:.0} fwd)",
-                        history.optimizer, step + 1, out.loss, ev.accuracy, forwards
-                    );
-                }
-            } else if self.opts.verbose && (step + 1) % 20 == 0 {
-                eprintln!(
-                    "[{}] step {:>5} loss {:.4} ({:.0} fwd)",
-                    history.optimizer, step + 1, out.loss, forwards
-                );
-            }
-
-            if let (Some(t), Some(ema)) = (self.opts.target_loss, ema_loss) {
-                if ema <= t as f64 {
-                    history.stopped_early = true;
-                    break;
-                }
-            }
+        let mut opts = self.opts.clone();
+        opts.steps = steps;
+        let mut lp = TrainLoop::new(
+            self.optimizer.name(),
+            self.session.model.clone(),
+            self.batcher.task.kind.name().to_string(),
+            opts,
+        );
+        while !lp.is_finished() {
+            lp.step_once(
+                self.rt,
+                self.session,
+                self.optimizer.as_mut(),
+                &mut self.batcher,
+            )?;
         }
-
-        // final eval if none yet at the end
-        if self.opts.eval_batches > 0
-            && history.evals.last().map(|e| e.step) != Some(history.steps_run)
-        {
-            let ev = self.evaluate()?;
-            history.evals.push(EvalRecord {
-                step: history.steps_run,
-                accuracy: ev.accuracy,
-                f1: ev.f1,
-                loss: ev.loss,
-            });
-        }
-
-        // End of training is an explicit sync boundary: refresh the host
-        // mirror once so exporters/checkpoints read current parameters.
-        // (Steps and evals above ran entirely on device-resident state.)
-        self.session.sync_to_host()?;
-
-        history.total_wall_s = t_start.elapsed().as_secs_f64();
-        Ok(history)
+        lp.finalize(self.rt, self.session, &self.batcher)?;
+        Ok(lp.into_history())
     }
 }

@@ -149,6 +149,23 @@ impl Batcher {
         self.assemble(Split::Train, &idxs)
     }
 
+    /// Advance the train stream past `n` batches without assembling them —
+    /// the checkpoint-resume fast-forward. Mirrors `next_train`'s cursor /
+    /// epoch / reshuffle walk exactly, so a resumed run sees the same
+    /// batch sequence an unbroken run would.
+    pub fn skip_batches(&mut self, n: u64) {
+        for _ in 0..n {
+            for _ in 0..self.batch_size {
+                if self.cursor >= self.order.len() {
+                    self.cursor = 0;
+                    self.epoch += 1;
+                    self.shuffle();
+                }
+                self.cursor += 1;
+            }
+        }
+    }
+
     /// Eval batch `i` (fixed, unshuffled).
     pub fn eval_batch(&self, i: usize) -> Batch {
         let start = (i * self.batch_size) as u64;
@@ -232,6 +249,23 @@ mod tests {
         }
         assert_eq!(b.epoch(), 0);
         assert!(seen.len() >= n - 2, "near-unique rows, got {}", seen.len());
+    }
+
+    #[test]
+    fn skip_batches_matches_next_train() {
+        let c = cfg();
+        let t = TaskKind::Sst2.instantiate(&c, 0).unwrap().with_k_shot(8);
+        let mut walked = Batcher::new(t.clone(), &c, 5);
+        let mut skipped = Batcher::new(t, &c, 5);
+        // walk 9 batches (crosses an epoch boundary: 16 examples / 4 per batch)
+        for _ in 0..9 {
+            walked.next_train();
+        }
+        skipped.skip_batches(9);
+        assert_eq!(walked.epoch(), skipped.epoch());
+        let (a, b) = (walked.next_train(), skipped.next_train());
+        assert_eq!(a.ids, b.ids);
+        assert_eq!(a.labels, b.labels);
     }
 
     #[test]

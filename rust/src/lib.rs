@@ -31,6 +31,7 @@ pub mod data;
 pub mod memmodel;
 pub mod optim;
 pub mod runtime;
+pub mod serve;
 pub mod util;
 pub mod xp;
 pub mod zorng;
@@ -41,4 +42,5 @@ pub mod prelude {
     pub use crate::data::{Task, TaskKind};
     pub use crate::optim::OptimizerKind;
     pub use crate::runtime::{Runtime, Session};
+    pub use crate::serve::{RunManager, RunSpec};
 }

@@ -3,6 +3,7 @@
 //! ```text
 //! fzoo train --model roberta-prox --task sst2 --optimizer fzoo --lr 1e-3
 //! fzoo train --config train.json
+//! fzoo serve --jobs jobs.json                # N concurrent runs, one device
 //! fzoo eval  --model roberta-prox --task sst2
 //! fzoo info                                  # artifact inventory
 //! fzoo mem                                   # Table-12-style memory model
@@ -10,12 +11,13 @@
 
 use anyhow::{bail, Result};
 
-use fzoo::config::TrainConfig;
-use fzoo::coordinator::{RunLogger, Trainer};
-use fzoo::data::TaskKind;
+use fzoo::config::{JobFile, TrainConfig};
+use fzoo::coordinator::{evaluate, RunLogger, Trainer};
+use fzoo::data::{Batcher, TaskKind};
 use fzoo::memmodel;
 use fzoo::optim::OptimizerKind;
 use fzoo::runtime::{Runtime, Session};
+use fzoo::serve::{Event, RunManager};
 use fzoo::util::args::Args;
 
 const USAGE: &str = "\
@@ -29,6 +31,11 @@ USAGE:
              [--lr F] [--eps F] [--steps N] [--eval-every N] [--k-shot K]
              [--seed S] [--schedule constant|linear:E|cosine:M|warmup:N]
              [--log out.jsonl]
+  fzoo serve --jobs jobs.json [--artifacts DIR]
+             # drive every job in the file concurrently over one runtime
+             # (round-robin step multiplexing); per-run JSONL logs, periodic
+             # checkpoints (checkpoint_every/resume_from) and a summary
+             # table. See README for the job-file schema.
   fzoo eval  [--artifacts DIR] --model M --task T [--eval-batches N]
   fzoo info  [--artifacts DIR]
   fzoo mem
@@ -42,6 +49,7 @@ fn main() -> Result<()> {
     }
     match args.positional[0].as_str() {
         "train" => cmd_train(&args),
+        "serve" => cmd_serve(&args),
         "eval" => cmd_eval(&args),
         "info" => cmd_info(&args),
         "mem" => cmd_mem(),
@@ -145,6 +153,133 @@ fn run_train(cfg: TrainConfig, pretrained: bool) -> Result<()> {
     Ok(())
 }
 
+/// Drive a job file's runs concurrently through the serve run manager:
+/// submit everything, credit each run its full plan, stream events into
+/// per-run JSONL logs, and print a summary table at the end.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let jobs_path = args
+        .get("jobs")
+        .ok_or_else(|| anyhow::anyhow!("--jobs jobs.json required"))?
+        .to_string();
+    let file = JobFile::from_file(&jobs_path)?;
+    let artifacts = args.get_or("artifacts", &file.artifacts);
+    let mgr = RunManager::start(artifacts.as_str())?;
+    let client = mgr.client();
+    println!("serve: {} jobs from {jobs_path}", file.jobs.len());
+
+    // Submit everything first (sessions open serially on the worker),
+    // then credit each run its full plan — from there the scheduler
+    // interleaves them at step granularity.
+    let mut collectors = Vec::new();
+    for spec in file.jobs {
+        let name = spec.display_name();
+        let steps = spec.steps;
+        let log_path = spec.log_path.clone();
+        let handle = client.submit(spec)?;
+        println!("  {} {name}: {} steps queued", handle.id, steps);
+        client.train_steps(handle.id, steps)?;
+        // one collector thread per run: drains the event stream as it is
+        // produced (bounding queue memory) and writes the JSONL log
+        let thread_name = name.clone();
+        let thread_log = log_path.clone();
+        collectors.push((
+            name,
+            handle.id,
+            std::thread::spawn(move || -> Result<fzoo::coordinator::History> {
+                let name = thread_name;
+                let log_path = thread_log;
+                // A broken log must not abandon the stream (the worker
+                // would keep training into an undrained channel): record
+                // the error, ask the run to stop, and keep draining.
+                let mut log_err: Option<anyhow::Error> = None;
+                let mut logger = None;
+                if let Some(p) = &log_path {
+                    match RunLogger::create(p) {
+                        Ok(l) => logger = Some(l),
+                        Err(e) => {
+                            log_err = Some(e);
+                            let _ = handle.client.stop(handle.id);
+                        }
+                    }
+                }
+                let write = |logger: &mut Option<RunLogger>,
+                                 rec: &fzoo::util::json::Value|
+                 -> Option<anyhow::Error> {
+                    match logger.as_mut().map(|l| l.log(rec)) {
+                        Some(Err(e)) => {
+                            *logger = None;
+                            Some(e)
+                        }
+                        _ => None,
+                    }
+                };
+                loop {
+                    let broke = match handle.next_event() {
+                        Some(Event::Step(r)) => write(&mut logger, &r.to_json()),
+                        Some(Event::Eval(e)) => write(&mut logger, &e.to_json()),
+                        Some(Event::Checkpoint { step, path }) => {
+                            eprintln!("[{name}] checkpoint @ step {step} -> {path}");
+                            None
+                        }
+                        Some(Event::Finished(h)) => {
+                            return match log_err {
+                                None => Ok(h),
+                                Some(e) => Err(e.context(format!(
+                                    "run completed ({} steps) but its log is incomplete",
+                                    h.steps_run
+                                ))),
+                            }
+                        }
+                        Some(Event::Failed(e)) => bail!("{e}"),
+                        None => bail!("event stream closed before completion"),
+                    };
+                    if let Some(e) = broke {
+                        log_err = Some(e);
+                        let _ = handle.client.stop(handle.id);
+                    }
+                }
+            }),
+            log_path,
+        ));
+    }
+
+    println!(
+        "\n{:<28} {:>6} {:>9} {:>7} {:>7} {:>8}  log",
+        "run", "steps", "loss", "acc", "f1", "wall_s"
+    );
+    let mut failed = 0usize;
+    for (name, id, join, log_path) in collectors {
+        let log = log_path.unwrap_or_else(|| "-".into());
+        let outcome = join.join().map_err(|_| anyhow::anyhow!("collector panicked"))?;
+        // release the run's device-resident session/optimizer state
+        let _ = client.remove(id);
+        match outcome {
+            Ok(h) => println!(
+                "{:<28} {:>6} {:>9.4} {:>7} {:>7} {:>8.1}  {log}",
+                name,
+                h.steps_run,
+                h.last_loss(),
+                h.final_accuracy()
+                    .map(|a| format!("{a:.3}"))
+                    .unwrap_or_else(|| "-".into()),
+                h.final_f1()
+                    .map(|f| format!("{f:.3}"))
+                    .unwrap_or_else(|| "-".into()),
+                h.total_wall_s,
+            ),
+            Err(e) => {
+                failed += 1;
+                println!("{name:<28} FAILED: {e:#}");
+            }
+        }
+    }
+    mgr.shutdown()?;
+    if failed > 0 {
+        bail!("{failed} run(s) failed");
+    }
+    Ok(())
+}
+
 fn cmd_eval(args: &Args) -> Result<()> {
     let rt = Runtime::load(args.get_or("artifacts", "artifacts"))?;
     let model = args
@@ -155,7 +290,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
         .get("task")
         .ok_or_else(|| anyhow::anyhow!("--task required"))?
         .to_string();
-    let mut session = if args.has("pretrained") {
+    let session = if args.has("pretrained") {
         Session::open_pretrained(&rt, &model)?
     } else {
         Session::open(&rt, &model)?
@@ -163,9 +298,14 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let kind =
         TaskKind::from_name(&task).ok_or_else(|| anyhow::anyhow!("unknown task '{task}'"))?;
     let t = kind.instantiate(session.model_config(), 0)?;
-    let mut tr = Trainer::new(&rt, &mut session, t, OptimizerKind::fzoo(0.0, 1e-3));
-    tr.opts.eval_batches = args.get_parse_or("eval-batches", 8usize)?;
-    let ev = tr.evaluate()?;
+    // evaluation is a pure forward pass — no optimizer, no trainer
+    let batcher = Batcher::new(t, &session.entry.config, 0);
+    let ev = evaluate(
+        &rt,
+        &session,
+        &batcher,
+        args.get_parse_or("eval-batches", 8usize)?,
+    )?;
     println!(
         "{model}/{task}: accuracy {:.3} f1 {:.3} loss {:.4} ({} examples)",
         ev.accuracy, ev.f1, ev.loss, ev.examples

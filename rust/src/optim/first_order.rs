@@ -18,7 +18,7 @@ use anyhow::Result;
 use crate::data::Batch;
 use crate::runtime::{scalar_f32, to_vec_f32, Runtime, Session};
 
-use super::{Objective, Optimizer, StepOut};
+use super::{Objective, OptState, Optimizer, StepOut};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FoFlavor {
@@ -104,6 +104,49 @@ impl Optimizer for FirstOrder {
 
     fn set_lr_scale(&mut self, scale: f32) {
         self.lr = self.lr_base * scale;
+    }
+
+    fn export_state(&self) -> Result<OptState> {
+        let mut st = OptState {
+            scalars: vec![("t".into(), self.t as f64)],
+            vectors: Vec::new(),
+        };
+        if !self.m.is_empty() {
+            st.vectors.push(("m".into(), self.m.clone()));
+            st.vectors.push(("v".into(), self.v.clone()));
+        }
+        Ok(st)
+    }
+
+    fn import_state(&mut self, _rt: &Runtime, mut state: OptState) -> Result<()> {
+        self.t = state.take_scalar("t").unwrap_or(0.0) as f32;
+        if let Some(m) = state.take_vector("m") {
+            anyhow::ensure!(
+                self.flavor == FoFlavor::Adam && m.len() == self.m.len(),
+                "{}: checkpoint moment m has {} elements, expected {}",
+                self.name(),
+                m.len(),
+                self.m.len()
+            );
+            self.m = m;
+        }
+        if let Some(v) = state.take_vector("v") {
+            anyhow::ensure!(
+                self.flavor == FoFlavor::Adam && v.len() == self.v.len(),
+                "{}: checkpoint moment v has {} elements, expected {}",
+                self.name(),
+                v.len(),
+                self.v.len()
+            );
+            self.v = v;
+        }
+        anyhow::ensure!(
+            state.is_empty(),
+            "{}: unrecognised checkpoint state {:?}",
+            self.name(),
+            state
+        );
+        Ok(())
     }
 
     fn step(&mut self, rt: &Runtime, s: &mut Session, batch: &Batch, _step: u64)

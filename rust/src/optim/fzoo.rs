@@ -22,7 +22,7 @@ use anyhow::Result;
 use crate::data::Batch;
 use crate::runtime::{scalar_f32, to_vec_f32, Runtime, Session};
 
-use super::{sample_std, step_seed, Objective, Optimizer, StepOut};
+use super::{sample_std, step_seed, Objective, OptState, Optimizer, StepOut};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FzooMode {
@@ -178,6 +178,27 @@ impl Optimizer for Fzoo {
 
     fn set_lr_scale(&mut self, scale: f32) {
         self.eta = self.eta_base * scale;
+    }
+
+    fn export_state(&self) -> Result<OptState> {
+        let mut st = OptState::default();
+        if !self.prev_losses.is_empty() {
+            // FZOO-R's sigma estimate spans two steps; without this a
+            // resumed run's first sigma would differ from the unbroken run
+            st.vectors.push(("prev_losses".into(), self.prev_losses.clone()));
+        }
+        Ok(st)
+    }
+
+    fn import_state(&mut self, _rt: &Runtime, mut state: OptState) -> Result<()> {
+        self.prev_losses = state.take_vector("prev_losses").unwrap_or_default();
+        anyhow::ensure!(
+            state.is_empty(),
+            "{}: unrecognised checkpoint state {:?}",
+            self.name(),
+            state
+        );
+        Ok(())
     }
 
     fn step(&mut self, rt: &Runtime, s: &mut Session, batch: &Batch, step: u64)

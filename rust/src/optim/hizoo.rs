@@ -16,7 +16,7 @@ use anyhow::Result;
 use crate::data::Batch;
 use crate::runtime::{scalar_f32, Runtime, Session};
 
-use super::{step_seed, Objective, Optimizer, StepOut};
+use super::{step_seed, Objective, OptState, Optimizer, StepOut};
 
 pub struct HiZoo {
     pub lr: f32,
@@ -99,6 +99,28 @@ impl Optimizer for HiZoo {
 
     fn set_lr_scale(&mut self, scale: f32) {
         self.lr = self.lr_base * scale;
+    }
+
+    fn export_state(&self) -> Result<OptState> {
+        Ok(OptState {
+            scalars: vec![
+                ("sigma_ema".into(), self.sigma_ema as f64),
+                ("initialized".into(), if self.initialized { 1.0 } else { 0.0 }),
+            ],
+            vectors: Vec::new(),
+        })
+    }
+
+    fn import_state(&mut self, _rt: &Runtime, mut state: OptState) -> Result<()> {
+        self.sigma_ema = state.take_scalar("sigma_ema").unwrap_or(1.0) as f32;
+        self.initialized = state.take_scalar("initialized").unwrap_or(0.0) != 0.0;
+        anyhow::ensure!(
+            state.is_empty(),
+            "{}: unrecognised checkpoint state {:?}",
+            self.name(),
+            state
+        );
+        Ok(())
     }
 
     fn step(&mut self, rt: &Runtime, s: &mut Session, batch: &Batch, step: u64)

@@ -56,10 +56,46 @@ impl Objective {
     }
 }
 
+/// Resumable optimizer state for checkpointing: named scalars (step
+/// counters, EMAs) and named d-vectors (Adam/momentum moments). Vectors
+/// are exported to the host (device moments cross the boundary exactly
+/// here — the checkpoint sync point) and re-uploaded on import. An empty
+/// state is valid for stateless optimizers.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct OptState {
+    pub scalars: Vec<(String, f64)>,
+    pub vectors: Vec<(String, Vec<f32>)>,
+}
+
+impl OptState {
+    pub fn is_empty(&self) -> bool {
+        self.scalars.is_empty() && self.vectors.is_empty()
+    }
+
+    pub fn scalar(&self, name: &str) -> Option<f64> {
+        self.scalars.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
+    }
+
+    /// Remove and return a named scalar. Importers consume what they
+    /// recognise with the `take_*` helpers, then reject leftovers via
+    /// [`OptState::is_empty`] — so unknown state fails loudly.
+    pub fn take_scalar(&mut self, name: &str) -> Option<f64> {
+        let i = self.scalars.iter().position(|(n, _)| n == name)?;
+        Some(self.scalars.remove(i).1)
+    }
+
+    /// Remove and return a named vector (see [`OptState::take_scalar`]).
+    pub fn take_vector(&mut self, name: &str) -> Option<Vec<f32>> {
+        let i = self.vectors.iter().position(|(n, _)| n == name)?;
+        Some(self.vectors.remove(i).1)
+    }
+}
+
 /// One optimizer driving one `Session`. Not `Send`: optimizers may hold
 /// device-resident state (`DeviceVec` moments) pinned to the runtime's
-/// PJRT client thread; concurrent multi-run serving wraps each (session,
-/// optimizer) pair in its own thread instead of moving them.
+/// PJRT client thread; the serve run manager therefore *builds* each
+/// (session, optimizer) pair on its runtime thread instead of moving them
+/// across (only plain-data requests cross threads).
 pub trait Optimizer {
     fn name(&self) -> String;
     fn step(&mut self, rt: &Runtime, s: &mut Session, batch: &Batch, step: u64)
@@ -69,6 +105,23 @@ pub trait Optimizer {
     /// LR-schedule hook: multiply the *base* learning rate by `scale`
     /// (idempotent — called with the absolute scale every step).
     fn set_lr_scale(&mut self, _scale: f32) {}
+    /// Export resumable state for a checkpoint. Stateless optimizers
+    /// return the default empty state.
+    fn export_state(&self) -> Result<OptState> {
+        Ok(OptState::default())
+    }
+    /// Restore state produced by [`Optimizer::export_state`]. The default
+    /// accepts only an empty state, so a checkpoint that carries moments
+    /// into a stateless optimizer fails loudly instead of silently
+    /// dropping them.
+    fn import_state(&mut self, _rt: &Runtime, state: OptState) -> Result<()> {
+        anyhow::ensure!(
+            state.is_empty(),
+            "{}: checkpoint carries optimizer state but this optimizer keeps none",
+            self.name()
+        );
+        Ok(())
+    }
 }
 
 /// Per-step perturbation seed: decorrelated across steps and runs.

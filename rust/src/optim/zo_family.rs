@@ -15,7 +15,7 @@ use anyhow::Result;
 use crate::data::Batch;
 use crate::runtime::{scalar_f32, to_vec_f32, DeviceVec, Runtime, Session};
 
-use super::{step_seed, Objective, Optimizer, StepOut};
+use super::{step_seed, Objective, OptState, Optimizer, StepOut};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ZoFlavor {
@@ -159,6 +159,59 @@ impl Optimizer for ZoFamily {
 
     fn set_lr_scale(&mut self, scale: f32) {
         self.lr = self.lr_base * scale;
+    }
+
+    fn export_state(&self) -> Result<OptState> {
+        // Device moments cross to the host here — the checkpoint is an
+        // explicit sync boundary, exactly like Session::sync_to_host.
+        let mut st = OptState {
+            scalars: vec![("t".into(), self.t as f64)],
+            vectors: Vec::new(),
+        };
+        if let Some(m) = &self.m {
+            st.vectors.push(("m".into(), m.to_host()?));
+        }
+        if let Some(v) = &self.v {
+            st.vectors.push(("v".into(), v.to_host()?));
+        }
+        Ok(st)
+    }
+
+    fn import_state(&mut self, rt: &Runtime, mut state: OptState) -> Result<()> {
+        self.t = state.take_scalar("t").unwrap_or(0.0) as f32;
+        self.m = match state.take_vector("m") {
+            Some(m) => {
+                anyhow::ensure!(
+                    m.len() == self.d,
+                    "{}: checkpoint moment m has {} elements, expected d = {}",
+                    self.name(),
+                    m.len(),
+                    self.d
+                );
+                Some(rt.upload_f32(&m)?)
+            }
+            None => None,
+        };
+        self.v = match state.take_vector("v") {
+            Some(v) => {
+                anyhow::ensure!(
+                    v.len() == self.d,
+                    "{}: checkpoint moment v has {} elements, expected d = {}",
+                    self.name(),
+                    v.len(),
+                    self.d
+                );
+                Some(rt.upload_f32(&v)?)
+            }
+            None => None,
+        };
+        anyhow::ensure!(
+            state.is_empty(),
+            "{}: unrecognised checkpoint state {:?}",
+            self.name(),
+            state
+        );
+        Ok(())
     }
 
     fn step(&mut self, rt: &Runtime, s: &mut Session, batch: &Batch, step: u64)

@@ -26,6 +26,16 @@
 //! multi-output graphs return one tuple literal which `run()` decomposes
 //! on the host. v1 (all-tuple) artifacts still execute correctly — the
 //! device-resident fast path just degrades to an explicit round trip.
+//!
+//! Thread ownership (`Send` audit): `PjRtClient`, compiled executables,
+//! `Literal`s and `DeviceVec`s wrap raw PJRT pointers and are **not**
+//! `Send`, and nothing here pretends otherwise — there are no unsafe
+//! `Send`/`Sync` impls in this crate. A `Runtime` and everything built on
+//! it (sessions, device-resident optimizer state) therefore live and die
+//! on one thread. Single-run drivers use the calling thread;
+//! `serve::RunManager` *constructs* its `Runtime` on a dedicated worker
+//! thread and multiplexes runs over it, with only plain-data requests and
+//! records crossing the channel.
 
 pub mod exec;
 pub mod manifest;

@@ -1,0 +1,323 @@
+//! Checkpoint files: `{trainable, step, optimizer state, forward
+//! accounting}` captured at the explicit host-sync export boundary.
+//!
+//! A checkpoint is a pair of files next to each other:
+//!
+//! * `<name>.step<N>.ckpt.json` — metadata: model, task, step cursor,
+//!   cumulative forward counts, loss EMA, and the optimizer's named
+//!   scalars plus the byte layout of the vector blob;
+//! * `<name>.step<N>.ckpt.bin` — raw little-endian f32s: the trainable
+//!   vector first, then each optimizer vector in the order the JSON
+//!   lists them.
+//!
+//! Restoring everything (including FZOO-R's carried losses and ZO-Adam's
+//! device moments) is what makes a resumed run *bit-identical* to the
+//! unbroken run — `tests/serve.rs` asserts exactly that.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::TrainLoop;
+use crate::optim::{OptState, Optimizer};
+use crate::runtime::Session;
+use crate::util::json::{self, Value};
+
+use super::protocol::RunSpec;
+
+pub const CKPT_VERSION: u64 = 1;
+
+/// An in-memory checkpoint: everything a run needs to continue as if it
+/// had never stopped (parameters, optimizer state, loop counters).
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    pub model: String,
+    pub task: String,
+    /// Whether the run started from the pretrained checkpoint. A prefix
+    /// run's trained state is only the prefix — the frozen base must be
+    /// rebuilt identically on resume, so provenance is validated.
+    pub pretrained: bool,
+    /// Seed of the batch stream + perturbation seeds; a resume with a
+    /// different seed would silently train a different trajectory.
+    pub run_seed: u64,
+    /// Few-shot truncation of the train set (changes the batch stream).
+    pub k_shot: Option<usize>,
+    /// The next step the resumed loop will execute.
+    pub step: u64,
+    pub trainable: Vec<f32>,
+    pub forwards: f64,
+    pub forward_equiv: f64,
+    pub ema_loss: Option<f64>,
+    pub optimizer_name: String,
+    pub optimizer: OptState,
+}
+
+impl Checkpoint {
+    /// Snapshot a live run. Syncing the trainable vector to the host (and
+    /// any device-resident moments via `export_state`) is the only
+    /// host↔device traffic a checkpoint causes.
+    pub fn capture(
+        session: &mut Session,
+        optimizer: &dyn Optimizer,
+        lp: &TrainLoop,
+        spec: &RunSpec,
+    ) -> Result<Self> {
+        Ok(Self {
+            model: session.model.clone(),
+            task: spec.task.clone(),
+            pretrained: spec.pretrained,
+            run_seed: spec.run_seed,
+            k_shot: spec.k_shot,
+            step: lp.next_step(),
+            trainable: session.trainable_host()?.to_vec(),
+            forwards: lp.forwards(),
+            forward_equiv: lp.forward_equiv(),
+            ema_loss: lp.ema_loss(),
+            optimizer_name: optimizer.name(),
+            optimizer: optimizer.export_state()?,
+        })
+    }
+
+    /// Write `<dir>/<name>.step<N>.ckpt.{json,bin}`; returns the JSON path
+    /// (the handle `resume_from` takes).
+    pub fn write(&self, dir: &Path, name: &str) -> Result<PathBuf> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
+        let stem = format!("{name}.step{}", self.step);
+        let bin_name = format!("{stem}.ckpt.bin");
+        let json_path = dir.join(format!("{stem}.ckpt.json"));
+
+        let mut blob: Vec<u8> =
+            Vec::with_capacity(4 * (self.trainable.len() + vec_elems(&self.optimizer)));
+        for f in &self.trainable {
+            blob.extend_from_slice(&f.to_le_bytes());
+        }
+        for (_, v) in &self.optimizer.vectors {
+            for f in v {
+                blob.extend_from_slice(&f.to_le_bytes());
+            }
+        }
+        // Crash-safe: stage both files under .tmp names and rename into
+        // place (bin first, json last), so a crash mid-write can never
+        // destroy an existing good checkpoint of the same name.
+        let bin_path = dir.join(&bin_name);
+        let bin_tmp = dir.join(format!("{bin_name}.tmp"));
+        std::fs::write(&bin_tmp, blob)
+            .with_context(|| format!("writing {}", bin_tmp.display()))?;
+        std::fs::rename(&bin_tmp, &bin_path)
+            .with_context(|| format!("publishing {}", bin_path.display()))?;
+
+        let scalars: BTreeMap<String, Value> = self
+            .optimizer
+            .scalars
+            .iter()
+            .map(|(n, v)| (n.clone(), Value::num(*v)))
+            .collect();
+        let vectors: Vec<Value> = self
+            .optimizer
+            .vectors
+            .iter()
+            .map(|(n, v)| {
+                Value::obj(vec![
+                    ("name", Value::str(n.as_str())),
+                    ("len", Value::num(v.len() as f64)),
+                ])
+            })
+            .collect();
+        let doc = Value::obj(vec![
+            ("version", Value::num(CKPT_VERSION as f64)),
+            ("model", Value::str(self.model.as_str())),
+            ("task", Value::str(self.task.as_str())),
+            ("pretrained", Value::Bool(self.pretrained)),
+            ("run_seed", Value::num(self.run_seed as f64)),
+            (
+                "k_shot",
+                self.k_shot
+                    .map(|k| Value::num(k as f64))
+                    .unwrap_or(Value::Null),
+            ),
+            ("step", Value::num(self.step as f64)),
+            ("trainable_len", Value::num(self.trainable.len() as f64)),
+            ("forwards", Value::num(self.forwards)),
+            ("forward_equiv", Value::num(self.forward_equiv)),
+            (
+                "ema_loss",
+                self.ema_loss.map(Value::num).unwrap_or(Value::Null),
+            ),
+            (
+                "optimizer",
+                Value::obj(vec![
+                    ("name", Value::str(self.optimizer_name.as_str())),
+                    ("scalars", Value::Obj(scalars)),
+                    ("vectors", Value::Arr(vectors)),
+                ]),
+            ),
+            ("bin", Value::str(bin_name.as_str())),
+        ]);
+        let json_tmp = dir.join(format!("{stem}.ckpt.json.tmp"));
+        std::fs::write(&json_tmp, doc.to_string())
+            .with_context(|| format!("writing {}", json_tmp.display()))?;
+        std::fs::rename(&json_tmp, &json_path)
+            .with_context(|| format!("publishing {}", json_path.display()))?;
+        Ok(json_path)
+    }
+
+    /// Load a checkpoint pair from the JSON path.
+    pub fn load(json_path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(json_path)
+            .with_context(|| format!("reading checkpoint {}", json_path.display()))?;
+        let v = json::parse(&text)
+            .with_context(|| format!("parsing {}", json_path.display()))?;
+        let version = v.req("version")?.as_u64()?;
+        anyhow::ensure!(
+            version == CKPT_VERSION,
+            "{}: checkpoint version {version}, this build reads {CKPT_VERSION}",
+            json_path.display()
+        );
+        let trainable_len = v.req("trainable_len")?.as_usize()?;
+        let opt = v.req("optimizer")?;
+        let scalars: Vec<(String, f64)> = opt
+            .req("scalars")?
+            .as_obj()?
+            .iter()
+            .map(|(n, x)| Ok((n.clone(), x.as_f64()?)))
+            .collect::<Result<_>>()?;
+        let vec_specs: Vec<(String, usize)> = opt
+            .req("vectors")?
+            .as_arr()?
+            .iter()
+            .map(|x| Ok((x.req("name")?.as_str()?.to_string(), x.req("len")?.as_usize()?)))
+            .collect::<Result<_>>()?;
+
+        let bin_name = v.req("bin")?.as_str()?;
+        let bin_path = json_path
+            .parent()
+            .unwrap_or_else(|| Path::new("."))
+            .join(bin_name);
+        let bytes = std::fs::read(&bin_path)
+            .with_context(|| format!("reading checkpoint blob {}", bin_path.display()))?;
+        let total = trainable_len + vec_specs.iter().map(|(_, l)| l).sum::<usize>();
+        anyhow::ensure!(
+            bytes.len() == total * 4,
+            "{}: {} bytes, metadata describes {} f32s",
+            bin_path.display(),
+            bytes.len(),
+            total
+        );
+        // decode each named section straight out of the byte buffer — no
+        // intermediate full-blob Vec<f32> (these are O(d) at model scale)
+        let decode = |off: usize, len: usize| -> Vec<f32> {
+            bytes[off * 4..(off + len) * 4]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect()
+        };
+        let trainable = decode(0, trainable_len);
+        let mut off = trainable_len;
+        let mut vectors = Vec::with_capacity(vec_specs.len());
+        for (name, len) in vec_specs {
+            vectors.push((name, decode(off, len)));
+            off += len;
+        }
+
+        Ok(Self {
+            model: v.req("model")?.as_str()?.to_string(),
+            task: v.req("task")?.as_str()?.to_string(),
+            pretrained: v
+                .get("pretrained")
+                .map(|x| x.as_bool())
+                .transpose()?
+                .unwrap_or(false),
+            run_seed: v
+                .get("run_seed")
+                .map(|x| x.as_u64())
+                .transpose()?
+                .unwrap_or(0),
+            k_shot: match v.get("k_shot") {
+                Some(Value::Null) | None => None,
+                Some(x) => Some(x.as_usize()?),
+            },
+            step: v.req("step")?.as_u64()?,
+            trainable,
+            forwards: v.req("forwards")?.as_f64()?,
+            forward_equiv: v.req("forward_equiv")?.as_f64()?,
+            ema_loss: match v.get("ema_loss") {
+                Some(Value::Null) | None => None,
+                Some(x) => Some(x.as_f64()?),
+            },
+            optimizer_name: opt.req("name")?.as_str()?.to_string(),
+            optimizer: OptState { scalars, vectors },
+        })
+    }
+}
+
+fn vec_elems(st: &OptState) -> usize {
+    st.vectors.iter().map(|(_, v)| v.len()).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_load_round_trip() {
+        let dir = std::env::temp_dir().join(format!("fzoo-ckpt-test-{}", std::process::id()));
+        let ck = Checkpoint {
+            model: "tiny-enc".into(),
+            task: "sst2".into(),
+            pretrained: true,
+            run_seed: 7,
+            k_shot: Some(16),
+            step: 5,
+            trainable: vec![1.0, -2.5, 3.25],
+            forwards: 25.0,
+            forward_equiv: 25.0,
+            ema_loss: Some(1.5),
+            optimizer_name: "ZO-Adam".into(),
+            optimizer: OptState {
+                scalars: vec![("t".into(), 5.0)],
+                vectors: vec![
+                    ("m".into(), vec![0.5, 0.5, 0.5]),
+                    ("v".into(), vec![0.25, 0.0, -0.25]),
+                ],
+            },
+        };
+        let path = ck.write(&dir, "a").unwrap();
+        assert!(path.to_string_lossy().ends_with("a.step5.ckpt.json"));
+        let got = Checkpoint::load(&path).unwrap();
+        assert_eq!(got.model, ck.model);
+        assert!(got.pretrained);
+        assert_eq!(got.run_seed, 7);
+        assert_eq!(got.k_shot, Some(16));
+        assert_eq!(got.step, 5);
+        assert_eq!(got.trainable, ck.trainable);
+        assert_eq!(got.ema_loss, Some(1.5));
+        assert_eq!(got.optimizer, ck.optimizer);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_rejects_truncated_blob() {
+        let dir = std::env::temp_dir().join(format!("fzoo-ckpt-trunc-{}", std::process::id()));
+        let ck = Checkpoint {
+            model: "m".into(),
+            task: "t".into(),
+            pretrained: false,
+            run_seed: 0,
+            k_shot: None,
+            step: 1,
+            trainable: vec![1.0, 2.0],
+            forwards: 0.0,
+            forward_equiv: 0.0,
+            ema_loss: None,
+            optimizer_name: "FZOO(N=4)".into(),
+            optimizer: OptState::default(),
+        };
+        let path = ck.write(&dir, "x").unwrap();
+        let bin = dir.join("x.step1.ckpt.bin");
+        std::fs::write(&bin, [0u8; 4]).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

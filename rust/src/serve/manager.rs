@@ -1,0 +1,325 @@
+//! [`RunManager`]: the runtime-owning worker thread and its client-side
+//! handles.
+//!
+//! Threading model — the whole point of the design: the PJRT client,
+//! compiled executables, sessions and device buffers are not `Send`, so
+//! the manager never moves them. The worker thread *creates* the
+//! [`Runtime`] and every run's `Session`/optimizer locally from plain-data
+//! [`RunSpec`]s; clients talk to it exclusively through the `Send` request
+//! protocol (`serve::protocol`). Dropping the last client (or the
+//! `RunManager`) shuts the thread down.
+//!
+//! Scheduling: a run becomes *runnable* when `TrainSteps` credits it
+//! budget. The worker loop drains pending control requests, then gives
+//! every runnable run exactly one training step (submission order) and
+//! repeats — fair round-robin at step granularity. When nothing is
+//! runnable it blocks on the request channel instead of spinning.
+
+use std::path::PathBuf;
+use std::sync::mpsc::{self, Receiver, Sender, TryRecvError};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::{EvalRecord, History};
+use crate::runtime::Runtime;
+
+use super::protocol::{Event, Request, RunId, RunSpec, RunStatus};
+use super::run::RunState;
+
+/// Owns the worker thread. Create with [`RunManager::start`], hand out
+/// [`Client`]s, and either call [`RunManager::shutdown`] for an explicit
+/// join or let `Drop` do it.
+pub struct RunManager {
+    client: Client,
+    join: Option<JoinHandle<()>>,
+}
+
+impl RunManager {
+    /// Spawn the worker and load the PJRT runtime *on* it. Artifact /
+    /// manifest problems surface here, not at first submit.
+    pub fn start(artifacts: impl Into<PathBuf>) -> Result<Self> {
+        let dir = artifacts.into();
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (boot_tx, boot_rx) = mpsc::channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("fzoo-serve".into())
+            .spawn(move || {
+                let rt = match Runtime::load(&dir) {
+                    Ok(rt) => {
+                        let _ = boot_tx.send(Ok(()));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = boot_tx.send(Err(e));
+                        return;
+                    }
+                };
+                Worker {
+                    rt,
+                    rx,
+                    runs: Vec::new(),
+                    next_id: 1,
+                }
+                .run();
+            })?;
+        boot_rx
+            .recv()
+            .map_err(|_| anyhow!("serve worker died during startup"))??;
+        Ok(Self {
+            client: Client { tx },
+            join: Some(join),
+        })
+    }
+
+    pub fn client(&self) -> Client {
+        self.client.clone()
+    }
+
+    /// Graceful shutdown: live runs stop where they are (no finalize),
+    /// the thread joins. Event streams of unfinished runs simply end.
+    pub fn shutdown(mut self) -> Result<()> {
+        self.shutdown_inner()
+    }
+
+    fn shutdown_inner(&mut self) -> Result<()> {
+        let Some(join) = self.join.take() else {
+            return Ok(());
+        };
+        let (reply, rx) = mpsc::channel();
+        // ignore send/recv failures: the worker may already be gone
+        let _ = self.client.tx.send(Request::Shutdown { reply });
+        let _ = rx.recv();
+        join.join()
+            .map_err(|_| anyhow!("serve worker thread panicked"))
+    }
+}
+
+impl Drop for RunManager {
+    fn drop(&mut self) {
+        let _ = self.shutdown_inner();
+    }
+}
+
+/// Cloneable, `Send` handle to the worker. All methods are synchronous
+/// round trips over the request channel.
+#[derive(Clone)]
+pub struct Client {
+    tx: Sender<Request>,
+}
+
+impl Client {
+    fn roundtrip<T>(&self, build: impl FnOnce(Sender<T>) -> Request) -> Result<T> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(build(reply))
+            .map_err(|_| anyhow!("serve worker is gone"))?;
+        rx.recv()
+            .map_err(|_| anyhow!("serve worker dropped the request"))
+    }
+
+    /// Register a run. The session opens (and any pretraining/resume load
+    /// happens) before this returns; stepping starts only once
+    /// [`Client::train_steps`] credits budget.
+    pub fn submit(&self, spec: RunSpec) -> Result<RunHandle> {
+        let (events, event_rx) = mpsc::channel();
+        let id = self.roundtrip(|reply| Request::Submit {
+            spec: Box::new(spec),
+            events,
+            reply,
+        })??;
+        Ok(RunHandle {
+            id,
+            events: event_rx,
+            client: self.clone(),
+        })
+    }
+
+    /// Credit `steps` more steps to a run (clamped to its plan).
+    pub fn train_steps(&self, id: RunId, steps: u64) -> Result<()> {
+        self.roundtrip(|reply| Request::TrainSteps { id, steps, reply })?
+    }
+
+    /// Evaluate a run's current parameters (works mid-run or after).
+    pub fn eval(&self, id: RunId) -> Result<EvalRecord> {
+        self.roundtrip(|reply| Request::Eval { id, reply })?
+    }
+
+    /// Write a checkpoint now; returns the `.ckpt.json` path.
+    pub fn checkpoint(&self, id: RunId) -> Result<String> {
+        self.roundtrip(|reply| Request::Checkpoint { id, reply })?
+    }
+
+    /// Status of every run the manager knows, submission order.
+    pub fn status(&self) -> Result<Vec<RunStatus>> {
+        self.roundtrip(|reply| Request::Status { reply })
+    }
+
+    /// Finalize a run early (final eval + sync; `stopped_early` history).
+    pub fn stop(&self, id: RunId) -> Result<()> {
+        self.roundtrip(|reply| Request::Stop { id, reply })?
+    }
+
+    /// Drop a run record, releasing its device-resident parameters and
+    /// optimizer moments — completed runs otherwise stay resident so
+    /// `eval`/`status` keep working. A running run is dropped without
+    /// finalizing (its event stream just ends); `stop` first for a
+    /// graceful end. Long-lived managers should remove runs they are
+    /// done with.
+    pub fn remove(&self, id: RunId) -> Result<()> {
+        self.roundtrip(|reply| Request::Remove { id, reply })?
+    }
+}
+
+/// Client-side view of one submitted run: its id plus the event stream.
+pub struct RunHandle {
+    pub id: RunId,
+    events: Receiver<Event>,
+    pub client: Client,
+}
+
+impl RunHandle {
+    /// Next event, blocking. `None` once the run is finished/failed and
+    /// drained, or after a manager shutdown.
+    pub fn next_event(&self) -> Option<Event> {
+        self.events.recv().ok()
+    }
+
+    /// Non-blocking variant of [`RunHandle::next_event`].
+    pub fn try_event(&self) -> Option<Event> {
+        self.events.try_recv().ok()
+    }
+
+    /// Block until the run completes, discarding intermediate events.
+    /// Errors if the run failed or the manager shut down first.
+    pub fn wait(&self) -> Result<History> {
+        loop {
+            match self.events.recv() {
+                Ok(Event::Finished(h)) => return Ok(h),
+                Ok(Event::Failed(e)) => bail!("{} failed: {e}", self.id),
+                Ok(_) => continue,
+                Err(_) => bail!("{}: event stream closed before completion", self.id),
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// worker
+// ---------------------------------------------------------------------------
+
+struct Worker {
+    rt: Runtime,
+    rx: Receiver<Request>,
+    runs: Vec<RunState>,
+    next_id: u64,
+}
+
+impl Worker {
+    fn run(mut self) {
+        loop {
+            // Block for work when idle; otherwise just drain what's queued
+            // so control requests stay responsive between step slices.
+            if !self.runs.iter().any(|r| r.runnable()) {
+                match self.rx.recv() {
+                    Ok(req) => {
+                        if self.handle(req) {
+                            return;
+                        }
+                    }
+                    // every Client dropped — nothing can reach us again
+                    Err(_) => return,
+                }
+            }
+            loop {
+                match self.rx.try_recv() {
+                    Ok(req) => {
+                        if self.handle(req) {
+                            return;
+                        }
+                    }
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => return,
+                }
+            }
+            // Fair slice: one step per runnable run, submission order.
+            for run in &mut self.runs {
+                run.tick(&self.rt);
+            }
+        }
+    }
+
+    fn run_mut(&mut self, id: RunId) -> Result<&mut RunState> {
+        self.runs
+            .iter_mut()
+            .find(|r| r.id == id)
+            .ok_or_else(|| anyhow!("no such run {id}"))
+    }
+
+    /// Returns true on shutdown.
+    fn handle(&mut self, req: Request) -> bool {
+        match req {
+            Request::Submit {
+                spec,
+                events,
+                reply,
+            } => {
+                let id = RunId(self.next_id);
+                match RunState::open(&self.rt, id, *spec, events) {
+                    Ok(run) => {
+                        self.next_id += 1;
+                        self.runs.push(run);
+                        let _ = reply.send(Ok(id));
+                    }
+                    Err(e) => {
+                        let _ = reply.send(Err(e));
+                    }
+                }
+            }
+            Request::TrainSteps { id, steps, reply } => {
+                let _ = reply.send(self.run_mut(id).and_then(|r| r.credit(steps)));
+            }
+            Request::Eval { id, reply } => {
+                let rt = &self.rt;
+                let out = self
+                    .runs
+                    .iter()
+                    .find(|r| r.id == id)
+                    .ok_or_else(|| anyhow!("no such run {id}"))
+                    .and_then(|r| r.eval(rt));
+                let _ = reply.send(out);
+            }
+            Request::Checkpoint { id, reply } => {
+                let _ = reply.send(self.run_mut(id).and_then(|r| r.write_checkpoint()));
+            }
+            Request::Status { reply } => {
+                let _ = reply.send(self.runs.iter().map(|r| r.status()).collect());
+            }
+            Request::Stop { id, reply } => {
+                let rt = &self.rt;
+                let out = self
+                    .runs
+                    .iter_mut()
+                    .find(|r| r.id == id)
+                    .ok_or_else(|| anyhow!("no such run {id}"))
+                    .and_then(|r| r.stop(rt));
+                let _ = reply.send(out);
+            }
+            Request::Remove { id, reply } => {
+                let out = match self.runs.iter().position(|r| r.id == id) {
+                    Some(i) => {
+                        self.runs.remove(i); // Drop frees the device state
+                        Ok(())
+                    }
+                    None => Err(anyhow!("no such run {id}")),
+                };
+                let _ = reply.send(out);
+            }
+            Request::Shutdown { reply } => {
+                let _ = reply.send(());
+                return true;
+            }
+        }
+        false
+    }
+}

@@ -1,0 +1,51 @@
+//! `serve` — the run-manager subsystem: many live training/eval runs
+//! multiplexed over one PJRT runtime.
+//!
+//! ZO fine-tuning's system-level payoff is its per-run footprint: one
+//! device-resident parameter vector plus a handful of scalars per step.
+//! That makes "how many *runs* can one device host?" the natural next
+//! question after single-run speed, and this module answers it:
+//!
+//! * [`RunManager`] owns the [`Runtime`](crate::runtime::Runtime) on a
+//!   dedicated worker thread. PJRT state (client, compiled executables,
+//!   `DeviceVec`s) is not `Send`, so nothing device-adjacent ever crosses
+//!   threads — runs are *built* on the worker from plain-data
+//!   [`RunSpec`]s, and only scalars/records flow back.
+//! * [`Client`] is the cloneable handle: a typed request protocol
+//!   (`Submit`, `TrainSteps`, `Eval`, `Checkpoint`, `Status`, `Stop`, `Remove`)
+//!   over mpsc channels. [`Client::submit`] returns a [`RunHandle`]
+//!   whose event stream delivers per-step [`StepRecord`]s, scheduled
+//!   [`EvalRecord`]s, checkpoint notices and the final
+//!   [`History`](crate::coordinator::History).
+//! * The scheduler interleaves runnable runs **at step granularity** in
+//!   round-robin order. Each run's state is fully isolated (own
+//!   `Session`, optimizer, batcher, seeds, `TrainLoop` counters), so a
+//!   multiplexed run produces the bit-identical loss series it would
+//!   produce alone — `tests/serve.rs` proves it.
+//! * Periodic checkpoints ([`RunSpec::checkpoint_every`]) capture
+//!   `{trainable, step, optimizer state, forward accounting}` through the
+//!   explicit `sync_to_host` export boundary; [`RunSpec::resume_from`]
+//!   restores all of it and fast-forwards the batch stream.
+//!
+//! ```no_run
+//! use fzoo::optim::OptimizerKind;
+//! use fzoo::serve::{RunManager, RunSpec};
+//! let mgr = RunManager::start("artifacts")?;
+//! let client = mgr.client();
+//! let a = client.submit(RunSpec::new("tiny-enc", "sst2", OptimizerKind::fzoo(1e-3, 1e-3), 100))?;
+//! let b = client.submit(RunSpec::new("tiny-dec", "boolq", OptimizerKind::mezo(1e-4, 1e-3), 100))?;
+//! client.train_steps(a.id, 100)?;
+//! client.train_steps(b.id, 100)?; // both now advance, interleaved per step
+//! let (ha, hb) = (a.wait()?, b.wait()?);
+//! println!("{} {:.3} | {} {:.3}", ha.model, ha.last_loss(), hb.model, hb.last_loss());
+//! # anyhow::Ok(())
+//! ```
+
+pub mod checkpoint;
+pub mod manager;
+pub mod protocol;
+pub mod run;
+
+pub use checkpoint::Checkpoint;
+pub use manager::{Client, RunHandle, RunManager};
+pub use protocol::{Event, RunId, RunPhase, RunSpec, RunStatus};

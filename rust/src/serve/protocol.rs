@@ -1,0 +1,289 @@
+//! The typed request/event protocol between [`Client`](super::Client)
+//! handles and the run-manager worker thread. Everything defined here is
+//! plain data (`Send`), because it is the *only* thing that crosses the
+//! thread boundary — sessions, optimizers and device buffers never do.
+
+use std::sync::mpsc::Sender;
+
+use anyhow::Result;
+
+use crate::config::{opt_str, parse_schedule};
+use crate::coordinator::{EvalRecord, History, LrSchedule, StepRecord, TrainOpts};
+use crate::optim::OptimizerKind;
+use crate::util::json::Value;
+
+/// Worker-assigned identifier of a submitted run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct RunId(pub u64);
+
+impl std::fmt::Display for RunId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "run#{}", self.0)
+    }
+}
+
+/// Lifecycle of a run inside the manager.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RunPhase {
+    /// Registered, no step budget — waiting for `TrainSteps`.
+    Idle,
+    /// Has budget; the scheduler gives it one step per round-robin pass.
+    Running,
+    /// Plan complete (or stopped): final eval + host sync done.
+    Finished,
+    /// A step/eval/checkpoint errored; the error is in `RunStatus::error`.
+    Failed,
+}
+
+/// One run's row in a `Status` reply.
+#[derive(Debug, Clone)]
+pub struct RunStatus {
+    pub id: RunId,
+    pub name: String,
+    pub model: String,
+    pub task: String,
+    pub phase: RunPhase,
+    pub steps_run: u64,
+    pub steps_total: u64,
+    /// steps credited but not yet executed
+    pub budget: u64,
+    pub last_loss: Option<f32>,
+    pub error: Option<String>,
+}
+
+/// Stream items delivered to a [`RunHandle`](super::RunHandle).
+#[derive(Debug, Clone)]
+pub enum Event {
+    Step(StepRecord),
+    Eval(EvalRecord),
+    /// A periodic or requested checkpoint was written.
+    Checkpoint { step: u64, path: String },
+    /// Terminal: the run completed (or was stopped early); carries the
+    /// full history.
+    Finished(History),
+    /// Terminal: the run errored. Other runs are unaffected.
+    Failed(String),
+}
+
+/// Everything needed to build one run on the worker thread. Plain data —
+/// the session/optimizer/batcher are constructed worker-side from this.
+#[derive(Debug, Clone)]
+pub struct RunSpec {
+    /// Display/log name; defaults to `<model>-<task>-s<seed>`.
+    pub name: String,
+    pub model: String,
+    pub task: String,
+    pub optimizer: OptimizerKind,
+    /// Total planned steps (the run finishes when it has executed these).
+    pub steps: u64,
+    pub eval_every: u64,
+    pub eval_batches: usize,
+    pub k_shot: Option<usize>,
+    pub run_seed: u64,
+    pub schedule: LrSchedule,
+    pub target_loss: Option<f32>,
+    /// Start from the cached multi-task pretrained checkpoint.
+    pub pretrained: bool,
+    /// Write a checkpoint every N executed steps (0 = off).
+    pub checkpoint_every: u64,
+    /// Directory for periodic / requested checkpoints.
+    pub checkpoint_dir: Option<String>,
+    /// Path to a `.ckpt.json` written by a previous run of the *same*
+    /// model: restores trainable params, optimizer state, step cursor and
+    /// forward accounting, and fast-forwards the batch stream.
+    pub resume_from: Option<String>,
+    /// Per-run JSONL log path (written by the `fzoo serve` CLI).
+    pub log_path: Option<String>,
+}
+
+impl RunSpec {
+    pub fn new(model: &str, task: &str, optimizer: OptimizerKind, steps: u64) -> Self {
+        Self {
+            name: String::new(),
+            model: model.to_string(),
+            task: task.to_string(),
+            optimizer,
+            steps,
+            eval_every: 0,
+            eval_batches: 0,
+            k_shot: None,
+            run_seed: 0,
+            schedule: LrSchedule::Constant,
+            target_loss: None,
+            pretrained: false,
+            checkpoint_every: 0,
+            checkpoint_dir: None,
+            resume_from: None,
+            log_path: None,
+        }
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.run_seed = s;
+        self
+    }
+
+    /// The display name, derived from model/task/seed when unset.
+    pub fn display_name(&self) -> String {
+        if self.name.is_empty() {
+            format!("{}-{}-s{}", self.model, self.task, self.run_seed)
+        } else {
+            self.name.clone()
+        }
+    }
+
+    pub fn train_opts(&self) -> TrainOpts {
+        TrainOpts {
+            steps: self.steps,
+            eval_every: self.eval_every,
+            eval_batches: self.eval_batches,
+            target_loss: self.target_loss,
+            schedule: self.schedule,
+            run_seed: self.run_seed,
+            verbose: false,
+        }
+    }
+
+    /// Parse one job object of a `fzoo serve` job file. See
+    /// [`crate::config::JobFile`] for the file-level schema.
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let optimizer = OptimizerKind::from_json(v.req("optimizer")?)?;
+        let mut spec = Self::new(
+            v.req("model")?.as_str()?,
+            v.req("task")?.as_str()?,
+            optimizer,
+            v.get("steps").map(|x| x.as_u64()).transpose()?.unwrap_or(200),
+        );
+        if let Some(n) = v.get("name") {
+            spec.name = n.as_str()?.to_string();
+        }
+        spec.eval_every = v
+            .get("eval_every")
+            .map(|x| x.as_u64())
+            .transpose()?
+            .unwrap_or(0);
+        spec.eval_batches = v
+            .get("eval_batches")
+            .map(|x| x.as_usize())
+            .transpose()?
+            .unwrap_or(8);
+        spec.k_shot = v.get("k_shot").map(|x| x.as_usize()).transpose()?;
+        spec.run_seed = v
+            .get("run_seed")
+            .map(|x| x.as_u64())
+            .transpose()?
+            .unwrap_or(0);
+        if let Some(s) = v.get("schedule") {
+            spec.schedule = parse_schedule(s.as_str()?)?;
+        }
+        spec.target_loss = v.get("target_loss").map(|x| x.as_f32()).transpose()?;
+        spec.pretrained = v
+            .get("pretrained")
+            .map(|x| x.as_bool())
+            .transpose()?
+            .unwrap_or(false);
+        spec.checkpoint_every = v
+            .get("checkpoint_every")
+            .map(|x| x.as_u64())
+            .transpose()?
+            .unwrap_or(0);
+        spec.checkpoint_dir = opt_str(v, "checkpoint_dir")?;
+        spec.resume_from = opt_str(v, "resume_from")?;
+        spec.log_path = opt_str(v, "log")?;
+        Ok(spec)
+    }
+}
+
+/// Requests the worker thread serves. Each carries a reply channel; the
+/// worker never blocks on a reply send (a dropped receiver is fine).
+pub(crate) enum Request {
+    Submit {
+        spec: Box<RunSpec>,
+        events: Sender<Event>,
+        reply: Sender<Result<RunId>>,
+    },
+    /// Credit `steps` more steps to a run (clamped to its remaining plan).
+    TrainSteps {
+        id: RunId,
+        steps: u64,
+        reply: Sender<Result<()>>,
+    },
+    /// On-demand evaluation of the run's current parameters.
+    Eval {
+        id: RunId,
+        reply: Sender<Result<EvalRecord>>,
+    },
+    /// Write a checkpoint now; replies with the path.
+    Checkpoint {
+        id: RunId,
+        reply: Sender<Result<String>>,
+    },
+    Status {
+        reply: Sender<Vec<RunStatus>>,
+    },
+    /// Finalize a run early (final eval + host sync, `stopped_early`).
+    Stop {
+        id: RunId,
+        reply: Sender<Result<()>>,
+    },
+    /// Drop a run record entirely, releasing its device-resident session
+    /// and optimizer state. A still-running run is dropped *without*
+    /// finalizing — `Stop` first for a graceful end.
+    Remove {
+        id: RunId,
+        reply: Sender<Result<()>>,
+    },
+    Shutdown {
+        reply: Sender<()>,
+    },
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn run_spec_from_json_minimal_and_full() {
+        let v = json::parse(
+            r#"{"model":"tiny-enc","task":"sst2",
+                "optimizer":{"kind":"fzoo","lr":0.001,"eps":0.001}}"#,
+        )
+        .unwrap();
+        let s = RunSpec::from_json(&v).unwrap();
+        assert_eq!(s.model, "tiny-enc");
+        assert_eq!(s.steps, 200);
+        assert_eq!(s.eval_batches, 8);
+        assert_eq!(s.display_name(), "tiny-enc-sst2-s0");
+        assert!(!s.pretrained);
+
+        let v = json::parse(
+            r#"{"name":"a","model":"tiny-dec","task":"boolq",
+                "optimizer":{"kind":"mezo","lr":1e-4,"eps":0.001},
+                "steps":50,"eval_every":10,"eval_batches":4,"run_seed":7,
+                "k_shot":16,"schedule":"cosine:0.1","target_loss":0.3,
+                "pretrained":true,"checkpoint_every":25,
+                "checkpoint_dir":"ckpt","resume_from":"ckpt/a.step25.ckpt.json",
+                "log":"runs/a.jsonl"}"#,
+        )
+        .unwrap();
+        let s = RunSpec::from_json(&v).unwrap();
+        assert_eq!(s.display_name(), "a");
+        assert_eq!(s.run_seed, 7);
+        assert_eq!(s.k_shot, Some(16));
+        assert_eq!(s.schedule, LrSchedule::Cosine { min: 0.1 });
+        assert_eq!(s.checkpoint_every, 25);
+        assert_eq!(s.resume_from.as_deref(), Some("ckpt/a.step25.ckpt.json"));
+        assert_eq!(s.log_path.as_deref(), Some("runs/a.jsonl"));
+        assert!(s.pretrained);
+        let opts = s.train_opts();
+        assert_eq!(opts.steps, 50);
+        assert!(!opts.verbose);
+    }
+
+    #[test]
+    fn run_spec_missing_fields_error() {
+        let v = json::parse(r#"{"model":"m","task":"t"}"#).unwrap();
+        assert!(RunSpec::from_json(&v).is_err());
+    }
+}

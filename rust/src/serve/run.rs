@@ -1,0 +1,297 @@
+//! Worker-side run records: one [`RunState`] owns everything a live run
+//! needs — the device-resident `Session`, the optimizer (with its device
+//! moments), the batch stream and the resumable `TrainLoop` — plus the
+//! event channel back to the submitting client. Built and driven only on
+//! the manager's runtime thread; nothing here is (or needs to be) `Send`.
+
+use std::sync::mpsc::Sender;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{evaluate, EvalRecord, StepOutcome, TrainLoop};
+use crate::data::{Batcher, TaskKind};
+use crate::optim::Optimizer;
+use crate::runtime::{Runtime, Session};
+
+use super::checkpoint::Checkpoint;
+use super::protocol::{Event, RunId, RunPhase, RunSpec, RunStatus};
+
+pub(crate) struct RunState {
+    pub id: RunId,
+    pub spec: RunSpec,
+    session: Session,
+    optimizer: Box<dyn Optimizer>,
+    batcher: Batcher,
+    lp: TrainLoop,
+    pub phase: RunPhase,
+    /// steps credited via `TrainSteps` but not yet executed
+    pub budget: u64,
+    events: Sender<Event>,
+    pub error: Option<String>,
+}
+
+impl RunState {
+    /// Build a run from its spec: open the session (optionally from the
+    /// pretrained checkpoint), instantiate the task, build the optimizer,
+    /// and — when `resume_from` is set — restore parameters, optimizer
+    /// state and loop counters and fast-forward the batch stream.
+    pub fn open(rt: &Runtime, id: RunId, spec: RunSpec, events: Sender<Event>) -> Result<Self> {
+        anyhow::ensure!(
+            spec.checkpoint_every == 0 || spec.checkpoint_dir.is_some(),
+            "{}: checkpoint_every = {} but no checkpoint_dir (job- or file-level)",
+            spec.display_name(),
+            spec.checkpoint_every
+        );
+        let mut session = if spec.pretrained {
+            Session::open_pretrained(rt, &spec.model)?
+        } else {
+            Session::open(rt, &spec.model)?
+        };
+        let kind = TaskKind::from_name(&spec.task)
+            .ok_or_else(|| anyhow::anyhow!("unknown task '{}'", spec.task))?;
+        let mut task = kind.instantiate(session.model_config(), spec.run_seed)?;
+        if let Some(k) = spec.k_shot {
+            task = task.with_k_shot(k);
+        }
+        let mut optimizer = spec.optimizer.build(&session, spec.run_seed);
+        let mut batcher = Batcher::new(task, &session.entry.config, spec.run_seed);
+        let mut lp = TrainLoop::new(
+            optimizer.name(),
+            spec.model.clone(),
+            kind.name().to_string(),
+            spec.train_opts(),
+        );
+        if let Some(path) = &spec.resume_from {
+            let ck = Checkpoint::load(std::path::Path::new(path))
+                .with_context(|| format!("{}: loading resume checkpoint", spec.display_name()))?;
+            anyhow::ensure!(
+                ck.model == spec.model,
+                "resume checkpoint is for model '{}', spec says '{}'",
+                ck.model,
+                spec.model
+            );
+            anyhow::ensure!(
+                ck.task == spec.task,
+                "resume checkpoint is for task '{}', spec says '{}'",
+                ck.task,
+                spec.task
+            );
+            // a prefix run's trained state is only the prefix — resuming
+            // over a differently-built frozen base would silently diverge
+            anyhow::ensure!(
+                ck.pretrained == spec.pretrained,
+                "resume checkpoint was trained with pretrained = {}, spec says {}",
+                ck.pretrained,
+                spec.pretrained
+            );
+            // the seed drives the batch shuffle AND the perturbation
+            // streams; k_shot changes the train set — either mismatch
+            // would silently continue a different trajectory
+            anyhow::ensure!(
+                ck.run_seed == spec.run_seed,
+                "resume checkpoint was trained with run_seed {}, spec says {}",
+                ck.run_seed,
+                spec.run_seed
+            );
+            anyhow::ensure!(
+                ck.k_shot == spec.k_shot,
+                "resume checkpoint was trained with k_shot {:?}, spec says {:?}",
+                ck.k_shot,
+                spec.k_shot
+            );
+            anyhow::ensure!(
+                ck.optimizer_name == optimizer.name(),
+                "resume checkpoint was written by optimizer '{}', spec builds '{}'",
+                ck.optimizer_name,
+                optimizer.name()
+            );
+            anyhow::ensure!(
+                ck.trainable.len() == session.d_trainable(),
+                "resume checkpoint holds {} trainable f32s, model '{}' trains {}",
+                ck.trainable.len(),
+                spec.model,
+                session.d_trainable()
+            );
+            anyhow::ensure!(
+                ck.step <= spec.steps,
+                "resume checkpoint is at step {}, past the {}-step plan",
+                ck.step,
+                spec.steps
+            );
+            session.set_trainable(rt, ck.trainable)?;
+            optimizer.import_state(rt, ck.optimizer)?;
+            batcher.skip_batches(ck.step);
+            lp = lp.resume_at(ck.step, ck.forwards, ck.forward_equiv, ck.ema_loss);
+        }
+
+        let mut run = Self {
+            id,
+            spec,
+            session,
+            optimizer,
+            batcher,
+            lp,
+            phase: RunPhase::Idle,
+            budget: 0,
+            events,
+            error: None,
+        };
+        // Zero-step plans and resumes at the plan's end are already done:
+        // finalize now so the handle still gets its terminal event.
+        if run.lp.is_finished() {
+            run.finish(rt)?;
+        }
+        Ok(run)
+    }
+
+    /// Remaining steps in the plan.
+    fn remaining(&self) -> u64 {
+        self.spec.steps.saturating_sub(self.lp.next_step())
+    }
+
+    /// Credit more steps (clamped to the plan). Crediting a finished run
+    /// is a no-op (its remaining plan is zero — e.g. a job resumed from
+    /// its final checkpoint); crediting a failed run reports the failure.
+    pub fn credit(&mut self, steps: u64) -> Result<()> {
+        match self.phase {
+            RunPhase::Finished => Ok(()),
+            RunPhase::Failed => anyhow::bail!(
+                "{} failed: {}",
+                self.id,
+                self.error.as_deref().unwrap_or("unknown error")
+            ),
+            RunPhase::Idle | RunPhase::Running => {
+                self.budget = self.budget.saturating_add(steps).min(self.remaining());
+                if self.budget > 0 {
+                    self.phase = RunPhase::Running;
+                }
+                Ok(())
+            }
+        }
+    }
+
+    pub fn runnable(&self) -> bool {
+        self.phase == RunPhase::Running
+    }
+
+    /// One scheduler slice: execute one step, stream the records, handle
+    /// periodic checkpoints, and finalize/park the run as needed. Errors
+    /// are captured into the run (phase = `Failed`) — they never bubble
+    /// into the scheduler, so one failed run cannot take down the rest.
+    pub fn tick(&mut self, rt: &Runtime) {
+        if !self.runnable() {
+            return;
+        }
+        if let Err(e) = self.tick_inner(rt) {
+            self.fail(e);
+        }
+    }
+
+    fn tick_inner(&mut self, rt: &Runtime) -> Result<()> {
+        match self.lp.step_once(
+            rt,
+            &mut self.session,
+            self.optimizer.as_mut(),
+            &mut self.batcher,
+        )? {
+            StepOutcome::Stepped { record, eval } => {
+                self.budget = self.budget.saturating_sub(1);
+                let _ = self.events.send(Event::Step(record));
+                if let Some(ev) = eval {
+                    let _ = self.events.send(Event::Eval(ev));
+                }
+                if self.spec.checkpoint_every > 0
+                    && self.lp.next_step() % self.spec.checkpoint_every == 0
+                {
+                    let path = self.write_checkpoint()?;
+                    let _ = self.events.send(Event::Checkpoint {
+                        step: self.lp.next_step(),
+                        path,
+                    });
+                }
+            }
+            StepOutcome::Finished => {}
+        }
+        if self.lp.is_finished() {
+            self.finish(rt)?;
+        } else if self.budget == 0 {
+            self.phase = RunPhase::Idle;
+        }
+        Ok(())
+    }
+
+    /// Final eval + host sync, then the terminal `Finished` event.
+    fn finish(&mut self, rt: &Runtime) -> Result<()> {
+        if let Some(ev) = self.lp.finalize(rt, &mut self.session, &self.batcher)? {
+            let _ = self.events.send(Event::Eval(ev));
+        }
+        self.phase = RunPhase::Finished;
+        self.budget = 0;
+        let _ = self.events.send(Event::Finished(self.lp.history().clone()));
+        Ok(())
+    }
+
+    /// `Stop` request: finalize wherever the run is (idempotent).
+    pub fn stop(&mut self, rt: &Runtime) -> Result<()> {
+        match self.phase {
+            RunPhase::Finished | RunPhase::Failed => Ok(()),
+            RunPhase::Idle | RunPhase::Running => {
+                if self.lp.next_step() < self.spec.steps {
+                    self.lp.mark_stopped_early();
+                }
+                self.finish(rt)
+            }
+        }
+    }
+
+    /// On-demand evaluation against the current (device-resident) params.
+    pub fn eval(&self, rt: &Runtime) -> Result<EvalRecord> {
+        let out = evaluate(rt, &self.session, &self.batcher, self.spec.eval_batches.max(1))?;
+        Ok(EvalRecord {
+            step: self.lp.next_step(),
+            accuracy: out.accuracy,
+            f1: out.f1,
+            loss: out.loss,
+        })
+    }
+
+    /// Write a checkpoint to the spec's checkpoint dir; returns the path.
+    pub fn write_checkpoint(&mut self) -> Result<String> {
+        let dir = self
+            .spec
+            .checkpoint_dir
+            .clone()
+            .ok_or_else(|| anyhow::anyhow!("{}: no checkpoint_dir in spec", self.id))?;
+        let ck = Checkpoint::capture(
+            &mut self.session,
+            self.optimizer.as_ref(),
+            &self.lp,
+            &self.spec,
+        )?;
+        let path = ck.write(std::path::Path::new(&dir), &self.spec.display_name())?;
+        Ok(path.to_string_lossy().into_owned())
+    }
+
+    fn fail(&mut self, e: anyhow::Error) {
+        let msg = format!("{e:#}");
+        self.phase = RunPhase::Failed;
+        self.budget = 0;
+        self.error = Some(msg.clone());
+        let _ = self.events.send(Event::Failed(msg));
+    }
+
+    pub fn status(&self) -> RunStatus {
+        RunStatus {
+            id: self.id,
+            name: self.spec.display_name(),
+            model: self.spec.model.clone(),
+            task: self.spec.task.clone(),
+            phase: self.phase,
+            steps_run: self.lp.history().steps_run,
+            steps_total: self.spec.steps,
+            budget: self.budget,
+            last_loss: self.lp.history().records.last().map(|r| r.loss),
+            error: self.error.clone(),
+        }
+    }
+}

@@ -1,0 +1,243 @@
+//! Serve-subsystem tests on the tiny artifacts: scheduler determinism
+//! (multiplexed == sequential, bit-for-bit), checkpoint/resume exactness,
+//! shutdown-while-training, and error isolation between runs.
+//!
+//! Requires `make artifacts` (the tiny-* models) to have run.
+
+use std::path::PathBuf;
+
+use fzoo::coordinator::{TrainOpts, Trainer};
+use fzoo::data::TaskKind;
+use fzoo::optim::{FzooModeCfg, Objective, OptimizerKind};
+use fzoo::runtime::{Runtime, Session};
+use fzoo::serve::{Event, RunManager, RunPhase, RunSpec};
+
+fn artifacts() -> PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn spec(model: &str, task: &str, kind: OptimizerKind, steps: u64, seed: u64) -> RunSpec {
+    RunSpec::new(model, task, kind, steps).seed(seed)
+}
+
+/// Reference: the same run executed alone through the classic Trainer.
+fn sequential(model: &str, task: TaskKind, kind: OptimizerKind, steps: u64, seed: u64)
+    -> fzoo::coordinator::History {
+    let rt = Runtime::load(artifacts()).expect("run `make artifacts` before cargo test");
+    let mut session = Session::open(&rt, model).unwrap();
+    let t = task.instantiate(session.model_config(), seed).unwrap();
+    let opts = TrainOpts {
+        steps,
+        eval_every: 0,
+        eval_batches: 0,
+        run_seed: seed,
+        ..Default::default()
+    };
+    let mut tr = Trainer::with_opts(&rt, &mut session, t, kind, opts);
+    tr.train(steps).unwrap()
+}
+
+#[test]
+fn multiplexed_runs_match_sequential_bit_for_bit() {
+    // Two different (model, task, optimizer, seed) runs interleaved at
+    // step granularity must produce the exact loss series each produces
+    // alone — per-run state is fully isolated, so the scheduler cannot
+    // perturb the math.
+    let mgr = RunManager::start(artifacts()).unwrap();
+    let c = mgr.client();
+    let a = c
+        .submit(spec("tiny-enc", "sst2", OptimizerKind::fzoo(2e-3, 1e-3), 12, 1))
+        .unwrap();
+    let b = c
+        .submit(spec("tiny-dec", "boolq", OptimizerKind::mezo(1e-4, 1e-3), 12, 2))
+        .unwrap();
+    c.train_steps(a.id, 12).unwrap();
+    c.train_steps(b.id, 12).unwrap();
+    let ha = a.wait().unwrap();
+    let hb = b.wait().unwrap();
+
+    let sa = sequential("tiny-enc", TaskKind::Sst2, OptimizerKind::fzoo(2e-3, 1e-3), 12, 1);
+    let sb = sequential("tiny-dec", TaskKind::BoolQ, OptimizerKind::mezo(1e-4, 1e-3), 12, 2);
+
+    assert_eq!(ha.steps_run, 12);
+    assert_eq!(hb.steps_run, 12);
+    for (m, s) in [(&ha, &sa), (&hb, &sb)] {
+        assert_eq!(m.records.len(), s.records.len());
+        for (x, y) in m.records.iter().zip(&s.records) {
+            assert_eq!(
+                x.loss.to_bits(),
+                y.loss.to_bits(),
+                "step {}: multiplexed {} vs sequential {}",
+                x.step,
+                x.loss,
+                y.loss
+            );
+            assert_eq!(x.forwards, y.forwards);
+        }
+    }
+
+    // on-demand eval works on a finished run's device-resident params;
+    // remove releases them and the run stops being addressable
+    let ev = c.eval(a.id).unwrap();
+    assert!((0.0..=1.0).contains(&ev.accuracy));
+    c.remove(a.id).unwrap();
+    assert!(c.eval(a.id).is_err());
+    mgr.shutdown().unwrap();
+}
+
+#[test]
+fn checkpoint_resume_is_bit_exact() {
+    // ZO-Adam carries device-resident moments + a step counter; a resumed
+    // run restores all of it and must continue bit-identically to the
+    // unbroken run.
+    let kind = OptimizerKind::by_name("zo-adam", 1e-4, 1e-3).unwrap();
+    let dir = std::env::temp_dir().join(format!("fzoo-serve-ckpt-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let mgr = RunManager::start(artifacts()).unwrap();
+    let c = mgr.client();
+    let mut full = spec("tiny-enc", "sst2", kind.clone(), 8, 3);
+    full.name = "full".into();
+    full.checkpoint_every = 4;
+    full.checkpoint_dir = Some(dir.to_string_lossy().into_owned());
+    let h = c.submit(full).unwrap();
+    c.train_steps(h.id, 8).unwrap();
+
+    let mut ckpt_path = None;
+    let mut steps = Vec::new();
+    let unbroken = loop {
+        match h.next_event() {
+            Some(Event::Step(r)) => steps.push(r),
+            Some(Event::Checkpoint { step: 4, path }) => ckpt_path = Some(path),
+            Some(Event::Checkpoint { .. }) => {}
+            Some(Event::Finished(hist)) => break hist,
+            other => panic!("unexpected event {other:?}"),
+        }
+    };
+    assert_eq!(unbroken.steps_run, 8);
+    assert_eq!(steps.len(), 8);
+    let ckpt_path = ckpt_path.expect("checkpoint event at step 4");
+
+    // resume from step 4 into a fresh run record (fresh session + fresh
+    // optimizer, rebuilt from the checkpoint on the same worker)
+    let mut resumed = spec("tiny-enc", "sst2", kind, 8, 3);
+    resumed.name = "resumed".into();
+    resumed.resume_from = Some(ckpt_path);
+    let h2 = c.submit(resumed).unwrap();
+    c.train_steps(h2.id, 8).unwrap(); // clamped to the 4 remaining
+    let hist2 = h2.wait().unwrap();
+
+    assert_eq!(hist2.records.len(), 4);
+    for (r, full_r) in hist2.records.iter().zip(&unbroken.records[4..]) {
+        assert_eq!(r.step, full_r.step);
+        assert_eq!(
+            r.loss.to_bits(),
+            full_r.loss.to_bits(),
+            "step {}: resumed {} vs unbroken {}",
+            r.step,
+            r.loss,
+            full_r.loss
+        );
+        assert_eq!(r.forwards, full_r.forwards, "forward accounting continues");
+    }
+    mgr.shutdown().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn shutdown_while_training_is_clean() {
+    let mgr = RunManager::start(artifacts()).unwrap();
+    let c = mgr.client();
+    let h = c
+        .submit(spec("tiny-enc", "sst2", OptimizerKind::fzoo(1e-3, 1e-3), 100_000, 0))
+        .unwrap();
+    c.train_steps(h.id, 100_000).unwrap();
+    // take a few live steps, then pull the plug mid-training
+    for _ in 0..3 {
+        assert!(matches!(h.next_event(), Some(Event::Step(_))));
+    }
+    mgr.shutdown().unwrap();
+    // the stream ends (possibly after a few already-queued steps) without
+    // a Finished/Failed terminal — the run never completed
+    loop {
+        match h.next_event() {
+            None => break,
+            Some(Event::Step(_)) => continue,
+            Some(other) => panic!("unexpected terminal event after shutdown: {other:?}"),
+        }
+    }
+    // the worker is gone: requests fail instead of hanging
+    assert!(c.status().is_err());
+}
+
+#[test]
+fn failed_run_is_isolated_and_reported() {
+    let mgr = RunManager::start(artifacts()).unwrap();
+    let c = mgr.client();
+
+    // submit-time failures are rejected synchronously: unknown model, and
+    // a checkpoint cadence with nowhere to write
+    assert!(c
+        .submit(spec("no-such-model", "sst2", OptimizerKind::fzoo(1e-3, 1e-3), 4, 0))
+        .is_err());
+    let mut no_dir = spec("tiny-enc", "sst2", OptimizerKind::fzoo(1e-3, 1e-3), 4, 0);
+    no_dir.checkpoint_every = 2;
+    assert!(c.submit(no_dir).is_err());
+
+    // step-time failure: FZOO with an N override whose ablation graph was
+    // never built errors on the first step — after submit succeeded
+    let bad_kind = OptimizerKind::Fzoo {
+        eta: 1e-3,
+        eps: 1e-3,
+        mode: FzooModeCfg::Parallel,
+        n: Some(3),
+        objective: Objective::Ce,
+    };
+    let bad = c.submit(spec("tiny-enc", "sst2", bad_kind, 6, 0)).unwrap();
+    let good = c
+        .submit(spec("tiny-enc", "sst2", OptimizerKind::fzoo(1e-3, 1e-3), 6, 0))
+        .unwrap();
+    c.train_steps(bad.id, 6).unwrap();
+    c.train_steps(good.id, 6).unwrap();
+
+    // the failure propagates to the bad run's handle...
+    let err = bad.wait().unwrap_err().to_string();
+    assert!(err.contains("failed"), "unexpected error: {err}");
+    // ...while the good run is untouched by its neighbour's death
+    let hg = good.wait().unwrap();
+    assert_eq!(hg.steps_run, 6);
+    assert!(hg.last_loss().is_finite());
+
+    // status reflects both outcomes; further credit to the dead run errors
+    let st = c.status().unwrap();
+    let b = st.iter().find(|s| s.id == bad.id).unwrap();
+    let g = st.iter().find(|s| s.id == good.id).unwrap();
+    assert_eq!(b.phase, RunPhase::Failed);
+    assert!(b.error.is_some());
+    assert_eq!(g.phase, RunPhase::Finished);
+    assert_eq!(g.steps_run, 6);
+    assert!(c.train_steps(bad.id, 1).is_err());
+    mgr.shutdown().unwrap();
+}
+
+#[test]
+fn stop_finalizes_partial_run() {
+    let mgr = RunManager::start(artifacts()).unwrap();
+    let c = mgr.client();
+    let h = c
+        .submit(spec("tiny-enc", "sst2", OptimizerKind::fzoo(1e-3, 1e-3), 50, 0))
+        .unwrap();
+    c.train_steps(h.id, 5).unwrap(); // budget below the plan: runs 5, parks
+    let mut seen = 0;
+    while seen < 5 {
+        if let Some(Event::Step(_)) = h.next_event() {
+            seen += 1;
+        }
+    }
+    // parked at 5/50 — stop finalizes it where it stands
+    c.stop(h.id).unwrap();
+    let hist = h.wait().unwrap();
+    assert_eq!(hist.steps_run, 5);
+    assert!(hist.stopped_early);
+    mgr.shutdown().unwrap();
+}
