@@ -1,6 +1,6 @@
 PY ?= python3
 
-.PHONY: artifacts check ci pytest
+.PHONY: artifacts check chaos ci pytest
 
 # AOT-compile the model graphs + manifest (python/compile/aot.py).
 # Incremental; use FORCE=1 to rebuild everything.
@@ -15,6 +15,14 @@ check:
 # then the full check gate. Runnable locally for parity with CI.
 ci: artifacts
 	./scripts/check.sh
+
+# Randomized fault-plan sweep: the (ignored-by-default) chaos test runs
+# a supervised serve job twice under a probabilistic fault plan and
+# asserts the two transcripts are identical. A fresh random seed each
+# invocation; set FZOO_CHAOS_SEED=N to replay a specific plan.
+chaos:
+	FZOO_CHAOS_SEED=$${FZOO_CHAOS_SEED:-$$(od -An -N4 -tu4 /dev/urandom | tr -d ' ')} \
+		cargo test --test recovery -- --ignored --nocapture chaos
 
 # Build-time (Python) test suite.
 pytest:

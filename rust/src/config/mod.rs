@@ -37,6 +37,8 @@ pub struct TrainConfig {
     pub k_shot: Option<usize>,
     pub target_loss: Option<f32>,
     pub schedule: LrSchedule,
+    /// Divergence-guard threshold (see `TrainOpts::diverge_ema_factor`).
+    pub diverge_ema_factor: Option<f64>,
     /// JSONL metrics output path
     pub log_path: Option<String>,
 }
@@ -74,6 +76,10 @@ impl TrainConfig {
                 None => LrSchedule::Constant,
                 Some(s) => parse_schedule(s.as_str()?)?,
             },
+            diverge_ema_factor: v
+                .get("diverge_ema_factor")
+                .map(|x| x.as_f64())
+                .transpose()?,
             log_path: opt_str(&v, "log_path")?,
         })
     }
@@ -86,6 +92,7 @@ impl TrainConfig {
             target_loss: self.target_loss,
             schedule: self.schedule,
             run_seed: self.run_seed,
+            diverge_ema_factor: self.diverge_ema_factor,
             verbose: true,
         }
     }
@@ -112,7 +119,10 @@ impl TrainConfig {
 ///
 /// File-level `checkpoint_dir` is the default for jobs that don't set
 /// their own; `log_dir` gives every job without an explicit `log` a
-/// `<log_dir>/<name>.jsonl` metrics file.
+/// `<log_dir>/<name>.jsonl` metrics file. The recovery/retention keys
+/// `max_restarts`, `restart_backoff`, `keep_last` and
+/// `diverge_ema_factor` may likewise be set at file level as defaults for
+/// jobs that omit them (see the README's "Failure semantics" section).
 #[derive(Debug, Clone)]
 pub struct JobFile {
     pub artifacts: String,
@@ -131,6 +141,16 @@ impl JobFile {
         let v = json::parse(text)?;
         let ckpt_dir = opt_str(&v, "checkpoint_dir")?;
         let log_dir = opt_str(&v, "log_dir")?;
+        // File-level recovery/retention defaults. A job-level key — even
+        // an explicit 0 — always wins, so absence is tested on the raw
+        // JSON, not on the parsed spec.
+        let max_restarts = v.get("max_restarts").map(|x| x.as_u64()).transpose()?;
+        let restart_backoff = v.get("restart_backoff").map(|x| x.as_u64()).transpose()?;
+        let keep_last = v.get("keep_last").map(|x| x.as_usize()).transpose()?;
+        let diverge_ema_factor = v
+            .get("diverge_ema_factor")
+            .map(|x| x.as_f64())
+            .transpose()?;
         let mut jobs = Vec::new();
         for (i, j) in v.req("jobs")?.as_arr()?.iter().enumerate() {
             let mut spec = crate::serve::RunSpec::from_json(j)
@@ -142,6 +162,18 @@ impl JobFile {
                 if let Some(dir) = &log_dir {
                     spec.log_path = Some(format!("{dir}/{}.jsonl", spec.display_name()));
                 }
+            }
+            if j.get("max_restarts").is_none() {
+                spec.max_restarts = max_restarts.unwrap_or(0);
+            }
+            if j.get("restart_backoff").is_none() {
+                spec.restart_backoff = restart_backoff.unwrap_or(0);
+            }
+            if j.get("keep_last").is_none() {
+                spec.keep_last = keep_last.unwrap_or(0);
+            }
+            if j.get("diverge_ema_factor").is_none() {
+                spec.diverge_ema_factor = diverge_ema_factor;
             }
             jobs.push(spec);
         }
@@ -256,13 +288,16 @@ mod tests {
     fn job_file_defaults_propagate() {
         let f = JobFile::from_json_str(
             r#"{"artifacts":"arts","checkpoint_dir":"ck","log_dir":"runs",
+                "max_restarts":2,"restart_backoff":3,"keep_last":5,
+                "diverge_ema_factor":8.0,
                 "jobs":[
                   {"name":"a","model":"tiny-enc","task":"sst2",
                    "optimizer":{"kind":"fzoo","lr":1e-3,"eps":1e-3},
                    "steps":10},
                   {"model":"tiny-dec","task":"boolq","run_seed":3,
                    "optimizer":{"kind":"mezo","lr":1e-4,"eps":1e-3},
-                   "steps":10,"checkpoint_dir":"other","log":"x.jsonl"}
+                   "steps":10,"checkpoint_dir":"other","log":"x.jsonl",
+                   "max_restarts":0,"keep_last":1}
                 ]}"#,
         )
         .unwrap();
@@ -273,6 +308,15 @@ mod tests {
         assert_eq!(f.jobs[1].checkpoint_dir.as_deref(), Some("other"));
         assert_eq!(f.jobs[1].log_path.as_deref(), Some("x.jsonl"));
         assert_eq!(f.jobs[1].display_name(), "tiny-dec-boolq-s3");
+        // file-level recovery defaults fill the first job...
+        assert_eq!(f.jobs[0].max_restarts, 2);
+        assert_eq!(f.jobs[0].restart_backoff, 3);
+        assert_eq!(f.jobs[0].keep_last, 5);
+        assert_eq!(f.jobs[0].diverge_ema_factor, Some(8.0));
+        // ...but a job-level key wins, including an explicit 0
+        assert_eq!(f.jobs[1].max_restarts, 0);
+        assert_eq!(f.jobs[1].restart_backoff, 3);
+        assert_eq!(f.jobs[1].keep_last, 1);
     }
 
     #[test]

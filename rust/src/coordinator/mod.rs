@@ -12,4 +12,7 @@ pub mod trainer;
 pub use metrics::{evaluate, EvalOut, RunLogger};
 pub use pretrain::{ensure_pretrained, pretrained_path};
 pub use schedule::LrSchedule;
-pub use trainer::{EvalRecord, History, StepOutcome, StepRecord, TrainLoop, TrainOpts, Trainer};
+pub use trainer::{
+    classify_error, DivergedError, EvalRecord, FailureClass, History, StepOutcome, StepRecord,
+    TrainLoop, TrainOpts, Trainer,
+};

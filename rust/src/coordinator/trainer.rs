@@ -21,7 +21,8 @@ use anyhow::Result;
 
 use crate::data::{Batcher, Task};
 use crate::optim::{Optimizer, OptimizerKind};
-use crate::runtime::{Runtime, Session};
+use crate::runtime::fault::{InjectedFault, Transient};
+use crate::runtime::{FaultSite, Runtime, Session};
 use crate::util::json::Value;
 
 use super::metrics::{evaluate, EvalOut};
@@ -36,6 +37,10 @@ pub struct TrainOpts {
     pub target_loss: Option<f32>,
     pub schedule: LrSchedule,
     pub run_seed: u64,
+    /// Divergence guard: error with [`DivergedError`] when the loss EMA
+    /// exceeds `factor ×` its best (lowest) value so far. `None` disables
+    /// the explosion check; a non-finite loss always trips the guard.
+    pub diverge_ema_factor: Option<f64>,
     /// print progress lines
     pub verbose: bool,
 }
@@ -49,8 +54,78 @@ impl Default for TrainOpts {
             target_loss: None,
             schedule: LrSchedule::Constant,
             run_seed: 0,
+            diverge_ema_factor: None,
             verbose: false,
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// failure taxonomy
+// ---------------------------------------------------------------------------
+
+/// Coarse classification of a training failure, driving the serve
+/// supervisor's retry policy: `Transient` and `Diverged` are worth a
+/// checkpoint rollback; `Fatal` would fail identically on replay.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailureClass {
+    /// Environment fault — a PJRT execute/transfer failure (or an injected
+    /// stand-in for one). The math is fine; retry from the last checkpoint.
+    Transient,
+    /// The optimization itself went bad: non-finite loss or EMA-loss
+    /// explosion (FZOO's σ-adaptive step sizes make loss spikes a real,
+    /// recoverable event). Retryable, though a deterministic divergence
+    /// will recur until `max_restarts` is exhausted.
+    Diverged,
+    /// Logic or configuration error (bad binding, missing executable…) —
+    /// retrying cannot help; the run fails immediately.
+    Fatal,
+}
+
+impl FailureClass {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FailureClass::Transient => "transient",
+            FailureClass::Diverged => "diverged",
+            FailureClass::Fatal => "fatal",
+        }
+    }
+}
+
+impl std::fmt::Display for FailureClass {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// The divergence guard's error: carried in the `anyhow` chain so
+/// [`classify_error`] can recognize it through added context.
+#[derive(Debug, Clone)]
+pub struct DivergedError {
+    pub step: u64,
+    pub loss: f64,
+    pub detail: String,
+}
+
+impl std::fmt::Display for DivergedError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "diverged at step {}: {} (loss {})", self.step, self.detail, self.loss)
+    }
+}
+
+impl std::error::Error for DivergedError {}
+
+/// Classify an error from [`TrainLoop::step_once`] (or any runtime call)
+/// by downcasting its chain; anything unrecognized is `Fatal`.
+pub fn classify_error(e: &anyhow::Error) -> FailureClass {
+    if e.downcast_ref::<DivergedError>().is_some() {
+        FailureClass::Diverged
+    } else if e.downcast_ref::<InjectedFault>().is_some()
+        || e.downcast_ref::<Transient>().is_some()
+    {
+        FailureClass::Transient
+    } else {
+        FailureClass::Fatal
     }
 }
 
@@ -192,6 +267,11 @@ pub struct TrainLoop {
     forwards: f64,
     forward_equiv: f64,
     ema_loss: Option<f64>,
+    /// Lowest EMA seen — the divergence guard's baseline. Not
+    /// checkpointed: a resumed loop re-seeds it from the restored EMA, so
+    /// the guard watches explosion *since resume* (deliberately — the
+    /// whole point of rollback is a fresh chance).
+    best_ema: Option<f64>,
     next_step: u64,
     finished: bool,
 }
@@ -216,6 +296,7 @@ impl TrainLoop {
             forwards: 0.0,
             forward_equiv: 0.0,
             ema_loss: None,
+            best_ema: None,
             next_step: 0,
             finished,
             opts,
@@ -236,6 +317,7 @@ impl TrainLoop {
         self.forwards = forwards;
         self.forward_equiv = forward_equiv;
         self.ema_loss = ema_loss;
+        self.best_ema = ema_loss;
         self.history.steps_run = step;
         self.finished = step >= self.opts.steps;
         // A checkpoint written at the early-stop step must not resume past
@@ -305,7 +387,27 @@ impl TrainLoop {
         optimizer.set_lr_scale(scale);
         let batch = batcher.next_train();
         let t0 = Instant::now();
-        let out = optimizer.step(rt, session, &batch, step)?;
+        // Bracket the step with its index so fault rules get
+        // training-step precision (`at_step`); scope_step is a no-op
+        // without an installed plan.
+        rt.faults().scope_step(Some(step));
+        let res = optimizer.step(rt, session, &batch, step);
+        let forced_nan = rt.faults().fire(FaultSite::NonFiniteLoss).is_some();
+        rt.faults().scope_step(None);
+        let mut out = res.map_err(|e| e.context(format!("train step {step}")))?;
+        if forced_nan {
+            out.loss = f32::NAN;
+        }
+        // Divergence guard, part 1: a non-finite loss poisons everything
+        // downstream (EMA, σ-adaptive step sizes) — error out *before*
+        // recording the step or advancing any counter.
+        if !out.loss.is_finite() {
+            return Err(anyhow::Error::new(DivergedError {
+                step,
+                loss: out.loss as f64,
+                detail: "non-finite loss".into(),
+            }));
+        }
         let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
         self.forwards += out.forwards;
         self.forward_equiv += out.forward_equiv;
@@ -318,12 +420,30 @@ impl TrainLoop {
             wall_ms,
         };
         self.history.records.push(record);
-        self.ema_loss = Some(match self.ema_loss {
+        let ema = match self.ema_loss {
             None => out.loss as f64,
             Some(p) => 0.9 * p + 0.1 * out.loss as f64,
-        });
+        };
+        self.ema_loss = Some(ema);
         self.history.steps_run = step + 1;
         self.next_step = step + 1;
+        // Divergence guard, part 2: EMA explosion relative to the best
+        // (lowest) EMA seen. The step itself is already recorded — the
+        // *trend* is what diverged, not this step's arithmetic.
+        match self.best_ema {
+            Some(best) if ema >= best => {
+                if let Some(factor) = self.opts.diverge_ema_factor {
+                    if best > 0.0 && ema > factor * best {
+                        return Err(anyhow::Error::new(DivergedError {
+                            step,
+                            loss: ema,
+                            detail: format!("loss EMA {ema:.4} above {factor}× best {best:.4}"),
+                        }));
+                    }
+                }
+            }
+            _ => self.best_ema = Some(ema),
+        }
 
         let mut eval = None;
         if self.opts.eval_every > 0 && (step + 1) % self.opts.eval_every == 0 {

@@ -16,7 +16,7 @@ use fzoo::coordinator::{evaluate, RunLogger, Trainer};
 use fzoo::data::{Batcher, TaskKind};
 use fzoo::memmodel;
 use fzoo::optim::OptimizerKind;
-use fzoo::runtime::{Runtime, Session};
+use fzoo::runtime::{FaultPlan, Runtime, Session};
 use fzoo::serve::{Event, RunManager};
 use fzoo::util::args::Args;
 
@@ -31,11 +31,12 @@ USAGE:
              [--lr F] [--eps F] [--steps N] [--eval-every N] [--k-shot K]
              [--seed S] [--schedule constant|linear:E|cosine:M|warmup:N]
              [--log out.jsonl]
-  fzoo serve --jobs jobs.json [--artifacts DIR]
+  fzoo serve --jobs jobs.json [--artifacts DIR] [--fault-plan plan.json]
              # drive every job in the file concurrently over one runtime
              # (round-robin step multiplexing); per-run JSONL logs, periodic
              # checkpoints (checkpoint_every/resume_from) and a summary
-             # table. See README for the job-file schema.
+             # table. --fault-plan installs a deterministic fault-injection
+             # plan (chaos testing). See README for both schemas.
   fzoo eval  [--artifacts DIR] --model M --task T [--eval-batches N]
   fzoo info  [--artifacts DIR]
   fzoo mem
@@ -163,7 +164,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .to_string();
     let file = JobFile::from_file(&jobs_path)?;
     let artifacts = args.get_or("artifacts", &file.artifacts);
-    let mgr = RunManager::start(artifacts.as_str())?;
+    let faults = match args.get("fault-plan") {
+        Some(p) => {
+            let plan = FaultPlan::from_file(p)?;
+            println!("fault plan: {} rule(s), seed {} ({p})", plan.rules.len(), plan.seed);
+            Some(plan)
+        }
+        None => None,
+    };
+    let mgr = RunManager::start_with_faults(artifacts.as_str(), faults)?;
     let client = mgr.client();
     println!("serve: {} jobs from {jobs_path}", file.jobs.len());
 
@@ -219,6 +228,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
                         Some(Event::Eval(e)) => write(&mut logger, &e.to_json()),
                         Some(Event::Checkpoint { step, path }) => {
                             eprintln!("[{name}] checkpoint @ step {step} -> {path}");
+                            None
+                        }
+                        Some(Event::Recovered { step, from_checkpoint, cause }) => {
+                            eprintln!(
+                                "[{name}] recovered @ step {step} (from {}) after: {cause}",
+                                from_checkpoint.as_deref().unwrap_or("scratch"),
+                            );
                             None
                         }
                         Some(Event::Finished(h)) => {

@@ -17,9 +17,12 @@
 //! (tuple roots everywhere) still work: `run_device()` transparently falls
 //! back to a fetch/untuple/re-upload round trip.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 use xla::Literal;
 
+use super::fault::{FaultSite, FaultState, Transient};
 use super::manifest::{ExeSpec, IoSpec};
 use super::{lit_f32, to_vec_f32};
 
@@ -34,11 +37,12 @@ use super::{lit_f32, to_vec_f32};
 pub struct DeviceVec {
     buf: xla::PjRtBuffer,
     len: usize,
+    faults: Arc<FaultState>,
 }
 
 impl DeviceVec {
-    pub(crate) fn from_buffer(buf: xla::PjRtBuffer, len: usize) -> Self {
-        Self { buf, len }
+    pub(crate) fn from_buffer(buf: xla::PjRtBuffer, len: usize, faults: Arc<FaultState>) -> Self {
+        Self { buf, len, faults }
     }
 
     /// Element count (f32s).
@@ -53,10 +57,14 @@ impl DeviceVec {
     /// Copy device -> host. This is the *only* way device-resident data
     /// reaches the host — an explicit sync point, never implicit.
     pub fn to_host(&self) -> Result<Vec<f32>> {
-        let lit = self
-            .buf
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("device -> host copy ({} f32s): {e}", self.len))?;
+        if let Some(f) = self.faults.fire(FaultSite::ToHost) {
+            return Err(anyhow::Error::new(f)
+                .context(format!("device -> host copy ({} f32s)", self.len)));
+        }
+        let lit = self.buf.to_literal_sync().map_err(|e| {
+            anyhow::Error::new(Transient)
+                .context(format!("device -> host copy ({} f32s): {e}", self.len))
+        })?;
         to_vec_f32(&lit)
     }
 
@@ -85,6 +93,9 @@ pub struct Executable {
     /// more than one output). Array-rooted graphs can return device
     /// buffers with no host sync.
     pub(crate) tuple_root: bool,
+    /// Shared fault hook from the owning `Runtime` — cached executables
+    /// outlive plan installation, so they carry the `Arc`, not a snapshot.
+    pub(crate) faults: Arc<FaultState>,
 }
 
 impl Executable {
@@ -282,10 +293,15 @@ impl<'a> Call<'a> {
                 _ => st.as_ref().unwrap(),
             })
             .collect();
-        let bufs = exe
-            .exe
-            .execute_b::<&xla::PjRtBuffer>(&args)
-            .map_err(|e| anyhow::anyhow!("executing {}: {e}", exe.name))?;
+        if let Some(f) = exe.faults.fire(FaultSite::Execute) {
+            return Err(anyhow::Error::new(f).context(format!("executing {}", exe.name)));
+        }
+        let bufs = exe.exe.execute_b::<&xla::PjRtBuffer>(&args).map_err(|e| {
+            // A PJRT execute failure with validated shapes is an
+            // environment fault (allocation, runtime), not a logic error:
+            // mark it retryable for the serve supervisor.
+            anyhow::Error::new(Transient).context(format!("executing {}: {e}", exe.name))
+        })?;
         anyhow::ensure!(
             !bufs.is_empty() && !bufs[0].is_empty(),
             "{}: execution returned no output buffers",
@@ -358,14 +374,14 @@ impl<'a> Call<'a> {
                 outs.len()
             );
             let buf = exe.stage(&outs.remove(0), "output")?;
-            Ok(DeviceVec::from_buffer(buf, out_spec.elems()))
+            Ok(DeviceVec::from_buffer(buf, out_spec.elems(), exe.faults.clone()))
         } else {
             let buf = bufs
                 .into_iter()
                 .next()
                 .and_then(|replica| replica.into_iter().next())
                 .expect("non-empty checked in execute");
-            Ok(DeviceVec::from_buffer(buf, out_spec.elems()))
+            Ok(DeviceVec::from_buffer(buf, out_spec.elems(), exe.faults.clone()))
         }
     }
 }

@@ -1,0 +1,484 @@
+//! Deterministic fault injection: a seeded, plain-data [`FaultPlan`] that
+//! makes every failure path in the runtime/serve stack *testable*.
+//!
+//! Production failures — a PJRT execute error, a device→host transfer
+//! failure, a half-written checkpoint, a non-finite loss — are rare and
+//! timing-dependent, so the recovery machinery around them would otherwise
+//! ship untested. A `FaultPlan` names the sites where those failures can
+//! occur ([`FaultSite`]) and injects them deterministically:
+//!
+//! * **Zero-cost when unconfigured** — the runtime carries an
+//!   `Option<FaultInjector>`; with no plan installed every check is a
+//!   mutex lock + `None` test, and no behavior changes anywhere.
+//! * **Deterministic when seeded** — a rule either pins an exact spot
+//!   (`at_step`, `after`) or fires probabilistically from a counter-based
+//!   hash of `(plan seed, rule, occurrence)`. The same plan + seed over
+//!   the same execution schedule injects the same faults, so a faulted
+//!   serve run is exactly reproducible (the `make chaos` sweep relies on
+//!   this).
+//!
+//! Injected faults surface as [`InjectedFault`] inside the `anyhow` error
+//! chain; real runtime failures at the same sites are tagged with the
+//! [`Transient`] marker. `coordinator::classify_error` downcasts both to
+//! drive the serve supervisor's rollback/retry policy.
+//!
+//! JSON form (see README "Failure semantics"):
+//!
+//! ```json
+//! {"seed": 7, "rules": [
+//!   {"site": "execute", "run": "a", "at_step": 30},
+//!   {"site": "to_host", "p": 0.01, "max": 2, "after": 10},
+//!   {"site": "nonfinite_loss", "at_step": 5}
+//! ]}
+//! ```
+
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Value};
+use crate::zorng::SplitMix64;
+
+/// A named place where a fault can be injected.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultSite {
+    /// `Executable` execution (one occurrence per PJRT execute call).
+    Execute,
+    /// `DeviceVec::to_host` device→host transfer.
+    ToHost,
+    /// Checkpoint write (one occurrence per attempted write).
+    CheckpointWrite,
+    /// Force the step's training loss to NaN (one occurrence per step) —
+    /// exercises the divergence guard without touching optimizer state.
+    NonFiniteLoss,
+}
+
+impl FaultSite {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultSite::Execute => "execute",
+            FaultSite::ToHost => "to_host",
+            FaultSite::CheckpointWrite => "checkpoint_write",
+            FaultSite::NonFiniteLoss => "nonfinite_loss",
+        }
+    }
+
+    fn from_name(s: &str) -> Option<Self> {
+        Some(match s {
+            "execute" => FaultSite::Execute,
+            "to_host" => FaultSite::ToHost,
+            "checkpoint_write" => FaultSite::CheckpointWrite,
+            "nonfinite_loss" => FaultSite::NonFiniteLoss,
+            _ => return None,
+        })
+    }
+
+    fn index(&self) -> usize {
+        *self as usize
+    }
+}
+
+const SITE_COUNT: usize = 4;
+
+/// One injection rule. A rule *matches* an occurrence when the site, the
+/// run scope and the step scope all agree; it *fires* when additionally
+/// the `after` skip is exhausted, the `max` cap is not, and the seeded
+/// roll passes `p`.
+#[derive(Debug, Clone)]
+pub struct FaultRule {
+    pub site: FaultSite,
+    /// Fire only while the scoped per-run step index equals this
+    /// (training-step precision regardless of how many executes a step
+    /// issues). `None` = any step, including outside any step scope.
+    pub at_step: Option<u64>,
+    /// Fire only for this serve run (display name). `None` = any run.
+    pub run: Option<String>,
+    /// Probability per matching occurrence; 1.0 = always (the default).
+    pub p: f64,
+    /// Skip the first `after` matching occurrences.
+    pub after: u64,
+    /// Stop after `max` injected faults; 0 = no cap. Default 1.
+    pub max: u64,
+}
+
+impl FaultRule {
+    pub fn at(site: FaultSite, step: u64) -> Self {
+        Self {
+            site,
+            at_step: Some(step),
+            run: None,
+            p: 1.0,
+            after: 0,
+            max: 1,
+        }
+    }
+
+    fn from_json(v: &Value) -> Result<Self> {
+        let site_name = v.req("site")?.as_str()?;
+        let site = FaultSite::from_name(site_name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown fault site '{site_name}' \
+                 (have: execute, to_host, checkpoint_write, nonfinite_loss)"
+            )
+        })?;
+        let p = v.get("p").map(|x| x.as_f64()).transpose()?.unwrap_or(1.0);
+        anyhow::ensure!((0.0..=1.0).contains(&p), "fault rule p = {p} outside [0, 1]");
+        Ok(Self {
+            site,
+            at_step: v.get("at_step").map(|x| x.as_u64()).transpose()?,
+            run: match v.get("run") {
+                Some(Value::Null) | None => None,
+                Some(x) => Some(x.as_str()?.to_string()),
+            },
+            p,
+            after: v.get("after").map(|x| x.as_u64()).transpose()?.unwrap_or(0),
+            max: v.get("max").map(|x| x.as_u64()).transpose()?.unwrap_or(1),
+        })
+    }
+}
+
+/// Plain-data, `Send` fault plan: a seed plus an ordered rule list.
+/// Installed on a [`Runtime`](super::Runtime) via `set_fault_plan` (or
+/// threaded into `serve::RunManager::start_with_faults`).
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub rules: Vec<FaultRule>,
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64, rules: Vec<FaultRule>) -> Self {
+        Self { seed, rules }
+    }
+
+    pub fn from_json_str(text: &str) -> Result<Self> {
+        let v = json::parse(text).context("parsing fault plan JSON")?;
+        Self::from_json(&v)
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let rules = v
+            .req("rules")?
+            .as_arr()?
+            .iter()
+            .enumerate()
+            .map(|(i, r)| FaultRule::from_json(r).with_context(|| format!("rules[{i}]")))
+            .collect::<Result<Vec<_>>>()?;
+        if rules.is_empty() {
+            bail!("fault plan lists no rules");
+        }
+        Ok(Self {
+            seed: v.get("seed").map(|x| x.as_u64()).transpose()?.unwrap_or(0),
+            rules,
+        })
+    }
+
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading fault plan {}", path.as_ref().display()))?;
+        Self::from_json_str(&text)
+            .with_context(|| format!("parsing {}", path.as_ref().display()))
+    }
+}
+
+/// The error an injected fault surfaces as. Lives in the `anyhow` chain
+/// so `coordinator::classify_error` can downcast it (execute/to_host/
+/// checkpoint faults classify Transient; a forced non-finite loss trips
+/// the divergence guard instead and never appears as this type).
+#[derive(Debug, Clone)]
+pub struct InjectedFault {
+    pub site: FaultSite,
+    /// Which occurrence at the site fired (per-runtime counter).
+    pub occurrence: u64,
+    /// Index of the plan rule that fired.
+    pub rule: usize,
+}
+
+impl std::fmt::Display for InjectedFault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "injected fault at site '{}' (occurrence {}, rule {})",
+            self.site.name(),
+            self.occurrence,
+            self.rule
+        )
+    }
+}
+
+impl std::error::Error for InjectedFault {}
+
+/// Marker attached to *real* execute/transfer failures so the serve
+/// supervisor classifies them as retryable rather than fatal.
+#[derive(Debug, Clone, Copy)]
+pub struct Transient;
+
+impl std::fmt::Display for Transient {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("transient runtime fault")
+    }
+}
+
+impl std::error::Error for Transient {}
+
+/// Mutable injector state: the plan plus per-site occurrence counters,
+/// per-rule match/fire counters and the current (run, step) scope.
+#[derive(Debug)]
+struct FaultInjector {
+    plan: FaultPlan,
+    occurrences: [u64; SITE_COUNT],
+    matched: Vec<u64>,
+    fired: Vec<u64>,
+    scope_run: Option<String>,
+    scope_step: Option<u64>,
+}
+
+impl FaultInjector {
+    fn new(plan: FaultPlan) -> Self {
+        let n = plan.rules.len();
+        Self {
+            plan,
+            occurrences: [0; SITE_COUNT],
+            matched: vec![0; n],
+            fired: vec![0; n],
+            scope_run: None,
+            scope_step: None,
+        }
+    }
+
+    fn fire(&mut self, site: FaultSite) -> Option<InjectedFault> {
+        let occ = self.occurrences[site.index()];
+        self.occurrences[site.index()] += 1;
+        let seed = self.plan.seed;
+        for (i, rule) in self.plan.rules.iter().enumerate() {
+            if rule.site != site {
+                continue;
+            }
+            if let Some(run) = &rule.run {
+                if self.scope_run.as_deref() != Some(run.as_str()) {
+                    continue;
+                }
+            }
+            if let (Some(at), step) = (rule.at_step, self.scope_step) {
+                if step != Some(at) {
+                    continue;
+                }
+            }
+            let m = self.matched[i];
+            self.matched[i] += 1;
+            if m < rule.after {
+                continue;
+            }
+            if rule.max > 0 && self.fired[i] >= rule.max {
+                continue;
+            }
+            if rule.p < 1.0 && roll(seed, i as u64, m) >= rule.p {
+                continue;
+            }
+            self.fired[i] += 1;
+            return Some(InjectedFault {
+                site,
+                occurrence: occ,
+                rule: i,
+            });
+        }
+        None
+    }
+}
+
+/// Seeded uniform in `[0, 1)` for probabilistic rules: a pure function of
+/// `(plan seed, rule index, matching-occurrence index)`, so the decision
+/// for each occurrence never depends on evaluation order elsewhere.
+fn roll(seed: u64, rule: u64, occurrence: u64) -> f64 {
+    let mut g = SplitMix64::new(
+        seed ^ rule
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(occurrence.wrapping_mul(0x85EB_CA6B)),
+    );
+    g.unit()
+}
+
+/// Shared, interior-mutable fault hook. The `Runtime` and every
+/// `Executable`/`DeviceVec` it creates hold an `Arc` of this, so a plan
+/// installed after executables are compiled (and cached) still reaches
+/// them.
+#[derive(Debug, Default)]
+pub struct FaultState {
+    inner: Mutex<Option<FaultInjector>>,
+}
+
+impl FaultState {
+    pub(crate) fn new() -> Self {
+        Self::default()
+    }
+
+    /// Install a plan (replacing any previous one; counters reset).
+    pub fn install(&self, plan: FaultPlan) {
+        *self.inner.lock().unwrap() = Some(FaultInjector::new(plan));
+    }
+
+    /// Remove the plan; every site reverts to pass-through.
+    pub fn clear(&self) {
+        *self.inner.lock().unwrap() = None;
+    }
+
+    pub fn is_active(&self) -> bool {
+        self.inner.lock().unwrap().is_some()
+    }
+
+    /// Set the run scope (`serve` sets the run's display name around each
+    /// scheduler slice). No-op without a plan.
+    pub fn scope_run(&self, name: Option<&str>) {
+        if let Some(inj) = self.inner.lock().unwrap().as_mut() {
+            inj.scope_run = name.map(str::to_string);
+        }
+    }
+
+    /// Set the step scope (the train loop brackets each step with its
+    /// index, giving rules training-step precision). No-op without a plan.
+    pub fn scope_step(&self, step: Option<u64>) {
+        if let Some(inj) = self.inner.lock().unwrap().as_mut() {
+            inj.scope_step = step;
+        }
+    }
+
+    /// Record an occurrence at `site`; `Some` when a rule fires.
+    pub fn fire(&self, site: FaultSite) -> Option<InjectedFault> {
+        self.inner.lock().unwrap().as_mut()?.fire(site)
+    }
+
+    /// `fire` as a `Result` for `?`-style hot-path checks.
+    pub fn check(&self, site: FaultSite) -> Result<(), InjectedFault> {
+        match self.fire(site) {
+            Some(f) => Err(f),
+            None => Ok(()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn exec_seq(state: &FaultState, n: u64) -> Vec<u64> {
+        // simulate n "steps" with one execute occurrence each; return the
+        // step indices where a fault fired
+        let mut fired = Vec::new();
+        for step in 0..n {
+            state.scope_step(Some(step));
+            if state.fire(FaultSite::Execute).is_some() {
+                fired.push(step);
+            }
+        }
+        state.scope_step(None);
+        fired
+    }
+
+    #[test]
+    fn no_plan_is_pass_through() {
+        let state = FaultState::new();
+        assert!(!state.is_active());
+        assert!(state.fire(FaultSite::Execute).is_none());
+        assert!(state.check(FaultSite::ToHost).is_ok());
+        state.scope_run(Some("a")); // no-op, must not panic
+        state.scope_step(Some(3));
+    }
+
+    #[test]
+    fn at_step_fires_exactly_there_and_once() {
+        let state = FaultState::new();
+        state.install(FaultPlan::new(0, vec![FaultRule::at(FaultSite::Execute, 7)]));
+        assert_eq!(exec_seq(&state, 20), vec![7]);
+        // max = 1 consumed: a replay of step 7 passes clean
+        state.scope_step(Some(7));
+        assert!(state.fire(FaultSite::Execute).is_none());
+    }
+
+    #[test]
+    fn run_scope_filters() {
+        let state = FaultState::new();
+        let mut rule = FaultRule::at(FaultSite::Execute, 2);
+        rule.run = Some("hurt".into());
+        state.install(FaultPlan::new(0, vec![rule]));
+        state.scope_run(Some("fine"));
+        assert_eq!(exec_seq(&state, 5), Vec::<u64>::new());
+        state.scope_run(Some("hurt"));
+        assert_eq!(exec_seq(&state, 5), vec![2]);
+    }
+
+    #[test]
+    fn after_and_max_bound_firing() {
+        let plan = FaultPlan::from_json_str(
+            r#"{"rules":[{"site":"execute","after":3,"max":2}]}"#,
+        )
+        .unwrap();
+        let state = FaultState::new();
+        state.install(plan);
+        assert_eq!(exec_seq(&state, 10), vec![3, 4]);
+    }
+
+    #[test]
+    fn unlimited_max_fires_every_match() {
+        let plan = FaultPlan::from_json_str(
+            r#"{"rules":[{"site":"nonfinite_loss","at_step":5,"max":0}]}"#,
+        )
+        .unwrap();
+        let state = FaultState::new();
+        state.install(plan);
+        for _ in 0..3 {
+            state.scope_step(Some(5));
+            assert!(state.fire(FaultSite::NonFiniteLoss).is_some());
+        }
+    }
+
+    #[test]
+    fn seeded_probabilistic_rules_are_deterministic() {
+        let text = r#"{"seed":42,"rules":[{"site":"execute","p":0.3,"max":0}]}"#;
+        let run = || {
+            let state = FaultState::new();
+            state.install(FaultPlan::from_json_str(text).unwrap());
+            exec_seq(&state, 200)
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b, "same plan + seed must inject the same sites");
+        assert!(!a.is_empty() && a.len() < 200, "p=0.3 fires some but not all");
+
+        // a different seed chooses different sites
+        let other = {
+            let state = FaultState::new();
+            state.install(
+                FaultPlan::from_json_str(
+                    r#"{"seed":43,"rules":[{"site":"execute","p":0.3,"max":0}]}"#,
+                )
+                .unwrap(),
+            );
+            exec_seq(&state, 200)
+        };
+        assert_ne!(a, other);
+    }
+
+    #[test]
+    fn plan_json_rejects_garbage() {
+        assert!(FaultPlan::from_json_str(r#"{"rules":[]}"#).is_err());
+        assert!(FaultPlan::from_json_str(r#"{"rules":[{"site":"bogus"}]}"#).is_err());
+        assert!(
+            FaultPlan::from_json_str(r#"{"rules":[{"site":"execute","p":1.5}]}"#).is_err()
+        );
+        assert!(FaultPlan::from_json_str(r#"{"seed":1}"#).is_err());
+    }
+
+    #[test]
+    fn sites_round_trip_names() {
+        for site in [
+            FaultSite::Execute,
+            FaultSite::ToHost,
+            FaultSite::CheckpointWrite,
+            FaultSite::NonFiniteLoss,
+        ] {
+            assert_eq!(FaultSite::from_name(site.name()), Some(site));
+        }
+        assert_eq!(FaultSite::from_name("nope"), None);
+    }
+}

@@ -38,6 +38,7 @@
 //! records crossing the channel.
 
 pub mod exec;
+pub mod fault;
 pub mod manifest;
 pub mod session;
 
@@ -48,6 +49,7 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 pub use exec::{Call, DeviceVec, Executable};
+pub use fault::{FaultPlan, FaultSite, FaultState};
 pub use manifest::{ExeSpec, IoSpec, Manifest, ModelConfig, ModelEntry};
 pub use session::Session;
 use xla::{Literal, PjRtClient};
@@ -60,6 +62,9 @@ pub struct Runtime {
     cache: Mutex<HashMap<(String, String), Arc<Executable>>>,
     /// cumulative time spent in `client.compile` (startup cost accounting)
     compile_seconds: Mutex<f64>,
+    /// fault-injection hook, shared with every executable and device
+    /// vector this runtime creates; inert until a plan is installed
+    faults: Arc<FaultState>,
 }
 
 impl Runtime {
@@ -75,11 +80,23 @@ impl Runtime {
             manifest,
             cache: Mutex::new(HashMap::new()),
             compile_seconds: Mutex::new(0.0),
+            faults: Arc::new(FaultState::new()),
         })
     }
 
     pub fn platform(&self) -> String {
         self.client.platform_name()
+    }
+
+    /// Install a deterministic fault plan (testing / chaos sweeps). Takes
+    /// effect immediately, including for already-compiled executables.
+    pub fn set_fault_plan(&self, plan: FaultPlan) {
+        self.faults.install(plan);
+    }
+
+    /// The shared fault hook (scoping, direct site checks).
+    pub fn faults(&self) -> &Arc<FaultState> {
+        &self.faults
     }
 
     pub fn artifacts_root(&self) -> &Path {
@@ -99,7 +116,7 @@ impl Runtime {
             .client
             .buffer_from_host_literal(None, &lit)
             .map_err(|e| anyhow::anyhow!("uploading {} f32s: {e}", data.len()))?;
-        Ok(DeviceVec::from_buffer(buf, data.len()))
+        Ok(DeviceVec::from_buffer(buf, data.len(), self.faults.clone()))
     }
 
     /// Compile-on-demand with caching: one `PjRtLoadedExecutable` per
@@ -139,6 +156,7 @@ impl Runtime {
             exe: exe_compiled,
             spec,
             tuple_root,
+            faults: self.faults.clone(),
         });
         self.cache.lock().unwrap().insert(key, wrapped.clone());
         Ok(wrapped)

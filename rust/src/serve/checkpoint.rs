@@ -22,11 +22,13 @@ use anyhow::{Context, Result};
 use crate::coordinator::TrainLoop;
 use crate::optim::{OptState, Optimizer};
 use crate::runtime::Session;
+use crate::util::crc::crc32;
 use crate::util::json::{self, Value};
 
 use super::protocol::RunSpec;
 
-pub const CKPT_VERSION: u64 = 1;
+/// v2 adds a `crc32` of the blob; v1 files (no checksum) still load.
+pub const CKPT_VERSION: u64 = 2;
 
 /// An in-memory checkpoint: everything a run needs to continue as if it
 /// had never stopped (parameters, optimizer state, loop counters).
@@ -98,6 +100,7 @@ impl Checkpoint {
                 blob.extend_from_slice(&f.to_le_bytes());
             }
         }
+        let blob_crc = crc32(&blob);
         // Crash-safe: stage both files under .tmp names and rename into
         // place (bin first, json last), so a crash mid-write can never
         // destroy an existing good checkpoint of the same name.
@@ -154,6 +157,7 @@ impl Checkpoint {
                 ]),
             ),
             ("bin", Value::str(bin_name.as_str())),
+            ("crc32", Value::num(blob_crc as f64)),
         ]);
         let json_tmp = dir.join(format!("{stem}.ckpt.json.tmp"));
         std::fs::write(&json_tmp, doc.to_string())
@@ -171,8 +175,8 @@ impl Checkpoint {
             .with_context(|| format!("parsing {}", json_path.display()))?;
         let version = v.req("version")?.as_u64()?;
         anyhow::ensure!(
-            version == CKPT_VERSION,
-            "{}: checkpoint version {version}, this build reads {CKPT_VERSION}",
+            (1..=CKPT_VERSION).contains(&version),
+            "{}: checkpoint version {version}, this build reads 1..={CKPT_VERSION}",
             json_path.display()
         );
         let trainable_len = v.req("trainable_len")?.as_usize()?;
@@ -205,6 +209,19 @@ impl Checkpoint {
             bytes.len(),
             total
         );
+        // Integrity: the length check alone cannot see a flipped bit — a
+        // corrupt parameter vector would load silently and train garbage.
+        // v1 files carry no checksum and are trusted as before.
+        if let Some(want) = v.get("crc32") {
+            let want = want.as_u64()? as u32;
+            let got = crc32(&bytes);
+            anyhow::ensure!(
+                got == want,
+                "{}: CRC mismatch (stored {want:#010x}, computed {got:#010x}) — \
+                 blob is corrupt",
+                bin_path.display()
+            );
+        }
         // decode each named section straight out of the byte buffer — no
         // intermediate full-blob Vec<f32> (these are O(d) at model scale)
         let decode = |off: usize, len: usize| -> Vec<f32> {
@@ -254,6 +271,67 @@ impl Checkpoint {
 
 fn vec_elems(st: &OptState) -> usize {
     st.vectors.iter().map(|(_, v)| v.len()).sum()
+}
+
+/// Step index parsed from a `<name>.step<N>.ckpt.json` file name; `None`
+/// for anything else (other runs' checkpoints, `.bin` halves, tmp files).
+fn checkpoint_step(file_name: &str, name: &str) -> Option<u64> {
+    let rest = file_name.strip_prefix(name)?.strip_prefix(".step")?;
+    rest.strip_suffix(".ckpt.json")?.parse().ok()
+}
+
+/// All of `name`'s checkpoint JSON paths in `dir`, newest (highest step)
+/// first. Missing directories list as empty — callers treat "no
+/// checkpoints yet" and "dir not created yet" the same way.
+pub fn list_checkpoints(dir: &Path, name: &str) -> Result<Vec<(u64, PathBuf)>> {
+    let mut out = Vec::new();
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(out),
+        Err(e) => return Err(e).with_context(|| format!("listing {}", dir.display())),
+    };
+    for entry in entries {
+        let entry = entry.with_context(|| format!("listing {}", dir.display()))?;
+        if let Some(step) = entry.file_name().to_str().and_then(|f| checkpoint_step(f, name)) {
+            out.push((step, entry.path()));
+        }
+    }
+    out.sort_by(|a, b| b.0.cmp(&a.0));
+    Ok(out)
+}
+
+/// The newest checkpoint of `name` in `dir` that passes full validation
+/// (JSON parse, length, CRC), skipping corrupt ones — rollback falls back
+/// to the previous checkpoint when the latest fails. `None` when no valid
+/// checkpoint exists (the caller rebuilds from scratch).
+pub fn latest_valid_checkpoint(dir: &Path, name: &str) -> Result<Option<(PathBuf, Checkpoint)>> {
+    for (_, path) in list_checkpoints(dir, name)? {
+        match Checkpoint::load(&path) {
+            Ok(ck) => return Ok(Some((path, ck))),
+            Err(e) => eprintln!("[serve] skipping corrupt checkpoint {}: {e:#}", path.display()),
+        }
+    }
+    Ok(None)
+}
+
+/// Retention: delete all but the newest `keep_last` checkpoint pairs of
+/// `name` in `dir`. `keep_last == 0` means keep everything.
+pub fn prune_checkpoints(dir: &Path, name: &str, keep_last: usize) -> Result<()> {
+    if keep_last == 0 {
+        return Ok(());
+    }
+    for (_, json_path) in list_checkpoints(dir, name)?.into_iter().skip(keep_last) {
+        let bin_path = json_path.with_extension("bin");
+        std::fs::remove_file(&json_path)
+            .with_context(|| format!("pruning {}", json_path.display()))?;
+        // the bin half may already be gone from an interrupted prune
+        match std::fs::remove_file(&bin_path) {
+            Ok(()) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+            Err(e) => return Err(e).with_context(|| format!("pruning {}", bin_path.display())),
+        }
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -319,5 +397,97 @@ mod tests {
         std::fs::write(&bin, [0u8; 4]).unwrap();
         assert!(Checkpoint::load(&path).is_err());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    fn tiny(step: u64) -> Checkpoint {
+        Checkpoint {
+            model: "m".into(),
+            task: "t".into(),
+            pretrained: false,
+            run_seed: 0,
+            k_shot: None,
+            step,
+            trainable: vec![step as f32, 1.0, 2.0],
+            forwards: step as f64,
+            forward_equiv: step as f64,
+            ema_loss: None,
+            optimizer_name: "MeZO-SGD".into(),
+            optimizer: OptState::default(),
+        }
+    }
+
+    #[test]
+    fn load_rejects_bit_flipped_blob() {
+        let dir = std::env::temp_dir().join(format!("fzoo-ckpt-crc-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = tiny(1).write(&dir, "x").unwrap();
+        let bin = dir.join("x.step1.ckpt.bin");
+        // same length, one flipped bit: only the CRC can catch this
+        let mut bytes = std::fs::read(&bin).unwrap();
+        bytes[5] ^= 0x40;
+        std::fs::write(&bin, bytes).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err().to_string();
+        assert!(err.contains("CRC mismatch"), "unexpected error: {err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn latest_valid_skips_corrupt_newest() {
+        let dir = std::env::temp_dir().join(format!("fzoo-ckpt-latest-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        for s in [2, 4, 6] {
+            tiny(s).write(&dir, "a").unwrap();
+        }
+        tiny(3).write(&dir, "other").unwrap(); // another run's files are invisible
+
+        let (path, ck) = latest_valid_checkpoint(&dir, "a").unwrap().unwrap();
+        assert_eq!(ck.step, 6);
+        assert!(path.ends_with("a.step6.ckpt.json"));
+
+        // corrupt the newest blob: discovery falls back to step 4
+        let mut bytes = std::fs::read(dir.join("a.step6.ckpt.bin")).unwrap();
+        bytes[0] ^= 1;
+        std::fs::write(dir.join("a.step6.ckpt.bin"), bytes).unwrap();
+        let (_, ck) = latest_valid_checkpoint(&dir, "a").unwrap().unwrap();
+        assert_eq!(ck.step, 4);
+
+        // no valid checkpoint at all -> None
+        assert!(latest_valid_checkpoint(&dir, "missing").unwrap().is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn prune_keeps_newest_k_pairs() {
+        let dir = std::env::temp_dir().join(format!("fzoo-ckpt-prune-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        for s in 1..=5 {
+            tiny(s).write(&dir, "a").unwrap();
+        }
+        tiny(1).write(&dir, "other").unwrap();
+
+        prune_checkpoints(&dir, "a", 2).unwrap();
+        let left: Vec<u64> =
+            list_checkpoints(&dir, "a").unwrap().into_iter().map(|(s, _)| s).collect();
+        assert_eq!(left, vec![5, 4]);
+        for s in 1..=3 {
+            assert!(!dir.join(format!("a.step{s}.ckpt.bin")).exists());
+        }
+        // untouched: the other run and the survivors' blobs
+        assert!(dir.join("other.step1.ckpt.json").exists());
+        assert!(dir.join("a.step5.ckpt.bin").exists());
+
+        // keep_last == 0 disables pruning
+        prune_checkpoints(&dir, "a", 0).unwrap();
+        assert_eq!(list_checkpoints(&dir, "a").unwrap().len(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn checkpoint_step_parses_only_own_files() {
+        assert_eq!(checkpoint_step("a.step12.ckpt.json", "a"), Some(12));
+        assert_eq!(checkpoint_step("a.step12.ckpt.bin", "a"), None);
+        assert_eq!(checkpoint_step("a.step12.ckpt.json.tmp", "a"), None);
+        assert_eq!(checkpoint_step("ab.step12.ckpt.json", "a"), None);
+        assert_eq!(checkpoint_step("a.stepx.ckpt.json", "a"), None);
     }
 }

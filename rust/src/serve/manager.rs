@@ -16,16 +16,43 @@
 //! runnable it blocks on the request channel instead of spinning.
 
 use std::path::PathBuf;
-use std::sync::mpsc::{self, Receiver, Sender, TryRecvError};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::{EvalRecord, History};
-use crate::runtime::Runtime;
+use crate::runtime::{FaultPlan, Runtime};
 
 use super::protocol::{Event, Request, RunId, RunSpec, RunStatus};
 use super::run::RunState;
+
+/// Default client deadline. Generous because `submit` compiles step
+/// graphs on the worker (tens of seconds cold) — the deadline guards
+/// against a *dead or wedged* worker, not a slow one.
+pub const DEFAULT_CLIENT_TIMEOUT: Duration = Duration::from_secs(600);
+
+/// Typed "the worker can't answer" error, distinguishable from run-level
+/// failures via `anyhow`'s `downcast_ref`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkerGone {
+    /// The request/reply channel disconnected: the thread exited.
+    Disconnected,
+    /// No reply within the client's deadline: the thread is wedged.
+    Unresponsive,
+}
+
+impl std::fmt::Display for WorkerGone {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WorkerGone::Disconnected => f.write_str("serve worker is gone"),
+            WorkerGone::Unresponsive => f.write_str("serve worker is unresponsive"),
+        }
+    }
+}
+
+impl std::error::Error for WorkerGone {}
 
 /// Owns the worker thread. Create with [`RunManager::start`], hand out
 /// [`Client`]s, and either call [`RunManager::shutdown`] for an explicit
@@ -39,6 +66,16 @@ impl RunManager {
     /// Spawn the worker and load the PJRT runtime *on* it. Artifact /
     /// manifest problems surface here, not at first submit.
     pub fn start(artifacts: impl Into<PathBuf>) -> Result<Self> {
+        Self::start_with_faults(artifacts, None)
+    }
+
+    /// [`RunManager::start`] with a deterministic fault plan installed on
+    /// the worker's runtime before any run executes — the entry point for
+    /// recovery tests and `make chaos` sweeps.
+    pub fn start_with_faults(
+        artifacts: impl Into<PathBuf>,
+        faults: Option<FaultPlan>,
+    ) -> Result<Self> {
         let dir = artifacts.into();
         let (tx, rx) = mpsc::channel::<Request>();
         let (boot_tx, boot_rx) = mpsc::channel::<Result<()>>();
@@ -55,6 +92,9 @@ impl RunManager {
                         return;
                     }
                 };
+                if let Some(plan) = faults {
+                    rt.set_fault_plan(plan);
+                }
                 Worker {
                     rt,
                     rx,
@@ -67,7 +107,10 @@ impl RunManager {
             .recv()
             .map_err(|_| anyhow!("serve worker died during startup"))??;
         Ok(Self {
-            client: Client { tx },
+            client: Client {
+                tx,
+                timeout: DEFAULT_CLIENT_TIMEOUT,
+            },
             join: Some(join),
         })
     }
@@ -102,20 +145,36 @@ impl Drop for RunManager {
 }
 
 /// Cloneable, `Send` handle to the worker. All methods are synchronous
-/// round trips over the request channel.
+/// round trips over the request channel, bounded by a deadline: a dead or
+/// wedged worker yields a typed [`WorkerGone`] error instead of a hang.
 #[derive(Clone)]
 pub struct Client {
     tx: Sender<Request>,
+    timeout: Duration,
 }
 
 impl Client {
+    /// This client with a different reply deadline (default
+    /// [`DEFAULT_CLIENT_TIMEOUT`]).
+    pub fn with_timeout(mut self, timeout: Duration) -> Self {
+        self.timeout = timeout;
+        self
+    }
+
     fn roundtrip<T>(&self, build: impl FnOnce(Sender<T>) -> Request) -> Result<T> {
         let (reply, rx) = mpsc::channel();
         self.tx
             .send(build(reply))
-            .map_err(|_| anyhow!("serve worker is gone"))?;
-        rx.recv()
-            .map_err(|_| anyhow!("serve worker dropped the request"))
+            .map_err(|_| anyhow::Error::new(WorkerGone::Disconnected))?;
+        match rx.recv_timeout(self.timeout) {
+            Ok(v) => Ok(v),
+            Err(RecvTimeoutError::Disconnected) => Err(anyhow::Error::new(
+                WorkerGone::Disconnected,
+            )
+            .context("serve worker dropped the request")),
+            Err(RecvTimeoutError::Timeout) => Err(anyhow::Error::new(WorkerGone::Unresponsive)
+                .context(format!("no reply within {:?}", self.timeout))),
+        }
     }
 
     /// Register a run. The session opens (and any pretraining/resume load
@@ -191,14 +250,21 @@ impl RunHandle {
     }
 
     /// Block until the run completes, discarding intermediate events.
-    /// Errors if the run failed or the manager shut down first.
+    /// Errors if the run failed or the manager shut down first — a closed
+    /// stream surfaces as a typed [`WorkerGone::Disconnected`], never a
+    /// hang.
     pub fn wait(&self) -> Result<History> {
         loop {
             match self.events.recv() {
                 Ok(Event::Finished(h)) => return Ok(h),
                 Ok(Event::Failed(e)) => bail!("{} failed: {e}", self.id),
                 Ok(_) => continue,
-                Err(_) => bail!("{}: event stream closed before completion", self.id),
+                Err(_) => {
+                    return Err(anyhow::Error::new(WorkerGone::Disconnected).context(format!(
+                        "{}: event stream closed before completion",
+                        self.id
+                    )))
+                }
             }
         }
     }
@@ -290,7 +356,14 @@ impl Worker {
                 let _ = reply.send(out);
             }
             Request::Checkpoint { id, reply } => {
-                let _ = reply.send(self.run_mut(id).and_then(|r| r.write_checkpoint()));
+                let rt = &self.rt;
+                let out = self
+                    .runs
+                    .iter_mut()
+                    .find(|r| r.id == id)
+                    .ok_or_else(|| anyhow!("no such run {id}"))
+                    .and_then(|r| r.write_checkpoint(rt));
+                let _ = reply.send(out);
             }
             Request::Status { reply } => {
                 let _ = reply.send(self.runs.iter().map(|r| r.status()).collect());

@@ -25,7 +25,18 @@
 //! * Periodic checkpoints ([`RunSpec::checkpoint_every`]) capture
 //!   `{trainable, step, optimizer state, forward accounting}` through the
 //!   explicit `sync_to_host` export boundary; [`RunSpec::resume_from`]
-//!   restores all of it and fast-forwards the batch stream.
+//!   restores all of it and fast-forwards the batch stream. Blobs carry a
+//!   CRC-32; `keep_last` prunes old pairs.
+//! * **Fault tolerance**: step failures are classified
+//!   (`transient`/`diverged`/`fatal` — see
+//!   [`classify_error`](crate::coordinator::classify_error)); with
+//!   `max_restarts` budget left, a recoverable failure rolls the run back
+//!   to its newest *valid* checkpoint after a backoff, emits
+//!   [`Event::Recovered`], and continues bit-identically to an unfaulted
+//!   run. Deterministic fault plans
+//!   ([`FaultPlan`](crate::runtime::FaultPlan), via
+//!   [`RunManager::start_with_faults`]) make every one of those paths
+//!   testable.
 //!
 //! ```no_run
 //! use fzoo::optim::OptimizerKind;
@@ -46,6 +57,6 @@ pub mod manager;
 pub mod protocol;
 pub mod run;
 
-pub use checkpoint::Checkpoint;
-pub use manager::{Client, RunHandle, RunManager};
+pub use checkpoint::{latest_valid_checkpoint, list_checkpoints, prune_checkpoints, Checkpoint};
+pub use manager::{Client, RunHandle, RunManager, WorkerGone, DEFAULT_CLIENT_TIMEOUT};
 pub use protocol::{Event, RunId, RunPhase, RunSpec, RunStatus};

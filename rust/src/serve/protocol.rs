@@ -29,9 +29,14 @@ pub enum RunPhase {
     Idle,
     /// Has budget; the scheduler gives it one step per round-robin pass.
     Running,
+    /// A classified failure is being recovered: the run waits out its
+    /// backoff (scheduler ticks), then rolls back to its last good
+    /// checkpoint and becomes `Running` again.
+    Recovering,
     /// Plan complete (or stopped): final eval + host sync done.
     Finished,
-    /// A step/eval/checkpoint errored; the error is in `RunStatus::error`.
+    /// A step/eval/checkpoint errored beyond recovery; the classified
+    /// error is in `RunStatus::error`.
     Failed,
 }
 
@@ -48,6 +53,10 @@ pub struct RunStatus {
     /// steps credited but not yet executed
     pub budget: u64,
     pub last_loss: Option<f32>,
+    /// completed checkpoint rollbacks (bounded by `RunSpec::max_restarts`)
+    pub restarts: u64,
+    /// classified step failures, including each recovered one
+    pub failures: u64,
     pub error: Option<String>,
 }
 
@@ -58,6 +67,14 @@ pub enum Event {
     Eval(EvalRecord),
     /// A periodic or requested checkpoint was written.
     Checkpoint { step: u64, path: String },
+    /// The run hit a recoverable failure and rolled back: it continues
+    /// from `step` (restored from `from_checkpoint`, or rebuilt from its
+    /// starting state when `None`). `cause` is the classified error.
+    Recovered {
+        step: u64,
+        from_checkpoint: Option<String>,
+        cause: String,
+    },
     /// Terminal: the run completed (or was stopped early); carries the
     /// full history.
     Finished(History),
@@ -94,6 +111,18 @@ pub struct RunSpec {
     pub resume_from: Option<String>,
     /// Per-run JSONL log path (written by the `fzoo serve` CLI).
     pub log_path: Option<String>,
+    /// How many checkpoint rollbacks the supervisor may perform on
+    /// `Transient`/`Diverged` failures before the run fails for good.
+    /// 0 (the default) disables recovery entirely.
+    pub max_restarts: u64,
+    /// Backoff before the k-th rollback, in scheduler ticks, doubled per
+    /// restart (`backoff << restarts`). 0 = retry on the next tick.
+    pub restart_backoff: u64,
+    /// Keep only the newest K checkpoint pairs (0 = keep all). With
+    /// recovery on, K ≥ 2 leaves a fallback when the newest is corrupt.
+    pub keep_last: usize,
+    /// Divergence-guard threshold (see `TrainOpts::diverge_ema_factor`).
+    pub diverge_ema_factor: Option<f64>,
 }
 
 impl RunSpec {
@@ -115,6 +144,10 @@ impl RunSpec {
             checkpoint_dir: None,
             resume_from: None,
             log_path: None,
+            max_restarts: 0,
+            restart_backoff: 0,
+            keep_last: 0,
+            diverge_ema_factor: None,
         }
     }
 
@@ -140,6 +173,7 @@ impl RunSpec {
             target_loss: self.target_loss,
             schedule: self.schedule,
             run_seed: self.run_seed,
+            diverge_ema_factor: self.diverge_ema_factor,
             verbose: false,
         }
     }
@@ -190,6 +224,25 @@ impl RunSpec {
         spec.checkpoint_dir = opt_str(v, "checkpoint_dir")?;
         spec.resume_from = opt_str(v, "resume_from")?;
         spec.log_path = opt_str(v, "log")?;
+        spec.max_restarts = v
+            .get("max_restarts")
+            .map(|x| x.as_u64())
+            .transpose()?
+            .unwrap_or(0);
+        spec.restart_backoff = v
+            .get("restart_backoff")
+            .map(|x| x.as_u64())
+            .transpose()?
+            .unwrap_or(0);
+        spec.keep_last = v
+            .get("keep_last")
+            .map(|x| x.as_usize())
+            .transpose()?
+            .unwrap_or(0);
+        spec.diverge_ema_factor = v
+            .get("diverge_ema_factor")
+            .map(|x| x.as_f64())
+            .transpose()?;
         Ok(spec)
     }
 }
@@ -256,6 +309,8 @@ mod tests {
         assert_eq!(s.eval_batches, 8);
         assert_eq!(s.display_name(), "tiny-enc-sst2-s0");
         assert!(!s.pretrained);
+        assert_eq!(s.max_restarts, 0, "recovery is opt-in");
+        assert_eq!(s.keep_last, 0, "retention is opt-in");
 
         let v = json::parse(
             r#"{"name":"a","model":"tiny-dec","task":"boolq",
@@ -264,7 +319,8 @@ mod tests {
                 "k_shot":16,"schedule":"cosine:0.1","target_loss":0.3,
                 "pretrained":true,"checkpoint_every":25,
                 "checkpoint_dir":"ckpt","resume_from":"ckpt/a.step25.ckpt.json",
-                "log":"runs/a.jsonl"}"#,
+                "log":"runs/a.jsonl","max_restarts":3,"restart_backoff":2,
+                "keep_last":4,"diverge_ema_factor":10.0}"#,
         )
         .unwrap();
         let s = RunSpec::from_json(&v).unwrap();
@@ -276,8 +332,13 @@ mod tests {
         assert_eq!(s.resume_from.as_deref(), Some("ckpt/a.step25.ckpt.json"));
         assert_eq!(s.log_path.as_deref(), Some("runs/a.jsonl"));
         assert!(s.pretrained);
+        assert_eq!(s.max_restarts, 3);
+        assert_eq!(s.restart_backoff, 2);
+        assert_eq!(s.keep_last, 4);
+        assert_eq!(s.diverge_ema_factor, Some(10.0));
         let opts = s.train_opts();
         assert_eq!(opts.steps, 50);
+        assert_eq!(opts.diverge_ema_factor, Some(10.0));
         assert!(!opts.verbose);
     }
 

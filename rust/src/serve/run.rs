@@ -3,18 +3,121 @@
 //! moments), the batch stream and the resumable `TrainLoop` — plus the
 //! event channel back to the submitting client. Built and driven only on
 //! the manager's runtime thread; nothing here is (or needs to be) `Send`.
+//!
+//! This is also where the *supervisor* lives: a classified step failure
+//! (`Transient`/`Diverged`) on a run with `max_restarts` left flips it to
+//! `Recovering`; after its backoff (scheduler ticks) the run rolls back —
+//! the worker-side state is rebuilt from the spec exactly as a fresh
+//! submit, restored from the newest *valid* checkpoint, and the replayed
+//! steps are re-credited. The rebuilt run is the same deterministic
+//! trajectory, so recovery is bit-exact (`tests/serve.rs` asserts it).
 
+use std::path::Path;
 use std::sync::mpsc::Sender;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::{evaluate, EvalRecord, StepOutcome, TrainLoop};
+use crate::coordinator::{
+    classify_error, evaluate, EvalRecord, FailureClass, StepOutcome, TrainLoop,
+};
 use crate::data::{Batcher, TaskKind};
 use crate::optim::Optimizer;
-use crate::runtime::{Runtime, Session};
+use crate::runtime::{FaultSite, Runtime, Session};
 
-use super::checkpoint::Checkpoint;
+use super::checkpoint::{latest_valid_checkpoint, prune_checkpoints, Checkpoint};
 use super::protocol::{Event, RunId, RunPhase, RunSpec, RunStatus};
+
+/// Worker-side pieces a run is (re)built from; see [`build_parts`].
+type RunParts = (Session, Box<dyn Optimizer>, Batcher, TrainLoop);
+
+/// Build the live state a [`RunSpec`] describes: open the session
+/// (optionally from the pretrained checkpoint), instantiate the task,
+/// build the optimizer — and, given a checkpoint, validate its provenance
+/// and restore parameters, optimizer state and loop counters, fast-
+/// forwarding the batch stream. Shared by first submit ([`RunState::open`])
+/// and rollback recovery, so both take the exact same path.
+fn build_parts(rt: &Runtime, spec: &RunSpec, ck: Option<&Checkpoint>) -> Result<RunParts> {
+    let mut session = if spec.pretrained {
+        Session::open_pretrained(rt, &spec.model)?
+    } else {
+        Session::open(rt, &spec.model)?
+    };
+    let kind = TaskKind::from_name(&spec.task)
+        .ok_or_else(|| anyhow::anyhow!("unknown task '{}'", spec.task))?;
+    let mut task = kind.instantiate(session.model_config(), spec.run_seed)?;
+    if let Some(k) = spec.k_shot {
+        task = task.with_k_shot(k);
+    }
+    let mut optimizer = spec.optimizer.build(&session, spec.run_seed);
+    let mut batcher = Batcher::new(task, &session.entry.config, spec.run_seed);
+    let mut lp = TrainLoop::new(
+        optimizer.name(),
+        spec.model.clone(),
+        kind.name().to_string(),
+        spec.train_opts(),
+    );
+    if let Some(ck) = ck {
+        anyhow::ensure!(
+            ck.model == spec.model,
+            "resume checkpoint is for model '{}', spec says '{}'",
+            ck.model,
+            spec.model
+        );
+        anyhow::ensure!(
+            ck.task == spec.task,
+            "resume checkpoint is for task '{}', spec says '{}'",
+            ck.task,
+            spec.task
+        );
+        // a prefix run's trained state is only the prefix — resuming
+        // over a differently-built frozen base would silently diverge
+        anyhow::ensure!(
+            ck.pretrained == spec.pretrained,
+            "resume checkpoint was trained with pretrained = {}, spec says {}",
+            ck.pretrained,
+            spec.pretrained
+        );
+        // the seed drives the batch shuffle AND the perturbation
+        // streams; k_shot changes the train set — either mismatch
+        // would silently continue a different trajectory
+        anyhow::ensure!(
+            ck.run_seed == spec.run_seed,
+            "resume checkpoint was trained with run_seed {}, spec says {}",
+            ck.run_seed,
+            spec.run_seed
+        );
+        anyhow::ensure!(
+            ck.k_shot == spec.k_shot,
+            "resume checkpoint was trained with k_shot {:?}, spec says {:?}",
+            ck.k_shot,
+            spec.k_shot
+        );
+        anyhow::ensure!(
+            ck.optimizer_name == optimizer.name(),
+            "resume checkpoint was written by optimizer '{}', spec builds '{}'",
+            ck.optimizer_name,
+            optimizer.name()
+        );
+        anyhow::ensure!(
+            ck.trainable.len() == session.d_trainable(),
+            "resume checkpoint holds {} trainable f32s, model '{}' trains {}",
+            ck.trainable.len(),
+            spec.model,
+            session.d_trainable()
+        );
+        anyhow::ensure!(
+            ck.step <= spec.steps,
+            "resume checkpoint is at step {}, past the {}-step plan",
+            ck.step,
+            spec.steps
+        );
+        session.set_trainable(rt, ck.trainable.clone())?;
+        optimizer.import_state(rt, ck.optimizer.clone())?;
+        batcher.skip_batches(ck.step);
+        lp = lp.resume_at(ck.step, ck.forwards, ck.forward_equiv, ck.ema_loss);
+    }
+    Ok((session, optimizer, batcher, lp))
+}
 
 pub(crate) struct RunState {
     pub id: RunId,
@@ -28,13 +131,21 @@ pub(crate) struct RunState {
     pub budget: u64,
     events: Sender<Event>,
     pub error: Option<String>,
+    /// completed checkpoint rollbacks (≤ `spec.max_restarts`)
+    pub restarts: u64,
+    /// classified step failures, including recovered ones
+    pub failures: u64,
+    /// remaining backoff before the pending rollback, in scheduler ticks
+    cooldown: u64,
+    /// classified cause of the failure being recovered
+    pending_cause: Option<String>,
+    /// cause of the *first* failure — preserved into the terminal error
+    first_cause: Option<String>,
 }
 
 impl RunState {
-    /// Build a run from its spec: open the session (optionally from the
-    /// pretrained checkpoint), instantiate the task, build the optimizer,
-    /// and — when `resume_from` is set — restore parameters, optimizer
-    /// state and loop counters and fast-forward the batch stream.
+    /// Build a run from its spec via [`build_parts`], restoring from
+    /// `resume_from` when set.
     pub fn open(rt: &Runtime, id: RunId, spec: RunSpec, events: Sender<Event>) -> Result<Self> {
         anyhow::ensure!(
             spec.checkpoint_every == 0 || spec.checkpoint_dir.is_some(),
@@ -42,87 +153,19 @@ impl RunState {
             spec.display_name(),
             spec.checkpoint_every
         );
-        let mut session = if spec.pretrained {
-            Session::open_pretrained(rt, &spec.model)?
-        } else {
-            Session::open(rt, &spec.model)?
-        };
-        let kind = TaskKind::from_name(&spec.task)
-            .ok_or_else(|| anyhow::anyhow!("unknown task '{}'", spec.task))?;
-        let mut task = kind.instantiate(session.model_config(), spec.run_seed)?;
-        if let Some(k) = spec.k_shot {
-            task = task.with_k_shot(k);
-        }
-        let mut optimizer = spec.optimizer.build(&session, spec.run_seed);
-        let mut batcher = Batcher::new(task, &session.entry.config, spec.run_seed);
-        let mut lp = TrainLoop::new(
-            optimizer.name(),
-            spec.model.clone(),
-            kind.name().to_string(),
-            spec.train_opts(),
+        anyhow::ensure!(
+            spec.max_restarts == 0 || spec.checkpoint_dir.is_some(),
+            "{}: max_restarts = {} but no checkpoint_dir to roll back to",
+            spec.display_name(),
+            spec.max_restarts
         );
-        if let Some(path) = &spec.resume_from {
-            let ck = Checkpoint::load(std::path::Path::new(path))
-                .with_context(|| format!("{}: loading resume checkpoint", spec.display_name()))?;
-            anyhow::ensure!(
-                ck.model == spec.model,
-                "resume checkpoint is for model '{}', spec says '{}'",
-                ck.model,
-                spec.model
-            );
-            anyhow::ensure!(
-                ck.task == spec.task,
-                "resume checkpoint is for task '{}', spec says '{}'",
-                ck.task,
-                spec.task
-            );
-            // a prefix run's trained state is only the prefix — resuming
-            // over a differently-built frozen base would silently diverge
-            anyhow::ensure!(
-                ck.pretrained == spec.pretrained,
-                "resume checkpoint was trained with pretrained = {}, spec says {}",
-                ck.pretrained,
-                spec.pretrained
-            );
-            // the seed drives the batch shuffle AND the perturbation
-            // streams; k_shot changes the train set — either mismatch
-            // would silently continue a different trajectory
-            anyhow::ensure!(
-                ck.run_seed == spec.run_seed,
-                "resume checkpoint was trained with run_seed {}, spec says {}",
-                ck.run_seed,
-                spec.run_seed
-            );
-            anyhow::ensure!(
-                ck.k_shot == spec.k_shot,
-                "resume checkpoint was trained with k_shot {:?}, spec says {:?}",
-                ck.k_shot,
-                spec.k_shot
-            );
-            anyhow::ensure!(
-                ck.optimizer_name == optimizer.name(),
-                "resume checkpoint was written by optimizer '{}', spec builds '{}'",
-                ck.optimizer_name,
-                optimizer.name()
-            );
-            anyhow::ensure!(
-                ck.trainable.len() == session.d_trainable(),
-                "resume checkpoint holds {} trainable f32s, model '{}' trains {}",
-                ck.trainable.len(),
-                spec.model,
-                session.d_trainable()
-            );
-            anyhow::ensure!(
-                ck.step <= spec.steps,
-                "resume checkpoint is at step {}, past the {}-step plan",
-                ck.step,
-                spec.steps
-            );
-            session.set_trainable(rt, ck.trainable)?;
-            optimizer.import_state(rt, ck.optimizer)?;
-            batcher.skip_batches(ck.step);
-            lp = lp.resume_at(ck.step, ck.forwards, ck.forward_equiv, ck.ema_loss);
-        }
+        let ck = match &spec.resume_from {
+            Some(path) => Some(Checkpoint::load(Path::new(path)).with_context(|| {
+                format!("{}: loading resume checkpoint", spec.display_name())
+            })?),
+            None => None,
+        };
+        let (session, optimizer, batcher, lp) = build_parts(rt, &spec, ck.as_ref())?;
 
         let mut run = Self {
             id,
@@ -135,6 +178,11 @@ impl RunState {
             budget: 0,
             events,
             error: None,
+            restarts: 0,
+            failures: 0,
+            cooldown: 0,
+            pending_cause: None,
+            first_cause: None,
         };
         // Zero-step plans and resumes at the plan's end are already done:
         // finalize now so the handle still gets its terminal event.
@@ -167,23 +215,45 @@ impl RunState {
                 }
                 Ok(())
             }
+            // Budget accumulates; the pending rollback decides whether the
+            // recovered run starts Running or parks Idle.
+            RunPhase::Recovering => {
+                self.budget = self.budget.saturating_add(steps).min(self.remaining());
+                Ok(())
+            }
         }
     }
 
+    /// Wants scheduler slices: stepping, or a pending rollback/backoff.
     pub fn runnable(&self) -> bool {
-        self.phase == RunPhase::Running
+        matches!(self.phase, RunPhase::Running | RunPhase::Recovering)
     }
 
     /// One scheduler slice: execute one step, stream the records, handle
     /// periodic checkpoints, and finalize/park the run as needed. Errors
-    /// are captured into the run (phase = `Failed`) — they never bubble
-    /// into the scheduler, so one failed run cannot take down the rest.
+    /// are classified — recoverable ones start a rollback, the rest fail
+    /// the run — and never bubble into the scheduler, so one dying run
+    /// cannot take down the rest.
     pub fn tick(&mut self, rt: &Runtime) {
-        if !self.runnable() {
-            return;
-        }
-        if let Err(e) = self.tick_inner(rt) {
-            self.fail(e);
+        match self.phase {
+            RunPhase::Running => {
+                // Scope injected faults to this run by display name; the
+                // guard keeps the per-tick name allocation off the
+                // fault-free path.
+                let scoped = rt.faults().is_active();
+                if scoped {
+                    rt.faults().scope_run(Some(&self.spec.display_name()));
+                }
+                let res = self.tick_inner(rt);
+                if scoped {
+                    rt.faults().scope_run(None);
+                }
+                if let Err(e) = res {
+                    self.on_step_error(e);
+                }
+            }
+            RunPhase::Recovering => self.tick_recovering(rt),
+            _ => {}
         }
     }
 
@@ -203,7 +273,7 @@ impl RunState {
                 if self.spec.checkpoint_every > 0
                     && self.lp.next_step() % self.spec.checkpoint_every == 0
                 {
-                    let path = self.write_checkpoint()?;
+                    let path = self.write_checkpoint(rt)?;
                     let _ = self.events.send(Event::Checkpoint {
                         step: self.lp.next_step(),
                         path,
@@ -220,6 +290,97 @@ impl RunState {
         Ok(())
     }
 
+    /// Classify a step/checkpoint error and route it: recoverable classes
+    /// with restarts left start a (possibly backed-off) rollback; anything
+    /// else is terminal.
+    fn on_step_error(&mut self, e: anyhow::Error) {
+        let class = classify_error(&e);
+        let cause = format!("{class}: {e:#}");
+        self.failures += 1;
+        if self.first_cause.is_none() {
+            self.first_cause = Some(cause.clone());
+        }
+        let recoverable = class != FailureClass::Fatal && self.restarts < self.spec.max_restarts;
+        if !recoverable {
+            self.fail_terminal(cause);
+            return;
+        }
+        // Exponential backoff in scheduler ticks: backoff << restarts.
+        self.cooldown = self
+            .spec
+            .restart_backoff
+            .saturating_mul(1u64 << self.restarts.min(32));
+        self.pending_cause = Some(cause);
+        self.phase = RunPhase::Recovering;
+    }
+
+    /// A `Recovering` run's scheduler slice: sit out the backoff, then
+    /// roll back. A failed rollback is terminal — there is nothing older
+    /// to fall back to that `latest_valid_checkpoint` hasn't already
+    /// considered.
+    fn tick_recovering(&mut self, rt: &Runtime) {
+        if self.cooldown > 0 {
+            self.cooldown -= 1;
+            return;
+        }
+        if let Err(e) = self.try_recover(rt) {
+            self.failures += 1;
+            self.fail_terminal(format!("recovery failed: {e:#}"));
+        }
+    }
+
+    /// Roll back: rebuild the worker-side state from the spec, restored
+    /// from the newest checkpoint that passes validation (falling back
+    /// past corrupt ones; to the spec's own `resume_from`, or to initial
+    /// state, when none survive), then re-credit the replayed steps.
+    fn try_recover(&mut self, rt: &Runtime) -> Result<()> {
+        let cause = self.pending_cause.take().unwrap_or_else(|| "unknown".into());
+        let dir = self
+            .spec
+            .checkpoint_dir
+            .clone()
+            .ok_or_else(|| anyhow::anyhow!("no checkpoint_dir to roll back to"))?;
+        let name = self.spec.display_name();
+        let (from_checkpoint, ck) = match latest_valid_checkpoint(Path::new(&dir), &name)? {
+            Some((path, ck)) => (Some(path.to_string_lossy().into_owned()), Some(ck)),
+            None => match &self.spec.resume_from {
+                Some(path) => (
+                    Some(path.clone()),
+                    Some(Checkpoint::load(Path::new(path)).with_context(|| {
+                        format!("{name}: reloading the resume checkpoint for rollback")
+                    })?),
+                ),
+                None => (None, None),
+            },
+        };
+        let old_next = self.lp.next_step();
+        let (session, optimizer, batcher, lp) = build_parts(rt, &self.spec, ck.as_ref())?;
+        self.session = session;
+        self.optimizer = optimizer;
+        self.batcher = batcher;
+        self.lp = lp;
+        self.restarts += 1;
+        let step = self.lp.next_step();
+        // The steps from `step` to the failure point were already paid for
+        // once — re-credit the replay so the original `TrainSteps` budget
+        // still carries the run to the same place.
+        self.budget = self
+            .budget
+            .saturating_add(old_next.saturating_sub(step))
+            .min(self.remaining());
+        let _ = self.events.send(Event::Recovered {
+            step,
+            from_checkpoint,
+            cause,
+        });
+        if self.lp.is_finished() {
+            self.finish(rt)?;
+        } else {
+            self.phase = if self.budget > 0 { RunPhase::Running } else { RunPhase::Idle };
+        }
+        Ok(())
+    }
+
     /// Final eval + host sync, then the terminal `Finished` event.
     fn finish(&mut self, rt: &Runtime) -> Result<()> {
         if let Some(ev) = self.lp.finalize(rt, &mut self.session, &self.batcher)? {
@@ -231,11 +392,13 @@ impl RunState {
         Ok(())
     }
 
-    /// `Stop` request: finalize wherever the run is (idempotent).
+    /// `Stop` request: finalize wherever the run is (idempotent). A
+    /// `Recovering` run stops where it stands too — its parameters are the
+    /// last completed step's (the failed step never committed).
     pub fn stop(&mut self, rt: &Runtime) -> Result<()> {
         match self.phase {
             RunPhase::Finished | RunPhase::Failed => Ok(()),
-            RunPhase::Idle | RunPhase::Running => {
+            RunPhase::Idle | RunPhase::Running | RunPhase::Recovering => {
                 if self.lp.next_step() < self.spec.steps {
                     self.lp.mark_stopped_early();
                 }
@@ -255,27 +418,40 @@ impl RunState {
         })
     }
 
-    /// Write a checkpoint to the spec's checkpoint dir; returns the path.
-    pub fn write_checkpoint(&mut self) -> Result<String> {
+    /// Write a checkpoint to the spec's checkpoint dir, then apply the
+    /// `keep_last` retention policy; returns the path.
+    pub fn write_checkpoint(&mut self, rt: &Runtime) -> Result<String> {
+        rt.faults()
+            .check(FaultSite::CheckpointWrite)
+            .map_err(|f| anyhow::Error::new(f).context("writing checkpoint"))?;
         let dir = self
             .spec
             .checkpoint_dir
             .clone()
             .ok_or_else(|| anyhow::anyhow!("{}: no checkpoint_dir in spec", self.id))?;
+        let name = self.spec.display_name();
         let ck = Checkpoint::capture(
             &mut self.session,
             self.optimizer.as_ref(),
             &self.lp,
             &self.spec,
         )?;
-        let path = ck.write(std::path::Path::new(&dir), &self.spec.display_name())?;
+        let path = ck.write(Path::new(&dir), &name)?;
+        prune_checkpoints(Path::new(&dir), &name, self.spec.keep_last)?;
         Ok(path.to_string_lossy().into_owned())
     }
 
-    fn fail(&mut self, e: anyhow::Error) {
-        let msg = format!("{e:#}");
+    /// Terminal failure: annotate with the restart history so a run that
+    /// exhausted `max_restarts` still reports its original cause.
+    fn fail_terminal(&mut self, mut msg: String) {
+        if self.restarts > 0 {
+            let first = self.first_cause.as_deref().unwrap_or("unknown");
+            msg = format!("{msg} (after {} restarts; first failure: {first})", self.restarts);
+        }
         self.phase = RunPhase::Failed;
         self.budget = 0;
+        self.cooldown = 0;
+        self.pending_cause = None;
         self.error = Some(msg.clone());
         let _ = self.events.send(Event::Failed(msg));
     }
@@ -291,6 +467,8 @@ impl RunState {
             steps_total: self.spec.steps,
             budget: self.budget,
             last_loss: self.lp.history().records.last().map(|r| r.loss),
+            restarts: self.restarts,
+            failures: self.failures,
             error: self.error.clone(),
         }
     }

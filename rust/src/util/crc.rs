@@ -1,0 +1,59 @@
+//! CRC-32 (IEEE 802.3, the zlib/gzip polynomial) — in-tree because the
+//! build is fully offline (no crc32fast in the vendored registry).
+//!
+//! Used by the checkpoint layer to detect truncated or bit-flipped
+//! `.ckpt.bin` blobs: the length check alone cannot see a flipped bit,
+//! and a corrupt parameter vector would otherwise load silently and
+//! train garbage.
+
+/// Byte-at-a-time table, built at compile time (reflected 0xEDB88320).
+const TABLE: [u32; 256] = build_table();
+
+const fn build_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+/// CRC-32 of `bytes` (init 0xFFFFFFFF, final xor 0xFFFFFFFF — the
+/// standard zlib convention, so values match `python -c "import zlib;
+/// print(zlib.crc32(data))"`).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // the canonical CRC-32 check value
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"a"), 0xE8B7_BE43);
+    }
+
+    #[test]
+    fn detects_single_bit_flip() {
+        let mut data = vec![0u8; 4096];
+        data.iter_mut().enumerate().for_each(|(i, b)| *b = (i % 251) as u8);
+        let clean = crc32(&data);
+        data[2048] ^= 0x10;
+        assert_ne!(crc32(&data), clean);
+    }
+}

@@ -1,8 +1,9 @@
 //! In-tree substrates replacing unavailable external crates (the build is
 //! fully offline — see DESIGN.md §6): a JSON codec, a micro-bench harness,
-//! a flag parser, and a seeded property-testing helper.
+//! a flag parser, a CRC-32, and a seeded property-testing helper.
 
 pub mod args;
 pub mod bench;
+pub mod crc;
 pub mod json;
 pub mod proptest;

@@ -65,6 +65,7 @@ pub fn run_one(rt: &Runtime, spec: &RunSpec) -> Result<History> {
         target_loss: None,
         schedule: Default::default(),
         run_seed: spec.run_seed,
+        diverge_ema_factor: None,
         verbose: false,
     };
     let mut trainer = Trainer::with_opts(

@@ -1,0 +1,317 @@
+//! Fault-injection and auto-recovery integration tests: divergence
+//! guards, checkpoint-write faults, corrupt-checkpoint fallback, restart
+//! exhaustion, retention, and the (ignored-by-default) chaos sweep that
+//! `make chaos` drives with a randomized plan seed.
+//!
+//! Requires `make artifacts` (the tiny-* models) to have run.
+
+use std::path::{Path, PathBuf};
+
+use fzoo::optim::OptimizerKind;
+use fzoo::runtime::FaultPlan;
+use fzoo::serve::{list_checkpoints, Event, RunManager, RunPhase, RunSpec};
+
+fn artifacts() -> PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("fzoo-recovery-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn spec(name: &str, steps: u64, dir: &Path, every: u64, max_restarts: u64) -> RunSpec {
+    let mut s = RunSpec::new("tiny-enc", "sst2", OptimizerKind::fzoo(1e-3, 1e-3), steps).seed(1);
+    s.name = name.into();
+    s.checkpoint_every = every;
+    s.checkpoint_dir = Some(dir.to_string_lossy().into_owned());
+    s.max_restarts = max_restarts;
+    s
+}
+
+#[test]
+fn forced_nan_trips_divergence_guard_and_recovers() {
+    // The 'nonfinite_loss' site forces NaN out of step index 4 — the
+    // first step after the 4-step checkpoint: the divergence guard must
+    // classify it (diverged, not transient), the poisoned step must NOT
+    // be recorded, and the supervisor must roll back to that checkpoint
+    // and replay indices 4..=7 cleanly (the rule fires only once).
+    let dir = tmp_dir("nan");
+    let plan = FaultPlan::from_json_str(
+        r#"{"seed": 1, "rules": [{"site": "nonfinite_loss", "at_step": 4}]}"#,
+    )
+    .unwrap();
+    let mgr = RunManager::start_with_faults(artifacts(), Some(plan)).unwrap();
+    let c = mgr.client();
+    let h = c.submit(spec("nan", 8, &dir, 2, 1)).unwrap();
+    c.train_steps(h.id, 8).unwrap();
+
+    let mut steps = Vec::new();
+    let mut recovered = None;
+    loop {
+        match h.next_event() {
+            Some(Event::Step(r)) => {
+                assert!(r.loss.is_finite(), "NaN step must not be recorded");
+                steps.push(r.step);
+            }
+            Some(Event::Checkpoint { .. }) => {}
+            Some(Event::Recovered { step, cause, .. }) => recovered = Some((step, cause)),
+            Some(Event::Finished(_)) => break,
+            other => panic!("unexpected event {other:?}"),
+        }
+    }
+    let (rb_step, cause) = recovered.expect("a Recovered event");
+    assert_eq!(rb_step, 4);
+    assert!(cause.contains("diverged"), "classification: {cause}");
+    assert!(cause.contains("non-finite"), "detail: {cause}");
+    assert_eq!(steps, vec![0, 1, 2, 3, 4, 5, 6, 7], "no duplicate or lost step records");
+
+    let st = c.status().unwrap();
+    let s = st.iter().find(|x| x.id == h.id).unwrap();
+    assert_eq!(s.phase, RunPhase::Finished);
+    assert_eq!((s.restarts, s.failures), (1, 1));
+    mgr.shutdown().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn ema_explosion_fails_run_as_diverged() {
+    // With diverge_ema_factor < 1 any non-improving EMA step counts as an
+    // explosion, so the guard is guaranteed to trip early in a run whose
+    // per-batch losses fluctuate. No restarts: the run must fail
+    // terminally with the 'diverged' classification.
+    let mgr = RunManager::start(artifacts()).unwrap();
+    let c = mgr.client();
+    let mut s =
+        RunSpec::new("tiny-enc", "sst2", OptimizerKind::fzoo(1e-4, 1e-3), 40).seed(2);
+    s.name = "ema".into();
+    s.diverge_ema_factor = Some(0.5);
+    let h = c.submit(s).unwrap();
+    c.train_steps(h.id, 40).unwrap();
+
+    let err = h.wait().unwrap_err().to_string();
+    assert!(err.contains("failed"), "unexpected error: {err}");
+    let st = c.status().unwrap();
+    let s = st.iter().find(|x| x.id == h.id).unwrap();
+    assert_eq!(s.phase, RunPhase::Failed);
+    let msg = s.error.clone().unwrap();
+    assert!(msg.contains("diverged"), "classification: {msg}");
+    assert!(msg.contains("EMA"), "detail names the tripped guard: {msg}");
+    mgr.shutdown().unwrap();
+}
+
+#[test]
+fn corrupt_newest_checkpoint_falls_back_to_older() {
+    // Recovery must not trust the newest checkpoint blindly: corrupt its
+    // blob on disk (CRC catches it) and the rollback lands on the older
+    // valid one instead.
+    let dir = tmp_dir("corrupt");
+    let plan = FaultPlan::from_json_str(
+        r#"{"seed": 1, "rules": [{"site": "execute", "at_step": 6}]}"#,
+    )
+    .unwrap();
+    let mgr = RunManager::start_with_faults(artifacts(), Some(plan)).unwrap();
+    let c = mgr.client();
+    let h = c.submit(spec("corrupt", 8, &dir, 2, 1)).unwrap();
+
+    // run the first 6 steps (checkpoints at 2, 4, 6), then park
+    c.train_steps(h.id, 6).unwrap();
+    let mut newest = None;
+    let mut seen = 0;
+    while seen < 6 || newest.is_none() {
+        match h.next_event() {
+            Some(Event::Step(_)) => seen += 1,
+            Some(Event::Checkpoint { step: 6, path }) => newest = Some(path),
+            Some(Event::Checkpoint { .. }) => {}
+            other => panic!("unexpected event {other:?}"),
+        }
+    }
+    // flip one blob byte of the step-6 checkpoint: load must reject it
+    let bin = PathBuf::from(newest.unwrap()).with_extension("bin");
+    let mut bytes = std::fs::read(&bin).unwrap();
+    bytes[8] ^= 0x01;
+    std::fs::write(&bin, &bytes).unwrap();
+
+    // resume: step index 6 hits the injected fault immediately; recovery
+    // skips the corrupt step-6 checkpoint and rolls back to step 4
+    c.train_steps(h.id, 2).unwrap();
+    let mut recovered = None;
+    let mut replayed = Vec::new();
+    loop {
+        match h.next_event() {
+            Some(Event::Step(r)) => replayed.push(r.step),
+            Some(Event::Checkpoint { .. }) => {}
+            Some(Event::Recovered { step, from_checkpoint, .. }) => {
+                recovered = Some((step, from_checkpoint));
+            }
+            Some(Event::Finished(_)) => break,
+            other => panic!("unexpected event {other:?}"),
+        }
+    }
+    let (rb_step, rb_from) = recovered.expect("a Recovered event");
+    assert_eq!(rb_step, 4, "corrupt step-6 checkpoint must be skipped");
+    assert!(rb_from.unwrap().contains("step4"), "fell back to the step-4 pair");
+    assert_eq!(replayed, vec![4, 5, 6, 7]);
+    mgr.shutdown().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn checkpoint_write_fault_rolls_back() {
+    // A failed checkpoint *write* is just another transient step failure:
+    // the fault fires before any bytes land (no torn files), and the run
+    // rolls back to the last checkpoint that did get written.
+    let dir = tmp_dir("ckw");
+    // after: 1 skips the first matching write (step 2) and fires on the
+    // second (step 4); max defaults to 1 so the replayed write succeeds
+    let plan = FaultPlan::from_json_str(
+        r#"{"seed": 1, "rules": [{"site": "checkpoint_write", "after": 1}]}"#,
+    )
+    .unwrap();
+    let mgr = RunManager::start_with_faults(artifacts(), Some(plan)).unwrap();
+    let c = mgr.client();
+    let h = c.submit(spec("ckw", 6, &dir, 2, 1)).unwrap();
+    c.train_steps(h.id, 6).unwrap();
+
+    let mut steps = Vec::new();
+    let mut recovered = None;
+    loop {
+        match h.next_event() {
+            Some(Event::Step(r)) => steps.push(r.step),
+            Some(Event::Checkpoint { .. }) => {}
+            Some(Event::Recovered { step, cause, .. }) => recovered = Some((step, cause)),
+            Some(Event::Finished(_)) => break,
+            other => panic!("unexpected event {other:?}"),
+        }
+    }
+    let (rb_step, cause) = recovered.expect("a Recovered event");
+    assert_eq!(rb_step, 2, "only the step-2 checkpoint exists to roll back to");
+    assert!(cause.contains("transient"), "classification: {cause}");
+    assert!(cause.contains("checkpoint_write"), "site in cause: {cause}");
+    // step index 3 completed (and streamed) before its checkpoint write
+    // failed, so the stream shows 0..=3, then the replay 2..=5
+    assert_eq!(steps, vec![0, 1, 2, 3, 2, 3, 4, 5]);
+    mgr.shutdown().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn max_restarts_exhausted_preserves_first_cause() {
+    // An unlimited fault pinned to step 3 defeats every rollback; after
+    // max_restarts = 2 the run fails for good, and the terminal error
+    // carries both the restart count and the original classified cause.
+    let dir = tmp_dir("exhaust");
+    let plan = FaultPlan::from_json_str(
+        r#"{"seed": 1, "rules": [{"site": "execute", "at_step": 3, "max": 0}]}"#,
+    )
+    .unwrap();
+    let mgr = RunManager::start_with_faults(artifacts(), Some(plan)).unwrap();
+    let c = mgr.client();
+    let h = c.submit(spec("exhaust", 6, &dir, 2, 2)).unwrap();
+    c.train_steps(h.id, 6).unwrap();
+
+    let err = h.wait().unwrap_err().to_string();
+    assert!(err.contains("failed"), "unexpected error: {err}");
+    let st = c.status().unwrap();
+    let s = st.iter().find(|x| x.id == h.id).unwrap();
+    assert_eq!(s.phase, RunPhase::Failed);
+    assert_eq!((s.restarts, s.failures), (2, 3), "2 rollbacks, 3 classified failures");
+    let msg = s.error.clone().unwrap();
+    assert!(msg.contains("transient"), "classification survives: {msg}");
+    assert!(msg.contains("injected fault"), "original cause survives: {msg}");
+    assert!(msg.contains("after 2 restarts"), "restart count in terminal error: {msg}");
+    assert!(msg.contains("first failure"), "first cause preserved: {msg}");
+    mgr.shutdown().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn keep_last_prunes_checkpoints_during_run() {
+    // keep_last: 2 with checkpoints at 2/4/6/8 leaves exactly the step-6
+    // and step-8 pairs when the run finishes.
+    let dir = tmp_dir("keep");
+    let mgr = RunManager::start(artifacts()).unwrap();
+    let c = mgr.client();
+    let mut s = spec("keep", 8, &dir, 2, 0);
+    s.keep_last = 2;
+    let h = c.submit(s).unwrap();
+    c.train_steps(h.id, 8).unwrap();
+    h.wait().unwrap();
+
+    let kept = list_checkpoints(&dir, "keep").unwrap();
+    let steps: Vec<u64> = kept.iter().map(|(s, _)| *s).collect();
+    assert_eq!(steps, vec![8, 6], "newest 2 pairs survive, oldest are pruned");
+    for (_, json_path) in &kept {
+        assert!(json_path.with_extension("bin").exists(), "blob kept with its metadata");
+    }
+    let files = std::fs::read_dir(&dir).unwrap().count();
+    assert_eq!(files, 4, "exactly 2 json + 2 bin files remain");
+    mgr.shutdown().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// One chaos pass: run a supervised job under a probabilistic fault plan
+/// and flatten everything observable into a comparable transcript.
+fn chaos_transcript(seed: u64) -> Vec<String> {
+    let dir = tmp_dir(&format!("chaos-{seed}"));
+    let plan = FaultPlan::from_json_str(&format!(
+        r#"{{"seed": {seed}, "rules": [
+            {{"site": "execute", "p": 0.05, "max": 0}},
+            {{"site": "to_host", "p": 0.03, "max": 0}},
+            {{"site": "checkpoint_write", "p": 0.2, "max": 0}}
+        ]}}"#
+    ))
+    .unwrap();
+    let mgr = RunManager::start_with_faults(artifacts(), Some(plan)).unwrap();
+    let c = mgr.client();
+    let mut s = spec("chaos", 12, &dir, 3, 8);
+    s.keep_last = 3;
+    let h = c.submit(s).unwrap();
+    c.train_steps(h.id, 12).unwrap();
+
+    let mut out = Vec::new();
+    loop {
+        match h.next_event() {
+            Some(Event::Step(r)) => out.push(format!("step {} {:08x}", r.step, r.loss.to_bits())),
+            Some(Event::Checkpoint { step, .. }) => out.push(format!("ckpt {step}")),
+            Some(Event::Recovered { step, cause, .. }) => {
+                out.push(format!("recovered {step}: {cause}"));
+            }
+            Some(Event::Finished(hist)) => {
+                out.push(format!("finished {}", hist.steps_run));
+                break;
+            }
+            Some(Event::Failed(e)) => {
+                out.push(format!("failed: {e}"));
+                break;
+            }
+            None => {
+                out.push("stream closed".into());
+                break;
+            }
+        }
+    }
+    mgr.shutdown().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+    out
+}
+
+#[test]
+#[ignore = "chaos sweep: run via `make chaos` (FZOO_CHAOS_SEED picks the plan seed)"]
+fn chaos_sweep_is_deterministic_per_seed() {
+    // Whatever a seeded probabilistic plan does to a run — every fault,
+    // every rollback, every recovered step, even a terminal failure — two
+    // executions under the same seed must transcribe identically.
+    let seed: u64 = std::env::var("FZOO_CHAOS_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC4A05);
+    let a = chaos_transcript(seed);
+    let b = chaos_transcript(seed);
+    println!("chaos seed {seed}: {} events", a.len());
+    for line in &a {
+        println!("  {line}");
+    }
+    assert_eq!(a, b, "fault plan seed {seed} must reproduce the identical run");
+}

@@ -4,13 +4,13 @@
 //!
 //! Requires `make artifacts` (the tiny-* models) to have run.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use fzoo::coordinator::{TrainOpts, Trainer};
 use fzoo::data::TaskKind;
 use fzoo::optim::{FzooModeCfg, Objective, OptimizerKind};
-use fzoo::runtime::{Runtime, Session};
-use fzoo::serve::{Event, RunManager, RunPhase, RunSpec};
+use fzoo::runtime::{FaultPlan, Runtime, Session};
+use fzoo::serve::{Checkpoint, Event, RunManager, RunPhase, RunSpec, WorkerGone};
 
 fn artifacts() -> PathBuf {
     std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
@@ -166,8 +166,13 @@ fn shutdown_while_training_is_clean() {
             Some(other) => panic!("unexpected terminal event after shutdown: {other:?}"),
         }
     }
-    // the worker is gone: requests fail instead of hanging
-    assert!(c.status().is_err());
+    // the worker is gone: requests fail with the typed disconnect error
+    // instead of hanging forever on a reply that will never come
+    let err = c.status().unwrap_err();
+    assert!(
+        err.downcast_ref::<WorkerGone>().is_some(),
+        "expected a typed WorkerGone error, got: {err:#}"
+    );
 }
 
 #[test]
@@ -217,6 +222,136 @@ fn failed_run_is_isolated_and_reported() {
     assert_eq!(g.phase, RunPhase::Finished);
     assert_eq!(g.steps_run, 6);
     assert!(c.train_steps(bad.id, 1).is_err());
+    mgr.shutdown().unwrap();
+}
+
+#[test]
+fn injected_execute_fault_recovers_bit_identical() {
+    // The headline fault-tolerance guarantee: a transient executable
+    // failure after a checkpoint rolls the run back to that checkpoint
+    // and the recovered run is indistinguishable — same per-step loss
+    // series, same final trainable/optimizer state, bit for bit.
+    // ZO-Adam makes this the strictest version of the claim (device
+    // moments + step counter must all survive the rollback).
+    let kind = OptimizerKind::by_name("zo-adam", 1e-4, 1e-3).unwrap();
+    let dir = std::env::temp_dir().join(format!("fzoo-serve-fault-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // one deterministic fault: the 'execute' site blows up on step index
+    // 6 of the run named "faulted" — the first step attempted after the
+    // 6-step checkpoint exists, so the replay starts exactly there
+    let plan = FaultPlan::from_json_str(
+        r#"{"seed": 7, "rules": [{"site": "execute", "run": "faulted", "at_step": 6}]}"#,
+    )
+    .unwrap();
+    let mgr = RunManager::start_with_faults(artifacts(), Some(plan)).unwrap();
+    let c = mgr.client();
+
+    // reference run: same model/task/optimizer/seed, untouched by the
+    // plan (the rule is scoped to the other run's name)
+    let mut clean = spec("tiny-enc", "sst2", kind.clone(), 10, 3);
+    clean.name = "clean".into();
+    clean.checkpoint_every = 3;
+    clean.checkpoint_dir = Some(dir.to_string_lossy().into_owned());
+    let hc = c.submit(clean).unwrap();
+    c.train_steps(hc.id, 10).unwrap();
+    let clean_hist = hc.wait().unwrap();
+    assert_eq!(clean_hist.steps_run, 10);
+
+    let mut faulted = spec("tiny-enc", "sst2", kind, 10, 3);
+    faulted.name = "faulted".into();
+    faulted.checkpoint_every = 3;
+    faulted.checkpoint_dir = Some(dir.to_string_lossy().into_owned());
+    faulted.max_restarts = 1;
+    let hf = c.submit(faulted).unwrap();
+    c.train_steps(hf.id, 10).unwrap();
+
+    let mut records = Vec::new();
+    let mut recovered = None;
+    loop {
+        match hf.next_event() {
+            Some(Event::Step(r)) => records.push(r),
+            Some(Event::Checkpoint { .. }) => {}
+            Some(Event::Recovered { step, from_checkpoint, cause }) => {
+                recovered = Some((step, from_checkpoint, cause));
+            }
+            Some(Event::Finished(_)) => break,
+            other => panic!("unexpected event {other:?}"),
+        }
+    }
+    let (rb_step, rb_from, rb_cause) = recovered.expect("a Recovered event");
+    assert_eq!(rb_step, 6, "rollback lands on the newest checkpoint");
+    assert!(rb_from.is_some(), "recovery used a checkpoint, not scratch");
+    assert!(rb_cause.contains("transient"), "classified cause: {rb_cause}");
+    assert!(rb_cause.contains("injected fault"), "cause names the fault: {rb_cause}");
+
+    // the streamed step series (indices 0..=5 before the fault, 6..=9
+    // after the rollback) is bit-identical to the unfaulted run's
+    assert_eq!(records.len(), clean_hist.records.len());
+    for (f, cl) in records.iter().zip(&clean_hist.records) {
+        assert_eq!(f.step, cl.step);
+        assert_eq!(
+            f.loss.to_bits(),
+            cl.loss.to_bits(),
+            "step {}: faulted {} vs clean {}",
+            f.step,
+            f.loss,
+            cl.loss
+        );
+        assert_eq!(f.forwards, cl.forwards, "forward accounting survives rollback");
+    }
+
+    // final device state: export both runs through the checkpoint
+    // boundary and compare everything that defines the run
+    let pf = c.checkpoint(hf.id).unwrap();
+    let pc = c.checkpoint(hc.id).unwrap();
+    let cf = Checkpoint::load(Path::new(&pf)).unwrap();
+    let cc = Checkpoint::load(Path::new(&pc)).unwrap();
+    assert_eq!(cf.step, 10);
+    assert_eq!(cc.step, 10);
+    assert_eq!(cf.trainable.len(), cc.trainable.len());
+    for (i, (a, b)) in cf.trainable.iter().zip(&cc.trainable).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "trainable[{i}]: {a} vs {b}");
+    }
+    assert_eq!(cf.optimizer, cc.optimizer, "optimizer state (Adam moments) matches");
+
+    // supervision counters tell the story
+    let st = c.status().unwrap();
+    let f = st.iter().find(|s| s.id == hf.id).unwrap();
+    let g = st.iter().find(|s| s.id == hc.id).unwrap();
+    assert_eq!(f.phase, RunPhase::Finished);
+    assert_eq!((f.restarts, f.failures), (1, 1));
+    assert_eq!((g.restarts, g.failures), (0, 0));
+    mgr.shutdown().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn unrecovered_fault_fails_with_classified_cause() {
+    // Same injected fault, but recovery disabled (max_restarts = 0, the
+    // default): the run must fail terminally and the classified cause
+    // must survive into both the handle error and the status table.
+    let plan =
+        FaultPlan::from_json_str(r#"{"seed": 7, "rules": [{"site": "execute", "at_step": 3}]}"#)
+            .unwrap();
+    let mgr = RunManager::start_with_faults(artifacts(), Some(plan)).unwrap();
+    let c = mgr.client();
+    let h = c
+        .submit(spec("tiny-enc", "sst2", OptimizerKind::fzoo(1e-3, 1e-3), 6, 0))
+        .unwrap();
+    c.train_steps(h.id, 6).unwrap();
+
+    let err = h.wait().unwrap_err().to_string();
+    assert!(err.contains("failed"), "unexpected error: {err}");
+
+    let st = c.status().unwrap();
+    let s = st.iter().find(|x| x.id == h.id).unwrap();
+    assert_eq!(s.phase, RunPhase::Failed);
+    assert_eq!((s.restarts, s.failures), (0, 1));
+    let msg = s.error.clone().unwrap();
+    assert!(msg.contains("transient"), "classification in cause: {msg}");
+    assert!(msg.contains("injected fault"), "fault identity in cause: {msg}");
+    assert!(msg.contains("execute"), "fault site in cause: {msg}");
     mgr.shutdown().unwrap();
 }
 

@@ -4,9 +4,12 @@
 #   1. cargo fmt --check          — formatting drift
 #   2. cargo clippy -D warnings   — lints, warnings are errors
 #   3. tier-1                     — cargo build --release && cargo test -q
+#   4. chaos (pinned seed)        — fault-plan sweep determinism; the
+#      randomized version is `make chaos` (FZOO_CHAOS_SEED to replay)
 #
 # The Rust tests need the AOT artifacts (`make artifacts`) for the
-# integration/invariant suites; unit tests run without them.
+# integration/invariant suites (serve, recovery, invariants); unit tests
+# run without them.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -19,5 +22,9 @@ cargo clippy --all-targets -- -D warnings
 echo "== tier-1: cargo build --release && cargo test -q =="
 cargo build --release
 cargo test -q
+
+echo "== chaos: fault-plan sweep, seed ${FZOO_CHAOS_SEED:-51717} =="
+FZOO_CHAOS_SEED="${FZOO_CHAOS_SEED:-51717}" \
+    cargo test -q --test recovery -- --ignored chaos
 
 echo "check: all gates passed"
