@@ -1,6 +1,6 @@
 PY ?= python3
 
-.PHONY: artifacts check chaos ci pytest
+.PHONY: artifacts check chaos ci metrics-smoke pytest
 
 # AOT-compile the model graphs + manifest (python/compile/aot.py).
 # Incremental; use FORCE=1 to rebuild everything.
@@ -23,6 +23,12 @@ ci: artifacts
 chaos:
 	FZOO_CHAOS_SEED=$${FZOO_CHAOS_SEED:-$$(od -An -N4 -tu4 /dev/urandom | tr -d ' ')} \
 		cargo test --test recovery -- --ignored --nocapture chaos
+
+# Serve-and-scrape smoke: a tiny serve job with --metrics-addr, polled
+# with curl until fzoo_forward_passes_total goes live (then killed).
+# Needs target/release/fzoo and the tiny artifacts.
+metrics-smoke:
+	./scripts/metrics_smoke.sh
 
 # Build-time (Python) test suite.
 pytest:

@@ -5,6 +5,7 @@
 use fzoo::data::{Batcher, TaskKind};
 use fzoo::optim::sample_std;
 use fzoo::runtime::ModelConfig;
+use fzoo::telemetry::{HistogramSpec, Registry};
 use fzoo::util::bench::{black_box, Bench};
 use fzoo::zorng::{rademacher_sign, SplitMix64};
 
@@ -76,5 +77,42 @@ fn main() {
             acc ^= r.next_u64();
         }
         black_box(acc);
+    });
+
+    // Telemetry hot-path cost: everything the instrumented step path does
+    // per step is a handful of these operations (relaxed atomics + one
+    // `Instant::now()` pair per span), so *_1m means ≈1e6 steps' worth of
+    // instrumentation — backing the "< 2% step overhead" budget.
+    let reg = Registry::new();
+    let ctr = reg.counter("bench_ops_total", "", &[("run", "bench")]);
+    b.run("telemetry_counter_add_1m", || {
+        for _ in 0..1_000_000 {
+            ctr.add(1.0);
+        }
+        black_box(ctr.value());
+    });
+    let hist = reg.histogram(
+        "bench_seconds",
+        "",
+        &[("run", "bench")],
+        HistogramSpec::duration(),
+    );
+    b.run("telemetry_histogram_observe_1m", || {
+        for i in 0..1_000_000u32 {
+            hist.observe(1e-4 * (1.0 + f64::from(i % 64)));
+        }
+        black_box(hist.count());
+    });
+    b.run("telemetry_span_100k", || {
+        for _ in 0..100_000 {
+            let span = hist.span();
+            black_box(span.finish());
+        }
+    });
+    b.run("telemetry_handle_resolve_1k", || {
+        // the lazy path optimizers take once, never per step
+        for _ in 0..1_000 {
+            black_box(reg.counter("bench_ops_total", "", &[("run", "bench")]).value());
+        }
     });
 }

@@ -93,6 +93,7 @@ impl TrainConfig {
             schedule: self.schedule,
             run_seed: self.run_seed,
             diverge_ema_factor: self.diverge_ema_factor,
+            run_name: None,
             verbose: true,
         }
     }
@@ -123,9 +124,17 @@ impl TrainConfig {
 /// `max_restarts`, `restart_backoff`, `keep_last` and
 /// `diverge_ema_factor` may likewise be set at file level as defaults for
 /// jobs that omit them (see the README's "Failure semantics" section).
+/// `metrics_addr` / `metrics_interval_s` configure the telemetry exports
+/// (Prometheus listener address and the per-run JSONL flush period; see
+/// the README's "Observability" section) — `--metrics-addr` /
+/// `--metrics-interval-s` on the CLI win over the file.
 #[derive(Debug, Clone)]
 pub struct JobFile {
     pub artifacts: String,
+    /// Bind address for the Prometheus text endpoint (None = off).
+    pub metrics_addr: Option<String>,
+    /// Seconds between JSONL metrics snapshots (default 5).
+    pub metrics_interval_s: u64,
     pub jobs: Vec<crate::serve::RunSpec>,
 }
 
@@ -198,6 +207,12 @@ impl JobFile {
         }
         Ok(Self {
             artifacts: opt_str(&v, "artifacts")?.unwrap_or_else(|| "artifacts".into()),
+            metrics_addr: opt_str(&v, "metrics_addr")?,
+            metrics_interval_s: v
+                .get("metrics_interval_s")
+                .map(|x| x.as_u64())
+                .transpose()?
+                .unwrap_or(5),
             jobs,
         })
     }
@@ -290,6 +305,7 @@ mod tests {
             r#"{"artifacts":"arts","checkpoint_dir":"ck","log_dir":"runs",
                 "max_restarts":2,"restart_backoff":3,"keep_last":5,
                 "diverge_ema_factor":8.0,
+                "metrics_addr":"127.0.0.1:9464","metrics_interval_s":2,
                 "jobs":[
                   {"name":"a","model":"tiny-enc","task":"sst2",
                    "optimizer":{"kind":"fzoo","lr":1e-3,"eps":1e-3},
@@ -302,6 +318,8 @@ mod tests {
         )
         .unwrap();
         assert_eq!(f.artifacts, "arts");
+        assert_eq!(f.metrics_addr.as_deref(), Some("127.0.0.1:9464"));
+        assert_eq!(f.metrics_interval_s, 2);
         assert_eq!(f.jobs.len(), 2);
         assert_eq!(f.jobs[0].checkpoint_dir.as_deref(), Some("ck"));
         assert_eq!(f.jobs[0].log_path.as_deref(), Some("runs/a.jsonl"));

@@ -15,7 +15,7 @@
 //! interleaving runs cannot change any run's numbers: a multiplexed run
 //! produces the bit-identical loss series it would produce alone.
 
-use std::time::Instant;
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -23,6 +23,7 @@ use crate::data::{Batcher, Task};
 use crate::optim::{Optimizer, OptimizerKind};
 use crate::runtime::fault::{InjectedFault, Transient};
 use crate::runtime::{FaultSite, Runtime, Session};
+use crate::telemetry::{names, Counter, Gauge, Histogram, HistogramSpec, Registry};
 use crate::util::json::Value;
 
 use super::metrics::{evaluate, EvalOut};
@@ -41,6 +42,9 @@ pub struct TrainOpts {
     /// exceeds `factor ×` its best (lowest) value so far. `None` disables
     /// the explosion check; a non-finite loss always trips the guard.
     pub diverge_ema_factor: Option<f64>,
+    /// Telemetry label for this run's metric series (`run="…"`). `None`
+    /// derives `<model>-<task>-s<seed>`, matching `RunSpec::display_name`.
+    pub run_name: Option<String>,
     /// print progress lines
     pub verbose: bool,
 }
@@ -55,7 +59,71 @@ impl Default for TrainOpts {
             schedule: LrSchedule::Constant,
             run_seed: 0,
             diverge_ema_factor: None,
+            run_name: None,
             verbose: false,
+        }
+    }
+}
+
+/// Per-run metric handles, resolved once from the runtime's registry on
+/// the first step and then touched only as relaxed atomics. All series
+/// carry the `run` label so concurrent serve runs stay isolated.
+struct StepMetrics {
+    steps: Arc<Counter>,
+    forwards: Arc<Counter>,
+    forward_equiv: Arc<Counter>,
+    step_seconds: Arc<Histogram>,
+    phase_batch: Arc<Histogram>,
+    phase_optim: Arc<Histogram>,
+    phase_eval: Arc<Histogram>,
+    loss: Arc<Gauge>,
+    ema: Arc<Gauge>,
+    best_ema: Arc<Gauge>,
+    sigma: Arc<Histogram>,
+}
+
+impl StepMetrics {
+    fn resolve(reg: &Registry, run: &str) -> Self {
+        let dur = HistogramSpec::duration();
+        let l = [("run", run)];
+        let phase = |p: &str| {
+            reg.histogram(
+                names::STEP_PHASE,
+                "Step time split by phase (batch / optim / eval)",
+                &[("run", run), ("phase", p)],
+                dur,
+            )
+        };
+        Self {
+            steps: reg.counter(names::STEPS, "Optimizer steps completed", &l),
+            forwards: reg.counter(names::FORWARD_PASSES, "Actual model forward passes", &l),
+            forward_equiv: reg.counter(
+                names::FORWARD_EQUIV,
+                "Forward-equivalents (backward = 3 forwards)",
+                &l,
+            ),
+            step_seconds: reg.histogram(
+                names::STEP_DURATION,
+                "Full train-step wall time (incl. batch prep and scheduled eval)",
+                &l,
+                dur,
+            ),
+            phase_batch: phase("batch"),
+            phase_optim: phase("optim"),
+            phase_eval: phase("eval"),
+            loss: reg.gauge(names::TRAIN_LOSS, "Last recorded train loss", &l),
+            ema: reg.gauge(names::LOSS_EMA, "Moving-average train loss", &l),
+            best_ema: reg.gauge(
+                names::BEST_LOSS_EMA,
+                "Lowest loss EMA seen (divergence-guard baseline)",
+                &l,
+            ),
+            sigma: reg.histogram(
+                names::PROBE_SIGMA,
+                "Per-step probe-loss standard deviation (σ)",
+                &l,
+                HistogramSpec::wide(),
+            ),
         }
     }
 }
@@ -274,6 +342,9 @@ pub struct TrainLoop {
     best_ema: Option<f64>,
     next_step: u64,
     finished: bool,
+    /// Lazily resolved per-run metric handles (needs the runtime's
+    /// registry, which `new` does not see).
+    metrics: Option<Arc<StepMetrics>>,
 }
 
 impl TrainLoop {
@@ -299,8 +370,28 @@ impl TrainLoop {
             best_ema: None,
             next_step: 0,
             finished,
+            metrics: None,
             opts,
         }
+    }
+
+    /// The run label on every metric series this loop emits.
+    pub fn run_label(&self) -> String {
+        self.opts.run_name.clone().unwrap_or_else(|| {
+            format!(
+                "{}-{}-s{}",
+                self.history.model, self.history.task, self.opts.run_seed
+            )
+        })
+    }
+
+    fn metrics(&mut self, rt: &Runtime) -> Arc<StepMetrics> {
+        if let Some(m) = &self.metrics {
+            return m.clone();
+        }
+        let m = Arc::new(StepMetrics::resolve(rt.telemetry(), &self.run_label()));
+        self.metrics = Some(m.clone());
+        m
     }
 
     /// Restore the loop cursor and cumulative counters from a checkpoint.
@@ -382,11 +473,18 @@ impl TrainLoop {
             return Ok(StepOutcome::Finished);
         }
         let step = self.next_step;
-        let t_call = Instant::now();
+        let m = self.metrics(rt);
+        // Spans are the single timing source: `finish()` returns the same
+        // elapsed seconds it records, so the exported histograms,
+        // `StepRecord::wall_ms` and `History::total_wall_s` can never
+        // disagree.
+        let step_span = m.step_seconds.span();
         let scale = self.opts.schedule.scale(step, self.opts.steps);
         optimizer.set_lr_scale(scale);
+        let batch_span = m.phase_batch.span();
         let batch = batcher.next_train();
-        let t0 = Instant::now();
+        batch_span.finish();
+        let optim_span = m.phase_optim.span();
         // Bracket the step with its index so fault rules get
         // training-step precision (`at_step`); scope_step is a no-op
         // without an installed plan.
@@ -396,6 +494,7 @@ impl TrainLoop {
         rt.faults().scope_step(None);
         let mut out = res.map_err(|e| e.context(format!("train step {step}")))?;
         if forced_nan {
+            rt.metrics().fault_injected(FaultSite::NonFiniteLoss);
             out.loss = f32::NAN;
         }
         // Divergence guard, part 1: a non-finite loss poisons everything
@@ -408,9 +507,16 @@ impl TrainLoop {
                 detail: "non-finite loss".into(),
             }));
         }
-        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let wall_ms = optim_span.finish() * 1e3;
         self.forwards += out.forwards;
         self.forward_equiv += out.forward_equiv;
+        m.steps.inc();
+        m.forwards.add(out.forwards);
+        m.forward_equiv.add(out.forward_equiv);
+        m.loss.set(out.loss as f64);
+        if let Some(sigma) = out.sigma {
+            m.sigma.observe(sigma as f64);
+        }
         let record = StepRecord {
             step,
             loss: out.loss,
@@ -425,6 +531,7 @@ impl TrainLoop {
             Some(p) => 0.9 * p + 0.1 * out.loss as f64,
         };
         self.ema_loss = Some(ema);
+        m.ema.set(ema);
         self.history.steps_run = step + 1;
         self.next_step = step + 1;
         // Divergence guard, part 2: EMA explosion relative to the best
@@ -444,10 +551,15 @@ impl TrainLoop {
             }
             _ => self.best_ema = Some(ema),
         }
+        if let Some(best) = self.best_ema {
+            m.best_ema.set(best);
+        }
 
         let mut eval = None;
         if self.opts.eval_every > 0 && (step + 1) % self.opts.eval_every == 0 {
+            let eval_span = m.phase_eval.span();
             let ev = evaluate(rt, session, batcher, self.opts.eval_batches)?;
+            eval_span.finish();
             let er = EvalRecord {
                 step: step + 1,
                 accuracy: ev.accuracy,
@@ -485,7 +597,7 @@ impl TrainLoop {
         if self.next_step >= self.opts.steps {
             self.finished = true;
         }
-        self.history.total_wall_s += t_call.elapsed().as_secs_f64();
+        self.history.total_wall_s += step_span.finish();
         Ok(StepOutcome::Stepped { record, eval })
     }
 
@@ -503,7 +615,8 @@ impl TrainLoop {
         if self.opts.eval_batches > 0
             && self.history.evals.last().map(|e| e.step) != Some(self.history.steps_run)
         {
-            let t0 = Instant::now();
+            let m = self.metrics(rt);
+            let eval_span = m.phase_eval.span();
             let ev = evaluate(rt, session, batcher, self.opts.eval_batches)?;
             let er = EvalRecord {
                 step: self.history.steps_run,
@@ -512,7 +625,7 @@ impl TrainLoop {
                 loss: ev.loss,
             };
             self.history.evals.push(er);
-            self.history.total_wall_s += t0.elapsed().as_secs_f64();
+            self.history.total_wall_s += eval_span.finish();
             out = Some(er);
         }
         // Refresh the host mirror once so exporters/checkpoints read

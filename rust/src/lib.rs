@@ -32,6 +32,7 @@ pub mod memmodel;
 pub mod optim;
 pub mod runtime;
 pub mod serve;
+pub mod telemetry;
 pub mod util;
 pub mod xp;
 pub mod zorng;

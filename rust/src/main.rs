@@ -9,6 +9,10 @@
 //! fzoo mem                                   # Table-12-style memory model
 //! ```
 
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
 use anyhow::{bail, Result};
 
 use fzoo::config::{JobFile, TrainConfig};
@@ -18,6 +22,7 @@ use fzoo::memmodel;
 use fzoo::optim::OptimizerKind;
 use fzoo::runtime::{FaultPlan, Runtime, Session};
 use fzoo::serve::{Event, RunManager};
+use fzoo::telemetry::{names, HistogramSpec, JsonlExporter, MetricsServer, Registry};
 use fzoo::util::args::Args;
 
 const USAGE: &str = "\
@@ -32,11 +37,15 @@ USAGE:
              [--seed S] [--schedule constant|linear:E|cosine:M|warmup:N]
              [--log out.jsonl]
   fzoo serve --jobs jobs.json [--artifacts DIR] [--fault-plan plan.json]
+             [--metrics-addr HOST:PORT] [--metrics-interval-s N]
              # drive every job in the file concurrently over one runtime
              # (round-robin step multiplexing); per-run JSONL logs, periodic
              # checkpoints (checkpoint_every/resume_from) and a summary
              # table. --fault-plan installs a deterministic fault-injection
-             # plan (chaos testing). See README for both schemas.
+             # plan (chaos testing). --metrics-addr serves Prometheus text
+             # at /metrics; runs with a log also get a <run>.metrics.jsonl
+             # snapshot stream every N seconds (default 5). See the
+             # README's Observability section for schemas.
   fzoo eval  [--artifacts DIR] --model M --task T [--eval-batches N]
   fzoo info  [--artifacts DIR]
   fzoo mem
@@ -164,6 +173,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .to_string();
     let file = JobFile::from_file(&jobs_path)?;
     let artifacts = args.get_or("artifacts", &file.artifacts);
+    // CLI flags win over file-level metrics keys
+    let metrics_addr = args
+        .get("metrics-addr")
+        .map(|s| s.to_string())
+        .or_else(|| file.metrics_addr.clone());
+    let metrics_interval_s = match args.get_parse("metrics-interval-s")? {
+        Some(s) => s,
+        None => file.metrics_interval_s,
+    };
     let faults = match args.get("fault-plan") {
         Some(p) => {
             let plan = FaultPlan::from_file(p)?;
@@ -172,18 +190,31 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         None => None,
     };
-    let mgr = RunManager::start_with_faults(artifacts.as_str(), faults)?;
+    let telemetry = Arc::new(Registry::new());
+    let mgr = RunManager::start_with_telemetry(artifacts.as_str(), faults, telemetry.clone())?;
     let client = mgr.client();
     println!("serve: {} jobs from {jobs_path}", file.jobs.len());
+    let _metrics_server = match &metrics_addr {
+        Some(addr) => {
+            let srv = MetricsServer::start(addr.as_str(), telemetry.clone())?;
+            println!("metrics: http://{}/metrics", srv.addr());
+            Some(srv)
+        }
+        None => None,
+    };
 
     // Submit everything first (sessions open serially on the worker),
     // then credit each run its full plan — from there the scheduler
     // interleaves them at step granularity.
+    let mut exporter = JsonlExporter::new(telemetry.clone());
     let mut collectors = Vec::new();
     for spec in file.jobs {
         let name = spec.display_name();
         let steps = spec.steps;
         let log_path = spec.log_path.clone();
+        if let Some(p) = &log_path {
+            exporter.add_run(name.clone(), Path::new(p).with_extension("metrics.jsonl"));
+        }
         let handle = client.submit(spec)?;
         println!("  {} {name}: {} steps queued", handle.id, steps);
         client.train_steps(handle.id, steps)?;
@@ -259,19 +290,35 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ));
     }
 
+    let _flusher = if exporter.is_empty() {
+        None
+    } else {
+        Some(exporter.start(Duration::from_secs(metrics_interval_s.max(1))))
+    };
+
+    // Drain every collector first, then take ONE status snapshot while the
+    // runs are still resident — it carries the telemetry-derived
+    // throughput numbers for the summary table.
+    let mut results = Vec::new();
+    for (name, id, join, log_path) in collectors {
+        let outcome = join.join().map_err(|_| anyhow::anyhow!("collector panicked"))?;
+        results.push((name, id, outcome, log_path));
+    }
+    let status = client.status()?;
+
     println!(
-        "\n{:<28} {:>6} {:>9} {:>7} {:>7} {:>8}  log",
-        "run", "steps", "loss", "acc", "f1", "wall_s"
+        "\n{:<28} {:>6} {:>9} {:>7} {:>7} {:>8} {:>8} {:>8}  log",
+        "run", "steps", "loss", "acc", "f1", "wall_s", "fwd/s", "ms/step"
     );
     let mut failed = 0usize;
-    for (name, id, join, log_path) in collectors {
+    for (name, id, outcome, log_path) in results {
         let log = log_path.unwrap_or_else(|| "-".into());
-        let outcome = join.join().map_err(|_| anyhow::anyhow!("collector panicked"))?;
+        let st = status.iter().find(|s| s.id == id);
         // release the run's device-resident session/optimizer state
         let _ = client.remove(id);
         match outcome {
             Ok(h) => println!(
-                "{:<28} {:>6} {:>9.4} {:>7} {:>7} {:>8.1}  {log}",
+                "{:<28} {:>6} {:>9.4} {:>7} {:>7} {:>8.1} {:>8.1} {:>8.1}  {log}",
                 name,
                 h.steps_run,
                 h.last_loss(),
@@ -282,11 +329,37 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     .map(|f| format!("{f:.3}"))
                     .unwrap_or_else(|| "-".into()),
                 h.total_wall_s,
+                st.map(|s| s.forwards_per_sec).unwrap_or(0.0),
+                st.map(|s| s.mean_step_ms).unwrap_or(0.0),
             ),
             Err(e) => {
                 failed += 1;
                 println!("{name:<28} FAILED: {e:#}");
             }
+        }
+    }
+    // Per-run step-duration percentiles from the shared registry.
+    let mut percentiles = Vec::new();
+    for st in &status {
+        let h = telemetry.histogram(
+            names::STEP_DURATION,
+            "Executed training step duration in seconds",
+            &[("run", st.name.as_str())],
+            HistogramSpec::duration(),
+        );
+        if h.count() > 0 {
+            percentiles.push(format!(
+                "  {:<28} p50 {:>7.1}ms  p99 {:>7.1}ms",
+                st.name,
+                h.quantile(0.5) * 1e3,
+                h.quantile(0.99) * 1e3,
+            ));
+        }
+    }
+    if !percentiles.is_empty() {
+        println!("\nstep duration:");
+        for line in percentiles {
+            println!("{line}");
         }
     }
     mgr.shutdown()?;

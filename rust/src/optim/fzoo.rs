@@ -17,12 +17,23 @@
 //! only the N+1 probe losses and the N coefficients (scalars) cross the
 //! host↔device boundary per step.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::data::Batch;
 use crate::runtime::{scalar_f32, to_vec_f32, Runtime, Session};
+use crate::telemetry::{names, Counter};
 
 use super::{sample_std, step_seed, Objective, OptState, Optimizer, StepOut};
+
+/// Probe accounting, labeled by optimizer display name. Resolved lazily on
+/// the first step (the registry lives on the `Runtime`, which the
+/// constructor never sees) and cached for the hot path.
+struct FzooMetrics {
+    probe_batches: Arc<Counter>,
+    probe_losses: Arc<Counter>,
+}
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FzooMode {
@@ -48,6 +59,7 @@ pub struct Fzoo {
     prev_losses: Vec<f32>,
     /// guard against degenerate sigma (flat batch)
     pub min_sigma: f32,
+    metrics: Option<FzooMetrics>,
 }
 
 impl Fzoo {
@@ -69,7 +81,30 @@ impl Fzoo {
             run_seed,
             prev_losses: Vec::new(),
             min_sigma: 1e-12,
+            metrics: None,
         }
+    }
+
+    fn metrics(&mut self, rt: &Runtime) -> &FzooMetrics {
+        if self.metrics.is_none() {
+            let reg = rt.telemetry();
+            let name = self.name();
+            let labels = [("optimizer", name.as_str())];
+            self.metrics = Some(FzooMetrics {
+                probe_batches: reg.counter(
+                    names::PROBE_BATCHES,
+                    "Probe batches issued (one fused forward, or one \
+                     perturb+forward sweep in sequential mode)",
+                    &labels,
+                ),
+                probe_losses: reg.counter(
+                    names::PROBE_LOSSES,
+                    "Probe losses produced (N+1 per step)",
+                    &labels,
+                ),
+            });
+        }
+        self.metrics.as_ref().expect("just resolved")
     }
 
     /// Executable name for the fused probe. Non-default N selects the
@@ -206,6 +241,11 @@ impl Optimizer for Fzoo {
         let seed = step_seed(self.run_seed, step);
         let losses = self.probe(rt, s, batch, seed, self.n)?;
         anyhow::ensure!(losses.len() == self.n + 1, "probe returned {} losses", losses.len());
+        {
+            let m = self.metrics(rt);
+            m.probe_batches.inc();
+            m.probe_losses.add(losses.len() as f64);
+        }
         let l0 = losses[0];
         let ls = &losses[1..];
 

@@ -24,7 +24,7 @@ use xla::Literal;
 
 use super::fault::{FaultSite, FaultState, Transient};
 use super::manifest::{ExeSpec, IoSpec};
-use super::{lit_f32, to_vec_f32};
+use super::{lit_f32, to_vec_f32, RuntimeMetrics};
 
 // ---------------------------------------------------------------------------
 // DeviceVec
@@ -38,11 +38,22 @@ pub struct DeviceVec {
     buf: xla::PjRtBuffer,
     len: usize,
     faults: Arc<FaultState>,
+    metrics: Arc<RuntimeMetrics>,
 }
 
 impl DeviceVec {
-    pub(crate) fn from_buffer(buf: xla::PjRtBuffer, len: usize, faults: Arc<FaultState>) -> Self {
-        Self { buf, len, faults }
+    pub(crate) fn from_buffer(
+        buf: xla::PjRtBuffer,
+        len: usize,
+        faults: Arc<FaultState>,
+        metrics: Arc<RuntimeMetrics>,
+    ) -> Self {
+        Self {
+            buf,
+            len,
+            faults,
+            metrics,
+        }
     }
 
     /// Element count (f32s).
@@ -58,13 +69,16 @@ impl DeviceVec {
     /// reaches the host — an explicit sync point, never implicit.
     pub fn to_host(&self) -> Result<Vec<f32>> {
         if let Some(f) = self.faults.fire(FaultSite::ToHost) {
+            self.metrics.fault_injected(FaultSite::ToHost);
             return Err(anyhow::Error::new(f)
                 .context(format!("device -> host copy ({} f32s)", self.len)));
         }
+        let span = self.metrics.to_host_seconds.span();
         let lit = self.buf.to_literal_sync().map_err(|e| {
             anyhow::Error::new(Transient)
                 .context(format!("device -> host copy ({} f32s): {e}", self.len))
         })?;
+        span.finish();
         to_vec_f32(&lit)
     }
 
@@ -96,6 +110,9 @@ pub struct Executable {
     /// Shared fault hook from the owning `Runtime` — cached executables
     /// outlive plan installation, so they carry the `Arc`, not a snapshot.
     pub(crate) faults: Arc<FaultState>,
+    /// Shared runtime-level metric handles (bind/execute spans, injected
+    /// fault counters) — same `Arc` threading as `faults`.
+    pub(crate) metrics: Arc<RuntimeMetrics>,
 }
 
 impl Executable {
@@ -276,6 +293,7 @@ impl<'a> Call<'a> {
         );
         // Stage host-side args as Rust-owned buffers (freed on Drop);
         // device-resident args are borrowed in place.
+        let bind_span = exe.metrics.bind_seconds.span();
         let mut staged: Vec<Option<xla::PjRtBuffer>> = Vec::with_capacity(self.slots.len());
         for (slot, spec) in self.slots.iter().zip(&exe.spec.inputs) {
             staged.push(match slot.as_ref().unwrap() {
@@ -293,15 +311,19 @@ impl<'a> Call<'a> {
                 _ => st.as_ref().unwrap(),
             })
             .collect();
+        bind_span.finish();
         if let Some(f) = exe.faults.fire(FaultSite::Execute) {
+            exe.metrics.fault_injected(FaultSite::Execute);
             return Err(anyhow::Error::new(f).context(format!("executing {}", exe.name)));
         }
+        let exec_span = exe.metrics.execute_seconds.span();
         let bufs = exe.exe.execute_b::<&xla::PjRtBuffer>(&args).map_err(|e| {
             // A PJRT execute failure with validated shapes is an
             // environment fault (allocation, runtime), not a logic error:
             // mark it retryable for the serve supervisor.
             anyhow::Error::new(Transient).context(format!("executing {}: {e}", exe.name))
         })?;
+        exec_span.finish();
         anyhow::ensure!(
             !bufs.is_empty() && !bufs[0].is_empty(),
             "{}: execution returned no output buffers",
@@ -374,14 +396,24 @@ impl<'a> Call<'a> {
                 outs.len()
             );
             let buf = exe.stage(&outs.remove(0), "output")?;
-            Ok(DeviceVec::from_buffer(buf, out_spec.elems(), exe.faults.clone()))
+            Ok(DeviceVec::from_buffer(
+                buf,
+                out_spec.elems(),
+                exe.faults.clone(),
+                exe.metrics.clone(),
+            ))
         } else {
             let buf = bufs
                 .into_iter()
                 .next()
                 .and_then(|replica| replica.into_iter().next())
                 .expect("non-empty checked in execute");
-            Ok(DeviceVec::from_buffer(buf, out_spec.elems(), exe.faults.clone()))
+            Ok(DeviceVec::from_buffer(
+                buf,
+                out_spec.elems(),
+                exe.faults.clone(),
+                exe.metrics.clone(),
+            ))
         }
     }
 }

@@ -45,7 +45,6 @@ pub mod session;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
 
 use anyhow::{Context, Result};
 pub use exec::{Call, DeviceVec, Executable};
@@ -54,33 +53,101 @@ pub use manifest::{ExeSpec, IoSpec, Manifest, ModelConfig, ModelEntry};
 pub use session::Session;
 use xla::{Literal, PjRtClient};
 
+use crate::telemetry::{names, Counter, Histogram, HistogramSpec, Registry};
+
+/// Pre-resolved runtime-level metric handles, shared — exactly like
+/// [`FaultState`] — by the runtime, every cached [`Executable`] and every
+/// [`DeviceVec`] it creates. Hot-path updates are relaxed atomics on
+/// these `Arc`s; the registry mutex is paid once, here.
+pub struct RuntimeMetrics {
+    /// Per-graph `client.compile` wall time.
+    pub compile_seconds: Arc<Histogram>,
+    /// Input staging (literal uploads + binding) per execute call.
+    pub bind_seconds: Arc<Histogram>,
+    /// PJRT execute wall time.
+    pub execute_seconds: Arc<Histogram>,
+    /// Device→host transfer wall time.
+    pub to_host_seconds: Arc<Histogram>,
+    fault_execute: Arc<Counter>,
+    fault_to_host: Arc<Counter>,
+    fault_checkpoint: Arc<Counter>,
+    fault_nonfinite: Arc<Counter>,
+}
+
+impl RuntimeMetrics {
+    pub fn new(reg: &Registry) -> Self {
+        let dur = HistogramSpec::duration();
+        let hist = |name: &str, help: &str| reg.histogram(name, help, &[], dur);
+        let fault = |site: FaultSite| {
+            reg.counter(
+                names::FAULTS_INJECTED,
+                "Deterministic fault injections fired, by site",
+                &[("site", site.name())],
+            )
+        };
+        Self {
+            compile_seconds: hist(names::COMPILE_SECONDS, "Per-graph PJRT compile wall time"),
+            bind_seconds: hist(names::BIND_SECONDS, "Input staging time per execute call"),
+            execute_seconds: hist(names::EXECUTE_SECONDS, "PJRT execute wall time"),
+            to_host_seconds: hist(names::TO_HOST_SECONDS, "Device-to-host transfer wall time"),
+            fault_execute: fault(FaultSite::Execute),
+            fault_to_host: fault(FaultSite::ToHost),
+            fault_checkpoint: fault(FaultSite::CheckpointWrite),
+            fault_nonfinite: fault(FaultSite::NonFiniteLoss),
+        }
+    }
+
+    /// Count an injected fault at `site`.
+    pub fn fault_injected(&self, site: FaultSite) {
+        match site {
+            FaultSite::Execute => self.fault_execute.inc(),
+            FaultSite::ToHost => self.fault_to_host.inc(),
+            FaultSite::CheckpointWrite => self.fault_checkpoint.inc(),
+            FaultSite::NonFiniteLoss => self.fault_nonfinite.inc(),
+        }
+    }
+}
+
 /// Process-wide PJRT client + compiled-executable cache.
 pub struct Runtime {
     client: PjRtClient,
     root: PathBuf,
     pub manifest: Manifest,
     cache: Mutex<HashMap<(String, String), Arc<Executable>>>,
-    /// cumulative time spent in `client.compile` (startup cost accounting)
-    compile_seconds: Mutex<f64>,
     /// fault-injection hook, shared with every executable and device
     /// vector this runtime creates; inert until a plan is installed
     faults: Arc<FaultState>,
+    /// metric registry this runtime reports into (always present; callers
+    /// that never attach an exporter pay only relaxed-atomic updates)
+    telemetry: Arc<Registry>,
+    /// runtime-level handles resolved once from `telemetry`
+    metrics: Arc<RuntimeMetrics>,
 }
 
 impl Runtime {
     /// Load the manifest and start the CPU PJRT client. `dir` is the
     /// artifacts directory produced by `make artifacts`.
     pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        Self::load_with_telemetry(dir, Arc::new(Registry::new()))
+    }
+
+    /// Like [`Runtime::load`], but reporting into a caller-owned metric
+    /// registry — `serve::RunManager` creates the registry on the control
+    /// thread and hands it across the worker boundary (the registry is
+    /// plain `Send + Sync` data; nothing device-adjacent crosses back).
+    pub fn load_with_telemetry(dir: impl AsRef<Path>, telemetry: Arc<Registry>) -> Result<Self> {
         let root = dir.as_ref().to_path_buf();
         let manifest = Manifest::load(&root)?;
         let client = PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu client: {e}"))?;
+        let metrics = Arc::new(RuntimeMetrics::new(&telemetry));
         Ok(Self {
             client,
             root,
             manifest,
             cache: Mutex::new(HashMap::new()),
-            compile_seconds: Mutex::new(0.0),
             faults: Arc::new(FaultState::new()),
+            telemetry,
+            metrics,
         })
     }
 
@@ -103,8 +170,23 @@ impl Runtime {
         &self.root
     }
 
+    /// The metric registry this runtime reports into (exporters attach
+    /// here).
+    pub fn telemetry(&self) -> &Arc<Registry> {
+        &self.telemetry
+    }
+
+    /// Runtime-level metric handles (compile/bind/execute/to_host phases,
+    /// injected-fault counters).
+    pub fn metrics(&self) -> &Arc<RuntimeMetrics> {
+        &self.metrics
+    }
+
+    /// Cumulative `client.compile` wall time — the sum of the
+    /// `fzoo_compile_seconds` histogram, so the CLI's startup accounting
+    /// and the exported metric are the same measurement.
     pub fn compile_seconds(&self) -> f64 {
-        *self.compile_seconds.lock().unwrap()
+        self.metrics.compile_seconds.sum()
     }
 
     /// Upload a flat host vector into device memory. Parameters and
@@ -116,7 +198,7 @@ impl Runtime {
             .client
             .buffer_from_host_literal(None, &lit)
             .map_err(|e| anyhow::anyhow!("uploading {} f32s: {e}", data.len()))?;
-        Ok(DeviceVec::from_buffer(buf, data.len(), self.faults.clone()))
+        Ok(DeviceVec::from_buffer(buf, data.len(), self.faults.clone(), self.metrics.clone()))
     }
 
     /// Compile-on-demand with caching: one `PjRtLoadedExecutable` per
@@ -138,7 +220,7 @@ impl Runtime {
             })?
             .clone();
         let path = self.root.join(&spec.file);
-        let t0 = Instant::now();
+        let compile_span = self.metrics.compile_seconds.span();
         let proto = xla::HloModuleProto::from_text_file(&path)
             .map_err(|e| anyhow::anyhow!("loading HLO text {}: {e}", path.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
@@ -146,7 +228,7 @@ impl Runtime {
             .client
             .compile(&comp)
             .map_err(|e| anyhow::anyhow!("compiling {model}/{exe}: {e}"))?;
-        *self.compile_seconds.lock().unwrap() += t0.elapsed().as_secs_f64();
+        compile_span.finish();
         // Root contract: manifest v2 lowers single-output graphs with an
         // array root (device-returnable); v1 artifacts and multi-output
         // graphs are tuple-rooted.
@@ -157,6 +239,7 @@ impl Runtime {
             spec,
             tuple_root,
             faults: self.faults.clone(),
+            metrics: self.metrics.clone(),
         });
         self.cache.lock().unwrap().insert(key, wrapped.clone());
         Ok(wrapped)

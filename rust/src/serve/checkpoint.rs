@@ -82,8 +82,9 @@ impl Checkpoint {
     }
 
     /// Write `<dir>/<name>.step<N>.ckpt.{json,bin}`; returns the JSON path
-    /// (the handle `resume_from` takes).
-    pub fn write(&self, dir: &Path, name: &str) -> Result<PathBuf> {
+    /// (the handle `resume_from` takes) and the total bytes written across
+    /// both files (telemetry: `fzoo_checkpoint_bytes_total`).
+    pub fn write(&self, dir: &Path, name: &str) -> Result<(PathBuf, u64)> {
         std::fs::create_dir_all(dir)
             .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
         let stem = format!("{name}.step{}", self.step);
@@ -101,6 +102,7 @@ impl Checkpoint {
             }
         }
         let blob_crc = crc32(&blob);
+        let blob_bytes = blob.len() as u64;
         // Crash-safe: stage both files under .tmp names and rename into
         // place (bin first, json last), so a crash mid-write can never
         // destroy an existing good checkpoint of the same name.
@@ -160,11 +162,13 @@ impl Checkpoint {
             ("crc32", Value::num(blob_crc as f64)),
         ]);
         let json_tmp = dir.join(format!("{stem}.ckpt.json.tmp"));
-        std::fs::write(&json_tmp, doc.to_string())
+        let encoded = doc.to_string();
+        let json_bytes = encoded.len() as u64;
+        std::fs::write(&json_tmp, encoded)
             .with_context(|| format!("writing {}", json_tmp.display()))?;
         std::fs::rename(&json_tmp, &json_path)
             .with_context(|| format!("publishing {}", json_path.display()))?;
-        Ok(json_path)
+        Ok((json_path, blob_bytes + json_bytes))
     }
 
     /// Load a checkpoint pair from the JSON path.
@@ -361,8 +365,11 @@ mod tests {
                 ],
             },
         };
-        let path = ck.write(&dir, "a").unwrap();
+        let (path, bytes) = ck.write(&dir, "a").unwrap();
         assert!(path.to_string_lossy().ends_with("a.step5.ckpt.json"));
+        let on_disk = std::fs::metadata(&path).unwrap().len()
+            + std::fs::metadata(dir.join("a.step5.ckpt.bin")).unwrap().len();
+        assert_eq!(bytes, on_disk, "reported bytes match the pair on disk");
         let got = Checkpoint::load(&path).unwrap();
         assert_eq!(got.model, ck.model);
         assert!(got.pretrained);
@@ -392,7 +399,7 @@ mod tests {
             optimizer_name: "FZOO(N=4)".into(),
             optimizer: OptState::default(),
         };
-        let path = ck.write(&dir, "x").unwrap();
+        let (path, _) = ck.write(&dir, "x").unwrap();
         let bin = dir.join("x.step1.ckpt.bin");
         std::fs::write(&bin, [0u8; 4]).unwrap();
         assert!(Checkpoint::load(&path).is_err());
@@ -420,7 +427,7 @@ mod tests {
     fn load_rejects_bit_flipped_blob() {
         let dir = std::env::temp_dir().join(format!("fzoo-ckpt-crc-{}", std::process::id()));
         let _ = std::fs::remove_dir_all(&dir);
-        let path = tiny(1).write(&dir, "x").unwrap();
+        let (path, _) = tiny(1).write(&dir, "x").unwrap();
         let bin = dir.join("x.step1.ckpt.bin");
         // same length, one flipped bit: only the CRC can catch this
         let mut bytes = std::fs::read(&bin).unwrap();

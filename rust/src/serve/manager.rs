@@ -17,6 +17,7 @@
 
 use std::path::PathBuf;
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
@@ -24,6 +25,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::{EvalRecord, History};
 use crate::runtime::{FaultPlan, Runtime};
+use crate::telemetry::{names, Gauge, Registry};
 
 use super::protocol::{Event, Request, RunId, RunSpec, RunStatus};
 use super::run::RunState;
@@ -59,6 +61,7 @@ impl std::error::Error for WorkerGone {}
 /// join or let `Drop` do it.
 pub struct RunManager {
     client: Client,
+    telemetry: Arc<Registry>,
     join: Option<JoinHandle<()>>,
 }
 
@@ -66,7 +69,7 @@ impl RunManager {
     /// Spawn the worker and load the PJRT runtime *on* it. Artifact /
     /// manifest problems surface here, not at first submit.
     pub fn start(artifacts: impl Into<PathBuf>) -> Result<Self> {
-        Self::start_with_faults(artifacts, None)
+        Self::start_with_telemetry(artifacts, None, Arc::new(Registry::new()))
     }
 
     /// [`RunManager::start`] with a deterministic fault plan installed on
@@ -76,13 +79,27 @@ impl RunManager {
         artifacts: impl Into<PathBuf>,
         faults: Option<FaultPlan>,
     ) -> Result<Self> {
+        Self::start_with_telemetry(artifacts, faults, Arc::new(Registry::new()))
+    }
+
+    /// Full-control constructor: the caller supplies the metrics registry
+    /// so exporters (Prometheus listener, JSONL flusher) can be attached
+    /// *outside* the worker. The registry handle crosses the thread
+    /// boundary — it is plain `Send + Sync` data; device-adjacent state
+    /// still never does.
+    pub fn start_with_telemetry(
+        artifacts: impl Into<PathBuf>,
+        faults: Option<FaultPlan>,
+        telemetry: Arc<Registry>,
+    ) -> Result<Self> {
         let dir = artifacts.into();
+        let reg = telemetry.clone();
         let (tx, rx) = mpsc::channel::<Request>();
         let (boot_tx, boot_rx) = mpsc::channel::<Result<()>>();
         let join = std::thread::Builder::new()
             .name("fzoo-serve".into())
             .spawn(move || {
-                let rt = match Runtime::load(&dir) {
+                let rt = match Runtime::load_with_telemetry(&dir, reg) {
                     Ok(rt) => {
                         let _ = boot_tx.send(Ok(()));
                         rt
@@ -95,11 +112,23 @@ impl RunManager {
                 if let Some(plan) = faults {
                     rt.set_fault_plan(plan);
                 }
+                let live_runs = rt.telemetry().gauge(
+                    names::SERVE_LIVE_RUNS,
+                    "Runs resident in the manager (any phase)",
+                    &[],
+                );
+                let runnable_runs = rt.telemetry().gauge(
+                    names::SERVE_RUNNABLE_RUNS,
+                    "Runs eligible for a step in the current scheduler pass",
+                    &[],
+                );
                 Worker {
                     rt,
                     rx,
                     runs: Vec::new(),
                     next_id: 1,
+                    live_runs,
+                    runnable_runs,
                 }
                 .run();
             })?;
@@ -111,12 +140,19 @@ impl RunManager {
                 tx,
                 timeout: DEFAULT_CLIENT_TIMEOUT,
             },
+            telemetry,
             join: Some(join),
         })
     }
 
     pub fn client(&self) -> Client {
         self.client.clone()
+    }
+
+    /// The metrics registry shared with the worker's runtime. Scrape or
+    /// snapshot it from any thread.
+    pub fn telemetry(&self) -> &Arc<Registry> {
+        &self.telemetry
     }
 
     /// Graceful shutdown: live runs stop where they are (no finalize),
@@ -279,11 +315,16 @@ struct Worker {
     rx: Receiver<Request>,
     runs: Vec<RunState>,
     next_id: u64,
+    live_runs: Arc<Gauge>,
+    runnable_runs: Arc<Gauge>,
 }
 
 impl Worker {
     fn run(mut self) {
         loop {
+            self.live_runs.set(self.runs.len() as f64);
+            self.runnable_runs
+                .set(self.runs.iter().filter(|r| r.runnable()).count() as f64);
             // Block for work when idle; otherwise just drain what's queued
             // so control requests stay responsive between step slices.
             if !self.runs.iter().any(|r| r.runnable()) {

@@ -58,6 +58,11 @@ pub struct RunStatus {
     /// classified step failures, including each recovered one
     pub failures: u64,
     pub error: Option<String>,
+    /// forward passes per second of in-step wall time (telemetry-derived;
+    /// 0.0 before the first step completes)
+    pub forwards_per_sec: f64,
+    /// mean executed-step duration in milliseconds (telemetry-derived)
+    pub mean_step_ms: f64,
 }
 
 /// Stream items delivered to a [`RunHandle`](super::RunHandle).
@@ -174,6 +179,9 @@ impl RunSpec {
             schedule: self.schedule,
             run_seed: self.run_seed,
             diverge_ema_factor: self.diverge_ema_factor,
+            // metrics from the loop and from the serve layer must land on
+            // the same `run` label to share registry instances
+            run_name: Some(self.display_name()),
             verbose: false,
         }
     }

@@ -14,6 +14,7 @@
 
 use std::path::Path;
 use std::sync::mpsc::Sender;
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
@@ -23,9 +24,64 @@ use crate::coordinator::{
 use crate::data::{Batcher, TaskKind};
 use crate::optim::Optimizer;
 use crate::runtime::{FaultSite, Runtime, Session};
+use crate::telemetry::{names, Counter, Gauge, Histogram, HistogramSpec, Registry};
 
 use super::checkpoint::{latest_valid_checkpoint, prune_checkpoints, Checkpoint};
 use super::protocol::{Event, RunId, RunPhase, RunSpec, RunStatus};
+
+/// Per-run serve-layer metric handles, labeled `run=<display name>`.
+/// `forwards`/`step_seconds` resolve the *same* registry instances the
+/// run's `TrainLoop` writes (same name + label), so `status()` can derive
+/// throughput without a second bookkeeping path.
+struct ServeMetrics {
+    restarts: Arc<Counter>,
+    failures: Arc<Counter>,
+    queue_depth: Arc<Gauge>,
+    checkpoints: Arc<Counter>,
+    checkpoint_bytes: Arc<Counter>,
+    forwards: Arc<Counter>,
+    step_seconds: Arc<Histogram>,
+}
+
+impl ServeMetrics {
+    fn resolve(reg: &Registry, run: &str) -> Self {
+        let l = [("run", run)];
+        Self {
+            restarts: reg.counter(
+                names::RUN_RESTARTS,
+                "Completed checkpoint rollbacks",
+                &l,
+            ),
+            failures: reg.counter(
+                names::RUN_FAILURES,
+                "Classified step/checkpoint failures, including recovered ones",
+                &l,
+            ),
+            queue_depth: reg.gauge(
+                names::RUN_QUEUE_DEPTH,
+                "Steps credited but not yet executed",
+                &l,
+            ),
+            checkpoints: reg.counter(names::CHECKPOINTS, "Checkpoints written", &l),
+            checkpoint_bytes: reg.counter(
+                names::CHECKPOINT_BYTES,
+                "Bytes written across checkpoint file pairs",
+                &l,
+            ),
+            forwards: reg.counter(
+                names::FORWARD_PASSES,
+                "Forward passes executed",
+                &l,
+            ),
+            step_seconds: reg.histogram(
+                names::STEP_DURATION,
+                "Executed training step duration in seconds",
+                &l,
+                HistogramSpec::duration(),
+            ),
+        }
+    }
+}
 
 /// Worker-side pieces a run is (re)built from; see [`build_parts`].
 type RunParts = (Session, Box<dyn Optimizer>, Batcher, TrainLoop);
@@ -141,6 +197,7 @@ pub(crate) struct RunState {
     pending_cause: Option<String>,
     /// cause of the *first* failure — preserved into the terminal error
     first_cause: Option<String>,
+    metrics: ServeMetrics,
 }
 
 impl RunState {
@@ -166,6 +223,7 @@ impl RunState {
             None => None,
         };
         let (session, optimizer, batcher, lp) = build_parts(rt, &spec, ck.as_ref())?;
+        let metrics = ServeMetrics::resolve(rt.telemetry(), &spec.display_name());
 
         let mut run = Self {
             id,
@@ -183,6 +241,7 @@ impl RunState {
             cooldown: 0,
             pending_cause: None,
             first_cause: None,
+            metrics,
         };
         // Zero-step plans and resumes at the plan's end are already done:
         // finalize now so the handle still gets its terminal event.
@@ -210,6 +269,7 @@ impl RunState {
             ),
             RunPhase::Idle | RunPhase::Running => {
                 self.budget = self.budget.saturating_add(steps).min(self.remaining());
+                self.metrics.queue_depth.set(self.budget as f64);
                 if self.budget > 0 {
                     self.phase = RunPhase::Running;
                 }
@@ -219,6 +279,7 @@ impl RunState {
             // recovered run starts Running or parks Idle.
             RunPhase::Recovering => {
                 self.budget = self.budget.saturating_add(steps).min(self.remaining());
+                self.metrics.queue_depth.set(self.budget as f64);
                 Ok(())
             }
         }
@@ -266,6 +327,7 @@ impl RunState {
         )? {
             StepOutcome::Stepped { record, eval } => {
                 self.budget = self.budget.saturating_sub(1);
+                self.metrics.queue_depth.set(self.budget as f64);
                 let _ = self.events.send(Event::Step(record));
                 if let Some(ev) = eval {
                     let _ = self.events.send(Event::Eval(ev));
@@ -297,6 +359,7 @@ impl RunState {
         let class = classify_error(&e);
         let cause = format!("{class}: {e:#}");
         self.failures += 1;
+        self.metrics.failures.inc();
         if self.first_cause.is_none() {
             self.first_cause = Some(cause.clone());
         }
@@ -325,6 +388,7 @@ impl RunState {
         }
         if let Err(e) = self.try_recover(rt) {
             self.failures += 1;
+            self.metrics.failures.inc();
             self.fail_terminal(format!("recovery failed: {e:#}"));
         }
     }
@@ -360,6 +424,7 @@ impl RunState {
         self.batcher = batcher;
         self.lp = lp;
         self.restarts += 1;
+        self.metrics.restarts.inc();
         let step = self.lp.next_step();
         // The steps from `step` to the failure point were already paid for
         // once — re-credit the replay so the original `TrainSteps` budget
@@ -368,6 +433,7 @@ impl RunState {
             .budget
             .saturating_add(old_next.saturating_sub(step))
             .min(self.remaining());
+        self.metrics.queue_depth.set(self.budget as f64);
         let _ = self.events.send(Event::Recovered {
             step,
             from_checkpoint,
@@ -388,6 +454,7 @@ impl RunState {
         }
         self.phase = RunPhase::Finished;
         self.budget = 0;
+        self.metrics.queue_depth.set(0.0);
         let _ = self.events.send(Event::Finished(self.lp.history().clone()));
         Ok(())
     }
@@ -436,7 +503,9 @@ impl RunState {
             &self.lp,
             &self.spec,
         )?;
-        let path = ck.write(Path::new(&dir), &name)?;
+        let (path, bytes) = ck.write(Path::new(&dir), &name)?;
+        self.metrics.checkpoints.inc();
+        self.metrics.checkpoint_bytes.add(bytes as f64);
         prune_checkpoints(Path::new(&dir), &name, self.spec.keep_last)?;
         Ok(path.to_string_lossy().into_owned())
     }
@@ -450,6 +519,7 @@ impl RunState {
         }
         self.phase = RunPhase::Failed;
         self.budget = 0;
+        self.metrics.queue_depth.set(0.0);
         self.cooldown = 0;
         self.pending_cause = None;
         self.error = Some(msg.clone());
@@ -457,6 +527,20 @@ impl RunState {
     }
 
     pub fn status(&self) -> RunStatus {
+        // Throughput straight from the run's telemetry: the step-duration
+        // histogram and forward counter the TrainLoop itself maintains.
+        let step_sum = self.metrics.step_seconds.sum();
+        let step_count = self.metrics.step_seconds.count();
+        let forwards_per_sec = if step_sum > 0.0 {
+            self.metrics.forwards.value() / step_sum
+        } else {
+            0.0
+        };
+        let mean_step_ms = if step_count > 0 {
+            step_sum / step_count as f64 * 1e3
+        } else {
+            0.0
+        };
         RunStatus {
             id: self.id,
             name: self.spec.display_name(),
@@ -470,6 +554,8 @@ impl RunState {
             restarts: self.restarts,
             failures: self.failures,
             error: self.error.clone(),
+            forwards_per_sec,
+            mean_step_ms,
         }
     }
 }

@@ -1,0 +1,247 @@
+//! Fixed log-bucket histogram with relaxed-atomic counts.
+//!
+//! Bucket upper bounds grow geometrically from `spec.min` by
+//! `spec.growth`, plus one overflow bucket; an observation lands in the
+//! first bucket whose bound is `>= v` (Prometheus `le` semantics).
+//! `observe` is one linear scan over ~24 f64 compares plus three relaxed
+//! atomic ops — no locks, safe from any thread. Quantiles are estimated
+//! by walking the cumulative counts and log-interpolating inside the
+//! crossing bucket (log buckets ⇒ geometric interpolation).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::span::Span;
+
+/// Bucket layout: `buckets` upper bounds at `min · growthⁱ`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HistogramSpec {
+    /// Upper bound of the first bucket (must be > 0).
+    pub min: f64,
+    /// Geometric growth factor between bounds (must be > 1).
+    pub growth: f64,
+    /// Number of finite buckets (an overflow bucket is added on top).
+    pub buckets: usize,
+}
+
+impl HistogramSpec {
+    /// Wall-clock durations in seconds: 10 µs … ~5.6 min in ×2 steps.
+    pub fn duration() -> Self {
+        Self {
+            min: 1e-5,
+            growth: 2.0,
+            buckets: 25,
+        }
+    }
+
+    /// Wide positive range (σ values, byte counts): 1e-9 … ~2.9e8 in ×4
+    /// steps.
+    pub fn wide() -> Self {
+        Self {
+            min: 1e-9,
+            growth: 4.0,
+            buckets: 30,
+        }
+    }
+
+    pub fn bounds(&self) -> Vec<f64> {
+        (0..self.buckets)
+            .map(|i| self.min * self.growth.powi(i as i32))
+            .collect()
+    }
+}
+
+/// Point-in-time copy of a histogram, Prometheus-shaped: cumulative
+/// counts per finite bound, with `count` playing the `+Inf` bucket.
+#[derive(Debug, Clone)]
+pub struct HistogramSnapshot {
+    pub bounds: Vec<f64>,
+    /// Cumulative count at each finite bound (same length as `bounds`).
+    pub cumulative: Vec<u64>,
+    pub count: u64,
+    pub sum: f64,
+    pub p50: f64,
+    pub p99: f64,
+}
+
+#[derive(Debug)]
+pub struct Histogram {
+    spec: HistogramSpec,
+    bounds: Vec<f64>,
+    /// Per-bucket counts; last entry is the overflow bucket.
+    counts: Vec<AtomicU64>,
+    sum_bits: AtomicU64,
+}
+
+pub(crate) fn atomic_f64_add(cell: &AtomicU64, v: f64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        let next = (f64::from_bits(cur) + v).to_bits();
+        match cell.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+impl Histogram {
+    pub fn new(spec: HistogramSpec) -> Self {
+        assert!(spec.min > 0.0 && spec.growth > 1.0 && spec.buckets > 0);
+        let bounds = spec.bounds();
+        let counts = (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect();
+        Self {
+            spec,
+            bounds,
+            counts,
+            sum_bits: AtomicU64::new(0),
+        }
+    }
+
+    pub fn spec(&self) -> HistogramSpec {
+        self.spec
+    }
+
+    pub fn bounds(&self) -> &[f64] {
+        &self.bounds
+    }
+
+    pub fn observe(&self, v: f64) {
+        let idx = self
+            .bounds
+            .iter()
+            .position(|b| v <= *b)
+            .unwrap_or(self.bounds.len());
+        self.counts[idx].fetch_add(1, Ordering::Relaxed);
+        atomic_f64_add(&self.sum_bits, v);
+    }
+
+    /// Start an RAII timer that records into this histogram.
+    pub fn span(&self) -> Span<'_> {
+        Span::new(self)
+    }
+
+    pub fn count(&self) -> u64 {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.sum_bits.load(Ordering::Relaxed))
+    }
+
+    /// Estimated q-quantile (q in [0, 1]). 0 when empty; clamped to the
+    /// largest finite bound when the rank lands in the overflow bucket.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let counts: Vec<u64> = self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let rank = (q.clamp(0.0, 1.0) * total as f64).max(1.0);
+        let mut cum = 0u64;
+        for (i, n) in counts.iter().copied().enumerate() {
+            if n == 0 {
+                continue;
+            }
+            if (cum + n) as f64 >= rank {
+                if i >= self.bounds.len() {
+                    // overflow bucket has no upper bound to interpolate to
+                    return *self.bounds.last().unwrap();
+                }
+                let upper = self.bounds[i];
+                let lower = if i == 0 {
+                    self.spec.min / self.spec.growth
+                } else {
+                    self.bounds[i - 1]
+                };
+                let frac = ((rank - cum as f64) / n as f64).clamp(0.0, 1.0);
+                return (lower.ln() + frac * (upper.ln() - lower.ln())).exp();
+            }
+            cum += n;
+        }
+        *self.bounds.last().unwrap()
+    }
+
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let counts: Vec<u64> = self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+        let mut cumulative = Vec::with_capacity(self.bounds.len());
+        let mut cum = 0u64;
+        for n in counts.iter().take(self.bounds.len()) {
+            cum += n;
+            cumulative.push(cum);
+        }
+        let count = cum + counts[self.bounds.len()];
+        HistogramSnapshot {
+            bounds: self.bounds.clone(),
+            cumulative,
+            count,
+            sum: self.sum(),
+            p50: self.quantile(0.5),
+            p99: self.quantile(0.99),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec4() -> HistogramSpec {
+        HistogramSpec {
+            min: 1e-3,
+            growth: 2.0,
+            buckets: 4,
+        }
+    }
+
+    #[test]
+    fn bounds_are_geometric() {
+        let b = spec4().bounds();
+        assert_eq!(b, vec![1e-3, 2e-3, 4e-3, 8e-3]);
+    }
+
+    #[test]
+    fn le_semantics_at_exact_boundaries() {
+        let h = Histogram::new(spec4());
+        h.observe(1e-3); // exactly the first bound → bucket 0
+        h.observe(1.5e-3); // bucket 1
+        h.observe(8e-3); // exactly the last finite bound → bucket 3
+        h.observe(9e-3); // overflow
+        h.observe(1e-9); // far below min → bucket 0
+        let s = h.snapshot();
+        assert_eq!(s.cumulative, vec![2, 3, 3, 4]);
+        assert_eq!(s.count, 5);
+        let expect = 1e-3 + 1.5e-3 + 8e-3 + 9e-3 + 1e-9;
+        assert!((s.sum - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantiles_interpolate_within_bucket() {
+        let h = Histogram::new(spec4());
+        for _ in 0..100 {
+            h.observe(3e-3); // all in (2e-3, 4e-3]
+        }
+        for q in [0.5, 0.99] {
+            let v = h.quantile(q);
+            assert!(v > 2e-3 && v <= 4e-3, "q{q} = {v} outside bucket");
+        }
+        assert!(h.quantile(0.5) <= h.quantile(0.99));
+    }
+
+    #[test]
+    fn quantile_edge_cases() {
+        let h = Histogram::new(spec4());
+        assert_eq!(h.quantile(0.5), 0.0, "empty histogram");
+        h.observe(1.0); // overflow only
+        assert_eq!(h.quantile(0.5), 8e-3, "overflow clamps to last bound");
+    }
+
+    #[test]
+    fn sum_and_count_agree_with_observations() {
+        let h = Histogram::new(HistogramSpec::duration());
+        let vals = [1e-5, 3.7e-4, 0.12, 9.0];
+        for v in vals {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), vals.len() as u64);
+        assert!((h.sum() - vals.iter().sum::<f64>()).abs() < 1e-12);
+    }
+}

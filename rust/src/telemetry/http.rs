@@ -1,0 +1,127 @@
+//! Tiny blocking HTTP listener for the Prometheus endpoint.
+//!
+//! One `std::net::TcpListener` accept loop on a dedicated thread, one
+//! connection at a time — a scrape is a point read of atomics and a
+//! ~10 KiB write, so there is nothing to parallelize. Every request gets
+//! the full exposition (path ignored). Bind `127.0.0.1:0` in tests and
+//! read the real port back from [`MetricsServer::addr`]. Dropping the
+//! server stops the thread (a self-connect unblocks `accept`).
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::prometheus;
+use super::registry::Registry;
+
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    pub fn start(addr: impl ToSocketAddrs, registry: Arc<Registry>) -> std::io::Result<Self> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let flag = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("fzoo-metrics".into())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if flag.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    if let Ok(stream) = conn {
+                        let _ = serve_one(stream, &registry);
+                    }
+                }
+            })?;
+        Ok(Self {
+            addr: local,
+            stop,
+            handle: Some(handle),
+        })
+    }
+
+    /// The bound address (with the kernel-chosen port when `:0` was
+    /// requested).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // unblock accept() so the thread observes the flag
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn serve_one(mut stream: TcpStream, registry: &Registry) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(2)))?;
+    // Drain the request head (request line + headers); bodies are not
+    // expected on a scrape and are ignored.
+    let mut head = Vec::new();
+    let mut buf = [0u8; 1024];
+    loop {
+        let n = stream.read(&mut buf)?;
+        if n == 0 {
+            break;
+        }
+        head.extend_from_slice(&buf[..n]);
+        if head.windows(4).any(|w| w == b"\r\n\r\n") || head.len() > 8192 {
+            break;
+        }
+    }
+    let body = prometheus::render(registry);
+    let resp = format!(
+        "HTTP/1.1 200 OK\r\n\
+         Content-Type: text/plain; version=0.0.4; charset=utf-8\r\n\
+         Content-Length: {}\r\n\
+         Connection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(resp.as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scrape(addr: SocketAddr) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(b"GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn serves_scrapes_until_dropped() {
+        let reg = Arc::new(Registry::new());
+        reg.counter("fzoo_forward_passes_total", "fwd", &[("run", "t")]).add(5.0);
+        let server = MetricsServer::start("127.0.0.1:0", reg.clone()).unwrap();
+        let addr = server.addr();
+
+        let first = scrape(addr);
+        assert!(first.starts_with("HTTP/1.1 200 OK"));
+        assert!(first.contains("text/plain; version=0.0.4"));
+        assert!(first.contains("fzoo_forward_passes_total{run=\"t\"} 5"));
+
+        reg.counter("fzoo_forward_passes_total", "fwd", &[("run", "t")]).add(2.0);
+        assert!(scrape(addr).contains("fzoo_forward_passes_total{run=\"t\"} 7"));
+
+        // Drop joins the listener thread, which closes the socket.
+        drop(server);
+        assert!(TcpStream::connect(addr).is_err(), "listener must be closed after drop");
+    }
+}

@@ -1,0 +1,211 @@
+//! Periodic per-run JSONL metrics flush.
+//!
+//! `fzoo serve` already writes one JSONL *event* log per run; this
+//! exporter appends point-in-time *metric* snapshots next to them
+//! (`<run>.metrics.jsonl`). Each line is one timestamped object holding
+//! every registry metric labeled with that run; extra labels (e.g.
+//! `phase`) are folded into the key. Counters and gauges flatten to
+//! numbers, histograms to `{count, sum, p50, p99}` — enough to recover
+//! rates and latencies offline without re-parsing Prometheus text.
+//!
+//! Line schema:
+//!
+//! ```json
+//! {"ts_ms": 1754600000000, "run": "fzoo-sst2", "metrics": {
+//!    "fzoo_forward_passes_total": 384,
+//!    "fzoo_step_phase_seconds{phase=optim}": {"count": 64, "sum": 1.9,
+//!                                             "p50": 0.028, "p99": 0.061}}}
+//! ```
+
+use std::collections::BTreeMap;
+use std::io::Write as _;
+use std::path::PathBuf;
+use std::sync::mpsc::{self, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, SystemTime, UNIX_EPOCH};
+
+use crate::util::json::Value;
+
+use super::registry::{Registry, SnapshotValue};
+
+pub struct JsonlExporter {
+    registry: Arc<Registry>,
+    sinks: Vec<(String, PathBuf)>,
+}
+
+impl JsonlExporter {
+    pub fn new(registry: Arc<Registry>) -> Self {
+        Self {
+            registry,
+            sinks: Vec::new(),
+        }
+    }
+
+    /// Flush metrics labeled `run=<run>` to `path` on every flush.
+    pub fn add_run(&mut self, run: impl Into<String>, path: impl Into<PathBuf>) {
+        self.sinks.push((run.into(), path.into()));
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sinks.is_empty()
+    }
+
+    /// Append one snapshot line per registered run.
+    pub fn flush(&self) -> std::io::Result<()> {
+        let fams = self.registry.snapshot();
+        let ts_ms = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_millis() as f64)
+            .unwrap_or(0.0);
+        for (run, path) in &self.sinks {
+            let mut metrics = BTreeMap::new();
+            for fam in &fams {
+                for m in &fam.metrics {
+                    if !m.labels.iter().any(|(k, v)| k == "run" && v == run) {
+                        continue;
+                    }
+                    let extra: Vec<String> = m
+                        .labels
+                        .iter()
+                        .filter(|(k, _)| k != "run")
+                        .map(|(k, v)| format!("{k}={v}"))
+                        .collect();
+                    let key = if extra.is_empty() {
+                        fam.name.clone()
+                    } else {
+                        format!("{}{{{}}}", fam.name, extra.join(","))
+                    };
+                    let value = match &m.value {
+                        SnapshotValue::Scalar(v) => Value::Num(*v),
+                        SnapshotValue::Histogram(h) => Value::obj(vec![
+                            ("count", Value::Num(h.count as f64)),
+                            ("sum", Value::Num(h.sum)),
+                            ("p50", Value::Num(h.p50)),
+                            ("p99", Value::Num(h.p99)),
+                        ]),
+                    };
+                    metrics.insert(key, value);
+                }
+            }
+            let line = Value::obj(vec![
+                ("ts_ms", Value::Num(ts_ms)),
+                ("run", Value::str(run.clone())),
+                ("metrics", Value::Obj(metrics)),
+            ]);
+            if let Some(parent) = path.parent() {
+                if !parent.as_os_str().is_empty() {
+                    std::fs::create_dir_all(parent)?;
+                }
+            }
+            let encoded = line.to_string();
+            let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+            writeln!(f, "{encoded}")?;
+        }
+        Ok(())
+    }
+
+    /// Move the exporter onto a background thread that flushes every
+    /// `interval` and once more on shutdown. Returns a handle whose
+    /// [`JsonlFlusher::finish`] (or drop) performs the final flush.
+    pub fn start(self, interval: Duration) -> JsonlFlusher {
+        let (tx, rx) = mpsc::channel::<()>();
+        let handle = std::thread::Builder::new()
+            .name("fzoo-metrics-jsonl".into())
+            .spawn(move || loop {
+                match rx.recv_timeout(interval) {
+                    Err(RecvTimeoutError::Timeout) => {
+                        if let Err(e) = self.flush() {
+                            eprintln!("telemetry: jsonl metrics flush failed: {e}");
+                        }
+                    }
+                    _ => {
+                        // stop requested (or the handle vanished): final flush
+                        if let Err(e) = self.flush() {
+                            eprintln!("telemetry: final jsonl metrics flush failed: {e}");
+                        }
+                        break;
+                    }
+                }
+            })
+            .expect("spawn jsonl metrics flusher");
+        JsonlFlusher {
+            tx: Some(tx),
+            handle: Some(handle),
+        }
+    }
+}
+
+pub struct JsonlFlusher {
+    tx: Option<Sender<()>>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl JsonlFlusher {
+    /// Stop the flusher after one final flush.
+    pub fn finish(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        if let Some(tx) = self.tx.take() {
+            let _ = tx.send(());
+        }
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for JsonlFlusher {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::histogram::HistogramSpec;
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn flush_appends_parseable_per_run_lines() {
+        let dir = std::env::temp_dir().join(format!("fzoo-jsonl-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("a.metrics.jsonl");
+
+        let reg = Arc::new(Registry::new());
+        reg.counter("fzoo_forward_passes_total", "", &[("run", "a")]).add(9.0);
+        reg.counter("fzoo_forward_passes_total", "", &[("run", "b")]).add(5.0);
+        reg.histogram(
+            "fzoo_step_phase_seconds",
+            "",
+            &[("run", "a"), ("phase", "optim")],
+            HistogramSpec::duration(),
+        )
+        .observe(0.01);
+
+        let mut exp = JsonlExporter::new(reg);
+        exp.add_run("a", &path);
+        exp.flush().unwrap();
+        exp.flush().unwrap();
+
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2, "one line per flush");
+        for line in lines {
+            let v = json::parse(line).unwrap();
+            assert_eq!(v.req("run").unwrap().as_str().unwrap(), "a");
+            let m = v.req("metrics").unwrap();
+            assert_eq!(
+                m.req("fzoo_forward_passes_total").unwrap().as_f64().unwrap(),
+                9.0,
+                "run b's series must not leak into run a's file"
+            );
+            let h = m.req("fzoo_step_phase_seconds{phase=optim}").unwrap();
+            assert_eq!(h.req("count").unwrap().as_u64().unwrap(), 1);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,87 @@
+//! Telemetry — lock-light metrics, RAII span timers, and exporters.
+//!
+//! FZOO's value proposition is an *accounting* claim (Adam-scale
+//! convergence at a fraction of MeZO's forward passes), so forward-pass
+//! counts, step wall time and phase breakdowns are first-class product
+//! data, not debug printf. This module gives every layer of the stack a
+//! shared, thread-safe [`Registry`] of named metrics:
+//!
+//! * [`Counter`] — monotone f64 accumulator (CAS add on an `AtomicU64`).
+//! * [`Gauge`] — last-write-wins f64 level.
+//! * [`Histogram`] — fixed log-spaced buckets with atomic counts; cheap
+//!   `observe`, Prometheus-style cumulative snapshots, and log-interpolated
+//!   quantile estimates (p50/p99).
+//! * [`Span`] — RAII timer that records its elapsed seconds into a
+//!   histogram on drop (or via [`Span::finish`], which also *returns* the
+//!   elapsed seconds so wall-clock accounting and exported metrics come
+//!   from one measurement).
+//!
+//! Design constraints (mirroring `runtime::FaultState`):
+//!
+//! * **Deterministically inert** — instrumentation only *observes* (time,
+//!   counts); it never feeds back into training math. An instrumented run
+//!   is bit-identical to an uninstrumented one (`rust/tests/serve.rs`
+//!   proves it against the sequential reference).
+//! * **Near-zero cost** — components resolve their `Arc` handles once and
+//!   touch only relaxed atomics on the hot path; the registry mutex is
+//!   taken at get-or-create and snapshot time only.
+//! * **Thread-safe by construction** — `Registry` is `Send + Sync` plain
+//!   data, so it crosses the `serve::RunManager` worker-thread boundary
+//!   while device-adjacent types stay put.
+//!
+//! Export paths: [`prometheus::render`] (text exposition format 0.0.4),
+//! [`http::MetricsServer`] (tiny blocking listener for `fzoo serve
+//! --metrics-addr`), and [`jsonl::JsonlExporter`] (periodic per-run flush
+//! alongside the run logs).
+
+pub mod histogram;
+pub mod http;
+pub mod jsonl;
+pub mod prometheus;
+pub mod registry;
+pub mod span;
+
+pub use histogram::{Histogram, HistogramSnapshot, HistogramSpec};
+pub use http::MetricsServer;
+pub use jsonl::{JsonlExporter, JsonlFlusher};
+pub use registry::{
+    Counter, FamilySnapshot, Gauge, LabelPairs, MetricKind, MetricSnapshot, Registry,
+    SnapshotValue,
+};
+pub use span::Span;
+
+/// Canonical metric names. Every instrumented layer resolves its handles
+/// through these constants so the README table, the Prometheus endpoint
+/// and the JSONL stream never drift apart.
+pub mod names {
+    // runtime phases (unlabeled — one PJRT runtime per process/worker)
+    pub const COMPILE_SECONDS: &str = "fzoo_compile_seconds";
+    pub const BIND_SECONDS: &str = "fzoo_bind_seconds";
+    pub const EXECUTE_SECONDS: &str = "fzoo_execute_seconds";
+    pub const TO_HOST_SECONDS: &str = "fzoo_to_host_seconds";
+    pub const FAULTS_INJECTED: &str = "fzoo_faults_injected_total";
+
+    // per-run training (label: run)
+    pub const STEPS: &str = "fzoo_steps_total";
+    pub const FORWARD_PASSES: &str = "fzoo_forward_passes_total";
+    pub const FORWARD_EQUIV: &str = "fzoo_forward_equiv_total";
+    pub const STEP_DURATION: &str = "fzoo_step_duration_seconds";
+    pub const STEP_PHASE: &str = "fzoo_step_phase_seconds";
+    pub const TRAIN_LOSS: &str = "fzoo_train_loss";
+    pub const LOSS_EMA: &str = "fzoo_loss_ema";
+    pub const BEST_LOSS_EMA: &str = "fzoo_best_loss_ema";
+    pub const PROBE_SIGMA: &str = "fzoo_probe_sigma";
+
+    // optimizer families (label: optimizer)
+    pub const PROBE_BATCHES: &str = "fzoo_probe_batches_total";
+    pub const PROBE_LOSSES: &str = "fzoo_probe_losses_total";
+
+    // serve scheduler + supervisor (per-run metrics labeled run)
+    pub const SERVE_LIVE_RUNS: &str = "fzoo_serve_live_runs";
+    pub const SERVE_RUNNABLE_RUNS: &str = "fzoo_serve_runnable_runs";
+    pub const RUN_QUEUE_DEPTH: &str = "fzoo_run_queue_depth";
+    pub const RUN_RESTARTS: &str = "fzoo_run_restarts_total";
+    pub const RUN_FAILURES: &str = "fzoo_run_failures_total";
+    pub const CHECKPOINTS: &str = "fzoo_checkpoints_total";
+    pub const CHECKPOINT_BYTES: &str = "fzoo_checkpoint_bytes_total";
+}

@@ -1,0 +1,140 @@
+//! Prometheus text exposition format (version 0.0.4) rendering.
+//!
+//! One `# HELP` / `# TYPE` header per family, then one sample line per
+//! labeled series; histograms expand to cumulative `_bucket{le=...}`
+//! lines plus `_sum` / `_count`. Output order is deterministic (the
+//! registry snapshot is BTreeMap-ordered), so scrapes diff cleanly.
+
+use std::fmt::Write as _;
+
+use super::registry::{LabelPairs, MetricKind, Registry, SnapshotValue};
+
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn escape_help(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('\n', "\\n")
+}
+
+/// `{k="v",...}` — with `extra` appended last (used for `le`); empty
+/// string when there are no labels at all.
+fn label_block(labels: &LabelPairs, extra: Option<(&str, &str)>) -> String {
+    if labels.is_empty() && extra.is_none() {
+        return String::new();
+    }
+    let mut parts: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label(v)))
+        .collect();
+    if let Some((k, v)) = extra {
+        parts.push(format!("{k}=\"{}\"", escape_label(v)));
+    }
+    format!("{{{}}}", parts.join(","))
+}
+
+pub fn render(registry: &Registry) -> String {
+    let mut out = String::new();
+    for fam in registry.snapshot() {
+        if !fam.help.is_empty() {
+            let _ = writeln!(out, "# HELP {} {}", fam.name, escape_help(&fam.help));
+        }
+        let _ = writeln!(out, "# TYPE {} {}", fam.name, fam.kind.prometheus_type());
+        for m in &fam.metrics {
+            match &m.value {
+                SnapshotValue::Scalar(v) => {
+                    let _ = writeln!(out, "{}{} {v}", fam.name, label_block(&m.labels, None));
+                }
+                SnapshotValue::Histogram(h) => {
+                    for (bound, cum) in h.bounds.iter().zip(&h.cumulative) {
+                        let le = format!("{bound}");
+                        let _ = writeln!(
+                            out,
+                            "{}_bucket{} {cum}",
+                            fam.name,
+                            label_block(&m.labels, Some(("le", &le)))
+                        );
+                    }
+                    let _ = writeln!(
+                        out,
+                        "{}_bucket{} {}",
+                        fam.name,
+                        label_block(&m.labels, Some(("le", "+Inf"))),
+                        h.count
+                    );
+                    let _ = writeln!(out, "{}_sum{} {}", fam.name, label_block(&m.labels, None), h.sum);
+                    let _ = writeln!(
+                        out,
+                        "{}_count{} {}",
+                        fam.name,
+                        label_block(&m.labels, None),
+                        h.count
+                    );
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::histogram::HistogramSpec;
+    use super::*;
+
+    #[test]
+    fn renders_counters_gauges_and_histograms() {
+        let reg = Registry::new();
+        reg.counter("fzoo_forward_passes_total", "Forward passes", &[("run", "a")])
+            .add(17.0);
+        reg.gauge("fzoo_train_loss", "Last loss", &[("run", "a")]).set(0.5);
+        let h = reg.histogram(
+            "fzoo_step_duration_seconds",
+            "Step time",
+            &[("run", "a")],
+            HistogramSpec {
+                min: 0.5,
+                growth: 2.0,
+                buckets: 2,
+            },
+        );
+        h.observe(0.25);
+        h.observe(3.0); // overflow
+
+        let text = render(&reg);
+        assert!(text.contains("# TYPE fzoo_forward_passes_total counter"));
+        assert!(text.contains("fzoo_forward_passes_total{run=\"a\"} 17"));
+        assert!(text.contains("fzoo_train_loss{run=\"a\"} 0.5"));
+        assert!(text.contains("fzoo_step_duration_seconds_bucket{run=\"a\",le=\"0.5\"} 1"));
+        assert!(text.contains("fzoo_step_duration_seconds_bucket{run=\"a\",le=\"+Inf\"} 2"));
+        assert!(text.contains("fzoo_step_duration_seconds_count{run=\"a\"} 2"));
+        assert!(text.contains("fzoo_step_duration_seconds_sum{run=\"a\"} 3.25"));
+    }
+
+    #[test]
+    fn unlabeled_metrics_have_no_brace_block() {
+        let reg = Registry::new();
+        reg.counter("plain_total", "", &[]).inc();
+        let text = render(&reg);
+        assert!(text.contains("plain_total 1\n"));
+        assert!(!text.contains("plain_total{"));
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        let reg = Registry::new();
+        reg.gauge("g", "multi\nline \\ help", &[("run", "a\"b\\c\nd")]).set(1.0);
+        let text = render(&reg);
+        assert!(text.contains(r#"run="a\"b\\c\nd""#));
+        assert!(text.contains(r"multi\nline \\ help"));
+    }
+}

@@ -1,0 +1,293 @@
+//! Metric registry: named, labeled families of counters / gauges /
+//! histograms with get-or-create semantics.
+//!
+//! The registry mutex guards only the `BTreeMap` of families; the metric
+//! values themselves are relaxed atomics behind `Arc`s, so instrumented
+//! components resolve their handles once (label resolution pays the lock)
+//! and the per-step hot path never touches the registry again. `BTreeMap`
+//! keys (names, then sorted label pairs) make snapshot — and therefore
+//! scrape and JSONL — order deterministic.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::histogram::{atomic_f64_add, Histogram, HistogramSnapshot, HistogramSpec};
+
+/// Monotone accumulator. `add` takes f64 (forward counts, byte counts);
+/// negative deltas are a caller bug.
+#[derive(Debug, Default)]
+pub struct Counter {
+    bits: AtomicU64,
+}
+
+impl Counter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&self, v: f64) {
+        debug_assert!(v >= 0.0, "counter deltas must be non-negative, got {v}");
+        atomic_f64_add(&self.bits, v.max(0.0));
+    }
+
+    pub fn inc(&self) {
+        self.add(1.0);
+    }
+
+    pub fn value(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
+/// Last-write-wins level.
+#[derive(Debug, Default)]
+pub struct Gauge {
+    bits: AtomicU64,
+}
+
+impl Gauge {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn set(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn value(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
+/// Sorted `(key, value)` label pairs — the identity of a metric within
+/// its family.
+pub type LabelPairs = Vec<(String, String)>;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MetricKind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl MetricKind {
+    pub fn prometheus_type(&self) -> &'static str {
+        match self {
+            MetricKind::Counter => "counter",
+            MetricKind::Gauge => "gauge",
+            MetricKind::Histogram => "histogram",
+        }
+    }
+}
+
+#[derive(Clone)]
+enum Handle {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+struct Family {
+    help: String,
+    kind: MetricKind,
+    metrics: BTreeMap<LabelPairs, Handle>,
+}
+
+#[derive(Default)]
+pub struct Registry {
+    families: Mutex<BTreeMap<String, Family>>,
+}
+
+/// Point-in-time value of one labeled metric.
+#[derive(Debug, Clone)]
+pub enum SnapshotValue {
+    /// Counter or gauge level (the family's `kind` disambiguates).
+    Scalar(f64),
+    Histogram(HistogramSnapshot),
+}
+
+#[derive(Debug, Clone)]
+pub struct MetricSnapshot {
+    pub labels: LabelPairs,
+    pub value: SnapshotValue,
+}
+
+#[derive(Debug, Clone)]
+pub struct FamilySnapshot {
+    pub name: String,
+    pub help: String,
+    pub kind: MetricKind,
+    pub metrics: Vec<MetricSnapshot>,
+}
+
+fn owned_labels(labels: &[(&str, &str)]) -> LabelPairs {
+    let mut out: LabelPairs = labels
+        .iter()
+        .map(|(k, v)| (k.to_string(), v.to_string()))
+        .collect();
+    out.sort();
+    out
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn entry(
+        &self,
+        name: &str,
+        help: &str,
+        kind: MetricKind,
+        labels: &[(&str, &str)],
+        make: impl FnOnce() -> Handle,
+    ) -> Handle {
+        let mut fams = self.families.lock().unwrap();
+        let fam = fams.entry(name.to_string()).or_insert_with(|| Family {
+            help: help.to_string(),
+            kind,
+            metrics: BTreeMap::new(),
+        });
+        assert!(
+            fam.kind == kind,
+            "telemetry: metric '{name}' already registered as {:?}, requested as {kind:?}",
+            fam.kind
+        );
+        fam.metrics.entry(owned_labels(labels)).or_insert_with(make).clone()
+    }
+
+    /// Get or create a labeled counter. Repeated calls with the same name
+    /// and labels return the same underlying instance.
+    pub fn counter(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Arc<Counter> {
+        match self.entry(name, help, MetricKind::Counter, labels, || {
+            Handle::Counter(Arc::new(Counter::new()))
+        }) {
+            Handle::Counter(c) => c,
+            _ => unreachable!("kind checked above"),
+        }
+    }
+
+    pub fn gauge(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Arc<Gauge> {
+        match self.entry(name, help, MetricKind::Gauge, labels, || {
+            Handle::Gauge(Arc::new(Gauge::new()))
+        }) {
+            Handle::Gauge(g) => g,
+            _ => unreachable!("kind checked above"),
+        }
+    }
+
+    /// Get or create a labeled histogram. `spec` applies only when the
+    /// instance is first created; later callers get the existing layout.
+    pub fn histogram(
+        &self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+        spec: HistogramSpec,
+    ) -> Arc<Histogram> {
+        match self.entry(name, help, MetricKind::Histogram, labels, || {
+            Handle::Histogram(Arc::new(Histogram::new(spec)))
+        }) {
+            Handle::Histogram(h) => h,
+            _ => unreachable!("kind checked above"),
+        }
+    }
+
+    /// Deterministically ordered point-in-time copy of every family.
+    /// Values are read without a global pause, so concurrent observations
+    /// may land between two reads — fine for monitoring, and each
+    /// histogram snapshot is internally self-consistent.
+    pub fn snapshot(&self) -> Vec<FamilySnapshot> {
+        let fams = self.families.lock().unwrap();
+        fams.iter()
+            .map(|(name, fam)| FamilySnapshot {
+                name: name.clone(),
+                help: fam.help.clone(),
+                kind: fam.kind,
+                metrics: fam
+                    .metrics
+                    .iter()
+                    .map(|(labels, handle)| MetricSnapshot {
+                        labels: labels.clone(),
+                        value: match handle {
+                            Handle::Counter(c) => SnapshotValue::Scalar(c.value()),
+                            Handle::Gauge(g) => SnapshotValue::Scalar(g.value()),
+                            Handle::Histogram(h) => SnapshotValue::Histogram(h.snapshot()),
+                        },
+                    })
+                    .collect(),
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn get_or_create_returns_same_instance() {
+        let reg = Registry::new();
+        let a = reg.counter("c", "help", &[("run", "x")]);
+        let b = reg.counter("c", "help", &[("run", "x")]);
+        assert!(Arc::ptr_eq(&a, &b));
+        // label order is normalized
+        let c = reg.gauge("g", "", &[("b", "2"), ("a", "1")]);
+        let d = reg.gauge("g", "", &[("a", "1"), ("b", "2")]);
+        assert!(Arc::ptr_eq(&c, &d));
+    }
+
+    #[test]
+    fn labels_isolate_series() {
+        let reg = Registry::new();
+        let a = reg.counter("c", "", &[("run", "a")]);
+        let b = reg.counter("c", "", &[("run", "b")]);
+        a.add(3.0);
+        a.inc();
+        assert_eq!(a.value(), 4.0);
+        assert_eq!(b.value(), 0.0, "sibling label untouched");
+    }
+
+    #[test]
+    fn counter_is_monotone() {
+        let c = Counter::new();
+        let mut last = c.value();
+        for i in 0..100 {
+            c.add(i as f64 * 0.25);
+            let now = c.value();
+            assert!(now >= last);
+            last = now;
+        }
+    }
+
+    #[test]
+    fn snapshot_orders_families_and_labels() {
+        let reg = Registry::new();
+        reg.counter("z_metric", "", &[]);
+        reg.gauge("a_metric", "", &[("run", "b")]);
+        reg.gauge("a_metric", "", &[("run", "a")]);
+        let snap = reg.snapshot();
+        assert_eq!(snap[0].name, "a_metric");
+        assert_eq!(snap[1].name, "z_metric");
+        assert_eq!(snap[0].metrics[0].labels, vec![("run".into(), "a".into())]);
+        assert_eq!(snap[0].metrics[1].labels, vec![("run".into(), "b".into())]);
+    }
+
+    #[test]
+    #[should_panic(expected = "already registered")]
+    fn kind_mismatch_is_a_bug() {
+        let reg = Registry::new();
+        reg.counter("m", "", &[]);
+        reg.gauge("m", "", &[]);
+    }
+
+    #[test]
+    fn registry_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Registry>();
+        assert_send_sync::<Arc<Counter>>();
+        assert_send_sync::<Arc<Gauge>>();
+        assert_send_sync::<Arc<Histogram>>();
+    }
+}

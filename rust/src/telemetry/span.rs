@@ -1,0 +1,73 @@
+//! RAII span timers: `hist.span()` starts the clock, dropping the span
+//! records the elapsed seconds. [`Span::finish`] records *and returns*
+//! the measurement so callers that also account wall time host-side
+//! (e.g. `History::total_wall_s`) use the exact value that was exported
+//! — one clock read, one source of truth.
+
+use std::time::Instant;
+
+use super::histogram::Histogram;
+
+#[must_use = "a span measures until it is dropped or finished"]
+pub struct Span<'a> {
+    hist: &'a Histogram,
+    start: Instant,
+    armed: bool,
+}
+
+impl<'a> Span<'a> {
+    pub(crate) fn new(hist: &'a Histogram) -> Self {
+        Self {
+            hist,
+            start: Instant::now(),
+            armed: true,
+        }
+    }
+
+    /// Record now and return the elapsed seconds.
+    pub fn finish(mut self) -> f64 {
+        self.armed = false;
+        let s = self.start.elapsed().as_secs_f64();
+        self.hist.observe(s);
+        s
+    }
+
+    /// Drop without recording.
+    pub fn cancel(mut self) {
+        self.armed = false;
+    }
+}
+
+impl Drop for Span<'_> {
+    fn drop(&mut self) {
+        if self.armed {
+            self.hist.observe(self.start.elapsed().as_secs_f64());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::histogram::HistogramSpec;
+    use super::*;
+
+    #[test]
+    fn finish_records_once_and_returns_elapsed() {
+        let h = Histogram::new(HistogramSpec::duration());
+        let s = h.span().finish();
+        assert!(s >= 0.0);
+        assert_eq!(h.count(), 1);
+        assert!((h.sum() - s).abs() < 1e-12, "exported == returned");
+    }
+
+    #[test]
+    fn drop_records_and_cancel_does_not() {
+        let h = Histogram::new(HistogramSpec::duration());
+        {
+            let _span = h.span();
+        }
+        assert_eq!(h.count(), 1);
+        h.span().cancel();
+        assert_eq!(h.count(), 1);
+    }
+}

@@ -5,12 +5,26 @@
 //! Requires `make artifacts` (the tiny-* models) to have run.
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use fzoo::coordinator::{TrainOpts, Trainer};
 use fzoo::data::TaskKind;
 use fzoo::optim::{FzooModeCfg, Objective, OptimizerKind};
 use fzoo::runtime::{FaultPlan, Runtime, Session};
 use fzoo::serve::{Checkpoint, Event, RunManager, RunPhase, RunSpec, WorkerGone};
+use fzoo::telemetry::{MetricsServer, Registry};
+
+/// Minimal HTTP GET against the metrics listener; returns the body.
+fn scrape(addr: std::net::SocketAddr) -> String {
+    use std::io::{Read, Write};
+    let mut s = std::net::TcpStream::connect(addr).unwrap();
+    s.write_all(b"GET /metrics HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n")
+        .unwrap();
+    let mut text = String::new();
+    s.read_to_string(&mut text).unwrap();
+    let (_, body) = text.split_once("\r\n\r\n").expect("HTTP header/body split");
+    body.to_string()
+}
 
 fn artifacts() -> PathBuf {
     std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
@@ -42,8 +56,14 @@ fn multiplexed_runs_match_sequential_bit_for_bit() {
     // Two different (model, task, optimizer, seed) runs interleaved at
     // step granularity must produce the exact loss series each produces
     // alone — per-run state is fully isolated, so the scheduler cannot
-    // perturb the math.
-    let mgr = RunManager::start(artifacts()).unwrap();
+    // perturb the math. This manager runs FULLY INSTRUMENTED (shared
+    // registry + live Prometheus listener, scraped mid-run) while the
+    // sequential reference below is bare: telemetry must be
+    // deterministically inert, so the bit-identity assertions double as
+    // the instrumented-vs-uninstrumented determinism check.
+    let reg = Arc::new(Registry::new());
+    let mgr = RunManager::start_with_telemetry(artifacts(), None, reg.clone()).unwrap();
+    let srv = MetricsServer::start("127.0.0.1:0", reg).unwrap();
     let c = mgr.client();
     let a = c
         .submit(spec("tiny-enc", "sst2", OptimizerKind::fzoo(2e-3, 1e-3), 12, 1))
@@ -53,8 +73,23 @@ fn multiplexed_runs_match_sequential_bit_for_bit() {
         .unwrap();
     c.train_steps(a.id, 12).unwrap();
     c.train_steps(b.id, 12).unwrap();
+    // scrape while the scheduler is (typically) still interleaving steps —
+    // a concurrent reader must not perturb the runs
+    let _ = scrape(srv.addr());
     let ha = a.wait().unwrap();
     let hb = b.wait().unwrap();
+
+    // a post-completion scrape carries both runs' labeled series
+    let body = scrape(srv.addr());
+    assert!(
+        body.contains(r#"fzoo_forward_passes_total{run="tiny-enc-sst2-s1"}"#),
+        "scrape misses run a's counter:\n{body}"
+    );
+    assert!(
+        body.contains(r#"fzoo_forward_passes_total{run="tiny-dec-boolq-s2"}"#),
+        "scrape misses run b's counter:\n{body}"
+    );
+    drop(srv);
 
     let sa = sequential("tiny-enc", TaskKind::Sst2, OptimizerKind::fzoo(2e-3, 1e-3), 12, 1);
     let sb = sequential("tiny-dec", TaskKind::BoolQ, OptimizerKind::mezo(1e-4, 1e-3), 12, 2);

@@ -1,0 +1,222 @@
+//! Telemetry-subsystem tests: histogram bucket/quantile behaviour through
+//! the public registry API, counter monotonicity under concurrent
+//! writers, per-run label isolation across two concurrent serve runs, and
+//! a live Prometheus scrape parsed line-by-line mid-training.
+//!
+//! The serve-backed tests require `make artifacts` (the tiny-* models).
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use fzoo::optim::OptimizerKind;
+use fzoo::serve::{RunManager, RunSpec};
+use fzoo::telemetry::{names, HistogramSpec, MetricsServer, Registry};
+
+fn artifacts() -> PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Minimal HTTP GET against the metrics listener; returns the body.
+fn scrape(addr: std::net::SocketAddr) -> String {
+    use std::io::{Read, Write};
+    let mut s = std::net::TcpStream::connect(addr).unwrap();
+    s.write_all(b"GET /metrics HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n")
+        .unwrap();
+    let mut text = String::new();
+    s.read_to_string(&mut text).unwrap();
+    let (_, body) = text.split_once("\r\n\r\n").expect("HTTP header/body split");
+    body.to_string()
+}
+
+// ---------------------------------------------------------------------------
+// pure metric semantics (no artifacts needed)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn histogram_bucket_boundaries_follow_le_semantics() {
+    let reg = Registry::new();
+    let h = reg.histogram(
+        "t_seconds",
+        "",
+        &[],
+        HistogramSpec {
+            min: 1.0,
+            growth: 2.0,
+            buckets: 4,
+        },
+    );
+    assert_eq!(h.bounds(), &[1.0, 2.0, 4.0, 8.0][..]);
+
+    h.observe(1.0); // exactly the first bound → bucket 0 (v <= bound)
+    h.observe(1.0001); // just above → bucket 1
+    h.observe(8.0); // exactly the last finite bound → bucket 3
+    h.observe(9.0); // overflow: counted in `count` but no finite bucket
+    let s = h.snapshot();
+    assert_eq!(s.cumulative, vec![1, 2, 2, 3]);
+    assert_eq!(s.count, 4);
+    assert!((s.sum - (1.0 + 1.0001 + 8.0 + 9.0)).abs() < 1e-9);
+}
+
+#[test]
+fn histogram_quantiles_interpolate_and_clamp() {
+    let reg = Registry::new();
+    let spec = HistogramSpec {
+        min: 1.0,
+        growth: 2.0,
+        buckets: 4,
+    };
+    let h = reg.histogram("t_seconds", "", &[], spec);
+    assert_eq!(h.quantile(0.5), 0.0, "empty histogram reads 0");
+
+    // all mass in (2, 4]: any quantile must interpolate inside that bucket
+    for _ in 0..100 {
+        h.observe(3.0);
+    }
+    for q in [0.01, 0.5, 0.99] {
+        let v = h.quantile(q);
+        assert!(v > 2.0 && v <= 4.0, "q{q} = {v} escaped its bucket");
+    }
+    assert!(h.quantile(0.5) <= h.quantile(0.99), "quantiles are ordered");
+
+    // overflow-only mass clamps to the largest finite bound
+    let h2 = reg.histogram("t2_seconds", "", &[], spec);
+    h2.observe(1e9);
+    assert_eq!(h2.quantile(0.99), 8.0);
+}
+
+#[test]
+fn counter_is_monotone_under_concurrent_writers() {
+    const WRITERS: usize = 8;
+    const PER_WRITER: u64 = 20_000;
+    let reg = Registry::new();
+    let ctr = reg.counter("t_total", "", &[]);
+    let done = Arc::new(AtomicBool::new(false));
+
+    // a reader races the writers and must only ever see the value grow
+    let reader = {
+        let ctr = ctr.clone();
+        let done = done.clone();
+        std::thread::spawn(move || {
+            let mut last = 0.0f64;
+            while !done.load(Ordering::Relaxed) {
+                let v = ctr.value();
+                assert!(v >= last, "counter went backwards: {last} -> {v}");
+                last = v;
+            }
+        })
+    };
+    let writers: Vec<_> = (0..WRITERS)
+        .map(|_| {
+            let ctr = ctr.clone();
+            std::thread::spawn(move || {
+                for _ in 0..PER_WRITER {
+                    ctr.inc();
+                }
+            })
+        })
+        .collect();
+    for w in writers {
+        w.join().unwrap();
+    }
+    done.store(true, Ordering::Relaxed);
+    reader.join().unwrap();
+
+    // integer increments stay exact in f64 far beyond this range
+    assert_eq!(ctr.value(), (WRITERS as u64 * PER_WRITER) as f64);
+}
+
+// ---------------------------------------------------------------------------
+// serve integration (needs `make artifacts`)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn concurrent_runs_keep_labels_isolated() {
+    // Two runs with different optimizers share one registry; each run's
+    // forward counter must equal exactly its own history's cumulative
+    // forward count — any cross-labeling would sum them together.
+    let reg = Arc::new(Registry::new());
+    let mgr = RunManager::start_with_telemetry(artifacts(), None, reg.clone()).unwrap();
+    let c = mgr.client();
+    let a = c
+        .submit(RunSpec::new("tiny-enc", "sst2", OptimizerKind::fzoo(1e-3, 1e-3), 8).seed(1))
+        .unwrap();
+    let b = c
+        .submit(RunSpec::new("tiny-dec", "boolq", OptimizerKind::mezo(1e-4, 1e-3), 8).seed(2))
+        .unwrap();
+    c.train_steps(a.id, 8).unwrap();
+    c.train_steps(b.id, 8).unwrap();
+    let ha = a.wait().unwrap();
+    let hb = b.wait().unwrap();
+
+    let fwd = |run: &str| reg.counter(names::FORWARD_PASSES, "", &[("run", run)]).value();
+    let steps = |run: &str| reg.counter(names::STEPS, "", &[("run", run)]).value();
+    let fa = ha.records.last().unwrap().forwards;
+    let fb = hb.records.last().unwrap().forwards;
+    assert_eq!(fwd("tiny-enc-sst2-s1"), fa, "run a forward counter");
+    assert_eq!(fwd("tiny-dec-boolq-s2"), fb, "run b forward counter");
+    assert_ne!(fa, fb, "fzoo and mezo spend different forwards per step");
+    assert_eq!(steps("tiny-enc-sst2-s1"), 8.0);
+    assert_eq!(steps("tiny-dec-boolq-s2"), 8.0);
+
+    // serve-side series carry the same label and stay per-run too
+    let st = c.status().unwrap();
+    for s in &st {
+        assert!(s.forwards_per_sec > 0.0, "{}: throughput from telemetry", s.name);
+        assert!(s.mean_step_ms > 0.0, "{}: mean step time from telemetry", s.name);
+        assert_eq!((s.restarts, s.failures), (0, 0));
+    }
+    mgr.shutdown().unwrap();
+}
+
+#[test]
+fn prometheus_scrape_mid_training_parses_clean() {
+    let reg = Arc::new(Registry::new());
+    let mgr = RunManager::start_with_telemetry(artifacts(), None, reg).unwrap();
+    let srv = MetricsServer::start("127.0.0.1:0", mgr.telemetry().clone()).unwrap();
+    let c = mgr.client();
+    let h = c
+        .submit(RunSpec::new("tiny-enc", "sst2", OptimizerKind::fzoo(1e-3, 1e-3), 100_000))
+        .unwrap();
+    c.train_steps(h.id, 100_000).unwrap();
+
+    // poll until the run's series shows up — i.e. scrape WHILE training
+    let run_line = r#"fzoo_steps_total{run="tiny-enc-sst2-s0"}"#;
+    let mut body = String::new();
+    for _ in 0..600 {
+        body = scrape(srv.addr());
+        if body.contains(run_line) {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    assert!(body.contains(run_line), "run series never appeared:\n{body}");
+
+    // every sample line must parse as `name[{labels}] value` with a
+    // finite value and an fzoo_-prefixed name
+    let mut samples = 0;
+    for line in body.lines().filter(|l| !l.is_empty() && !l.starts_with('#')) {
+        let (series, value) = line.rsplit_once(' ').unwrap_or_else(|| panic!("bad line: {line}"));
+        let v: f64 = value.parse().unwrap_or_else(|_| panic!("bad value in: {line}"));
+        assert!(v.is_finite(), "non-finite sample: {line}");
+        let name = series.split('{').next().unwrap();
+        assert!(name.starts_with("fzoo_"), "unexpected family: {line}");
+        samples += 1;
+    }
+    assert!(samples > 10, "suspiciously small scrape ({samples} samples)");
+
+    // histogram expansion: per-run buckets with `le` labels, sum + count
+    assert!(body.contains(r#"fzoo_step_duration_seconds_bucket{run="tiny-enc-sst2-s0",le="#));
+    assert!(body.contains(r#"le="+Inf""#));
+    assert!(body.contains(r#"fzoo_step_duration_seconds_sum{run="tiny-enc-sst2-s0"}"#));
+    assert!(body.contains(r#"fzoo_step_duration_seconds_count{run="tiny-enc-sst2-s0"}"#));
+    // optimizer-family and scheduler series are live too
+    assert!(body.contains("fzoo_probe_batches_total{"));
+    assert!(body.contains("fzoo_serve_live_runs 1"));
+
+    c.stop(h.id).unwrap();
+    let hist = h.wait().unwrap();
+    assert!(hist.stopped_early);
+    drop(srv);
+    mgr.shutdown().unwrap();
+}

@@ -6,6 +6,8 @@
 #   3. tier-1                     — cargo build --release && cargo test -q
 #   4. chaos (pinned seed)        — fault-plan sweep determinism; the
 #      randomized version is `make chaos` (FZOO_CHAOS_SEED to replay)
+#   5. metrics smoke              — live serve with --metrics-addr, one
+#      Prometheus scrape, fzoo_forward_passes_total must be non-empty
 #
 # The Rust tests need the AOT artifacts (`make artifacts`) for the
 # integration/invariant suites (serve, recovery, invariants); unit tests
@@ -26,5 +28,8 @@ cargo test -q
 echo "== chaos: fault-plan sweep, seed ${FZOO_CHAOS_SEED:-51717} =="
 FZOO_CHAOS_SEED="${FZOO_CHAOS_SEED:-51717}" \
     cargo test -q --test recovery -- --ignored chaos
+
+echo "== metrics smoke: serve --metrics-addr + live scrape =="
+./scripts/metrics_smoke.sh
 
 echo "check: all gates passed"

@@ -1,0 +1,78 @@
+#!/usr/bin/env bash
+# Serve-and-scrape smoke test (`make metrics-smoke`): launch a tiny CPU
+# serve job with the Prometheus listener enabled, poll /metrics until the
+# run's series appear, and assert `fzoo_forward_passes_total` is live and
+# non-zero. Needs `target/release/fzoo` and the tiny AOT artifacts.
+#
+# FZOO_METRICS_PORT overrides the listener port (default 9464).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+PORT="${FZOO_METRICS_PORT:-9464}"
+BIN=target/release/fzoo
+if [ ! -x "$BIN" ]; then
+    echo "metrics-smoke: $BIN not built (run: cargo build --release)" >&2
+    exit 1
+fi
+
+work="$(mktemp -d)"
+serve_pid=""
+cleanup() {
+    if [ -n "$serve_pid" ]; then
+        kill "$serve_pid" 2>/dev/null || true
+        wait "$serve_pid" 2>/dev/null || true
+    fi
+    rm -rf "$work"
+}
+trap cleanup EXIT
+
+# One long-running tiny job: the step budget is far larger than the poll
+# window, so the scrape below always lands mid-training.
+cat > "$work/jobs.json" <<EOF
+{
+  "artifacts": "artifacts",
+  "log_dir": "$work",
+  "jobs": [
+    {"name": "smoke", "model": "tiny-enc", "task": "sst2", "steps": 100000,
+     "eval_batches": 0,
+     "optimizer": {"kind": "fzoo", "lr": 1e-3, "eps": 1e-3}}
+  ]
+}
+EOF
+
+"$BIN" serve --jobs "$work/jobs.json" \
+    --metrics-addr "127.0.0.1:$PORT" --metrics-interval-s 1 \
+    > "$work/serve.log" 2>&1 &
+serve_pid=$!
+
+body=""
+for _ in $(seq 1 120); do
+    if body="$(curl -sf "http://127.0.0.1:$PORT/metrics" 2>/dev/null)" &&
+        grep -q '^fzoo_forward_passes_total{run="smoke"}' <<<"$body"; then
+        break
+    fi
+    if ! kill -0 "$serve_pid" 2>/dev/null; then
+        echo "metrics-smoke: serve exited before the scrape:" >&2
+        cat "$work/serve.log" >&2
+        exit 1
+    fi
+    sleep 0.5
+done
+
+line="$(grep '^fzoo_forward_passes_total{run="smoke"}' <<<"$body" | head -n1 || true)"
+if [ -z "$line" ]; then
+    echo "metrics-smoke: fzoo_forward_passes_total never appeared; last scrape:" >&2
+    printf '%s\n' "$body" >&2
+    exit 1
+fi
+value="${line##* }"
+if ! awk -v v="$value" 'BEGIN { exit !(v > 0) }'; then
+    echo "metrics-smoke: forward counter is not positive: $line" >&2
+    exit 1
+fi
+if ! grep -q '^fzoo_step_duration_seconds_bucket{' <<<"$body"; then
+    echo "metrics-smoke: step-duration histogram missing from scrape" >&2
+    exit 1
+fi
+
+echo "metrics-smoke: OK — $line"
