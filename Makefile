@@ -1,6 +1,6 @@
 PY ?= python3
 
-.PHONY: artifacts check chaos ci metrics-smoke pytest
+.PHONY: artifacts check chaos ci metrics-smoke pytest trace-smoke
 
 # AOT-compile the model graphs + manifest (python/compile/aot.py).
 # Incremental; use FORCE=1 to rebuild everything.
@@ -29,6 +29,13 @@ chaos:
 # Needs target/release/fzoo and the tiny artifacts.
 metrics-smoke:
 	./scripts/metrics_smoke.sh
+
+# Tracing smoke: a faulted serve job under --trace-dir must leave a
+# Perfetto-loadable per-run trace plus a flight-recorder crash dump, and
+# `fzoo trace summarize` must read both back.
+# Needs target/release/fzoo and the tiny artifacts.
+trace-smoke:
+	./scripts/trace_smoke.sh
 
 # Build-time (Python) test suite.
 pytest:

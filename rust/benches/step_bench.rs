@@ -182,7 +182,9 @@ fn main() {
             while got < k {
                 match h.next_event() {
                     Some(Event::Step(_)) => got += 1,
-                    Some(Event::Failed(e)) => panic!("serve run failed mid-bench: {e}"),
+                    Some(Event::Failed { error, .. }) => {
+                        panic!("serve run failed mid-bench: {error}")
+                    }
                     Some(_) => {}
                     None => panic!("serve event stream ended mid-bench"),
                 }

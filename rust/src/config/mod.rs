@@ -124,10 +124,12 @@ impl TrainConfig {
 /// `max_restarts`, `restart_backoff`, `keep_last` and
 /// `diverge_ema_factor` may likewise be set at file level as defaults for
 /// jobs that omit them (see the README's "Failure semantics" section).
-/// `metrics_addr` / `metrics_interval_s` configure the telemetry exports
-/// (Prometheus listener address and the per-run JSONL flush period; see
-/// the README's "Observability" section) — `--metrics-addr` /
-/// `--metrics-interval-s` on the CLI win over the file.
+/// `metrics_addr` / `metrics_interval_s` / `metrics_textfile` /
+/// `trace_dir` configure the telemetry exports (Prometheus listener
+/// address, the per-run JSONL flush period, an optional Prometheus
+/// textfile rewritten each tick, and the step-level trace directory; see
+/// the README's "Observability" section) — the matching `--metrics-*` /
+/// `--trace-dir` CLI flags win over the file.
 #[derive(Debug, Clone)]
 pub struct JobFile {
     pub artifacts: String,
@@ -135,6 +137,11 @@ pub struct JobFile {
     pub metrics_addr: Option<String>,
     /// Seconds between JSONL metrics snapshots (default 5).
     pub metrics_interval_s: u64,
+    /// Prometheus textfile rewritten on every snapshot tick (None = off).
+    pub metrics_textfile: Option<String>,
+    /// Directory for Chrome-trace timelines and flight-recorder dumps
+    /// (None = tracing off).
+    pub trace_dir: Option<String>,
     pub jobs: Vec<crate::serve::RunSpec>,
 }
 
@@ -213,6 +220,8 @@ impl JobFile {
                 .map(|x| x.as_u64())
                 .transpose()?
                 .unwrap_or(5),
+            metrics_textfile: opt_str(&v, "metrics_textfile")?,
+            trace_dir: opt_str(&v, "trace_dir")?,
             jobs,
         })
     }
@@ -306,6 +315,7 @@ mod tests {
                 "max_restarts":2,"restart_backoff":3,"keep_last":5,
                 "diverge_ema_factor":8.0,
                 "metrics_addr":"127.0.0.1:9464","metrics_interval_s":2,
+                "metrics_textfile":"m.prom","trace_dir":"traces",
                 "jobs":[
                   {"name":"a","model":"tiny-enc","task":"sst2",
                    "optimizer":{"kind":"fzoo","lr":1e-3,"eps":1e-3},
@@ -320,6 +330,8 @@ mod tests {
         assert_eq!(f.artifacts, "arts");
         assert_eq!(f.metrics_addr.as_deref(), Some("127.0.0.1:9464"));
         assert_eq!(f.metrics_interval_s, 2);
+        assert_eq!(f.metrics_textfile.as_deref(), Some("m.prom"));
+        assert_eq!(f.trace_dir.as_deref(), Some("traces"));
         assert_eq!(f.jobs.len(), 2);
         assert_eq!(f.jobs[0].checkpoint_dir.as_deref(), Some("ck"));
         assert_eq!(f.jobs[0].log_path.as_deref(), Some("runs/a.jsonl"));

@@ -23,7 +23,9 @@ use crate::data::{Batcher, Task};
 use crate::optim::{Optimizer, OptimizerKind};
 use crate::runtime::fault::{InjectedFault, Transient};
 use crate::runtime::{FaultSite, Runtime, Session};
-use crate::telemetry::{names, Counter, Gauge, Histogram, HistogramSpec, Registry};
+use crate::telemetry::{
+    names, Counter, Gauge, Histogram, HistogramSpec, Registry, TraceSink, TraceSpan,
+};
 use crate::util::json::Value;
 
 use super::metrics::{evaluate, EvalOut};
@@ -80,9 +82,19 @@ struct StepMetrics {
     ema: Arc<Gauge>,
     best_ema: Arc<Gauge>,
     sigma: Arc<Histogram>,
+    /// This loop's run label (also the trace-scope owner name).
+    run: String,
+    /// Trace sink, resolved alongside the metric handles — `None` when
+    /// tracing is off, so the step path pays nothing.
+    tracer: Option<Arc<TraceSink>>,
 }
 
 impl StepMetrics {
+    /// Open a train-category trace span, if tracing is on.
+    fn trace(&self, name: &'static str) -> Option<TraceSpan> {
+        self.tracer.as_ref().map(|t| t.span("train", name))
+    }
+
     fn resolve(reg: &Registry, run: &str) -> Self {
         let dur = HistogramSpec::duration();
         let l = [("run", run)];
@@ -124,6 +136,8 @@ impl StepMetrics {
                 &l,
                 HistogramSpec::wide(),
             ),
+            run: run.to_string(),
+            tracer: reg.tracer(),
         }
     }
 }
@@ -474,6 +488,14 @@ impl TrainLoop {
         }
         let step = self.next_step;
         let m = self.metrics(rt);
+        // Trace scope first, phase spans after: Rust drops in reverse
+        // declaration order, so every span below lands in the scope's
+        // step buffer before the scope closes. An error `?` anywhere in
+        // this function drops the open spans (recording the phase the
+        // step died in) and then files the buffer as a *partial* step in
+        // the run's flight ring — the crash dump's newest entry.
+        let scope = m.tracer.as_ref().map(|t| t.begin_step(&m.run, step));
+        let mut step_trace = m.trace("step");
         // Spans are the single timing source: `finish()` returns the same
         // elapsed seconds it records, so the exported histograms,
         // `StepRecord::wall_ms` and `History::total_wall_s` can never
@@ -482,9 +504,12 @@ impl TrainLoop {
         let scale = self.opts.schedule.scale(step, self.opts.steps);
         optimizer.set_lr_scale(scale);
         let batch_span = m.phase_batch.span();
+        let batch_trace = m.trace("batch");
         let batch = batcher.next_train();
         batch_span.finish();
+        drop(batch_trace);
         let optim_span = m.phase_optim.span();
+        let optim_trace = m.trace("optim");
         // Bracket the step with its index so fault rules get
         // training-step precision (`at_step`); scope_step is a no-op
         // without an installed plan.
@@ -508,6 +533,7 @@ impl TrainLoop {
             }));
         }
         let wall_ms = optim_span.finish() * 1e3;
+        drop(optim_trace);
         self.forwards += out.forwards;
         self.forward_equiv += out.forward_equiv;
         m.steps.inc();
@@ -516,6 +542,13 @@ impl TrainLoop {
         m.loss.set(out.loss as f64);
         if let Some(sigma) = out.sigma {
             m.sigma.observe(sigma as f64);
+        }
+        if let Some(t) = step_trace.as_mut() {
+            t.arg("loss", out.loss as f64);
+            t.arg("forwards", out.forwards);
+            if let Some(sigma) = out.sigma {
+                t.arg("sigma", sigma as f64);
+            }
         }
         let record = StepRecord {
             step,
@@ -558,8 +591,10 @@ impl TrainLoop {
         let mut eval = None;
         if self.opts.eval_every > 0 && (step + 1) % self.opts.eval_every == 0 {
             let eval_span = m.phase_eval.span();
+            let eval_trace = m.trace("eval");
             let ev = evaluate(rt, session, batcher, self.opts.eval_batches)?;
             eval_span.finish();
+            drop(eval_trace);
             let er = EvalRecord {
                 step: step + 1,
                 accuracy: ev.accuracy,
@@ -598,6 +633,10 @@ impl TrainLoop {
             self.finished = true;
         }
         self.history.total_wall_s += step_span.finish();
+        drop(step_trace);
+        if let Some(s) = &scope {
+            s.complete();
+        }
         Ok(StepOutcome::Stepped { record, eval })
     }
 
@@ -617,6 +656,11 @@ impl TrainLoop {
         {
             let m = self.metrics(rt);
             let eval_span = m.phase_eval.span();
+            // Outside any step scope here, so name the run explicitly.
+            let mut eval_trace = m.trace("eval");
+            if let Some(t) = eval_trace.as_mut() {
+                t.run(m.run.clone());
+            }
             let ev = evaluate(rt, session, batcher, self.opts.eval_batches)?;
             let er = EvalRecord {
                 step: self.history.steps_run,
@@ -626,6 +670,7 @@ impl TrainLoop {
             };
             self.history.evals.push(er);
             self.history.total_wall_s += eval_span.finish();
+            drop(eval_trace);
             out = Some(er);
         }
         // Refresh the host mirror once so exporters/checkpoints read

@@ -9,6 +9,7 @@
 //! fzoo mem                                   # Table-12-style memory model
 //! ```
 
+use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::Arc;
 use std::time::Duration;
@@ -22,7 +23,8 @@ use fzoo::memmodel;
 use fzoo::optim::OptimizerKind;
 use fzoo::runtime::{FaultPlan, Runtime, Session};
 use fzoo::serve::{Event, RunManager};
-use fzoo::telemetry::{names, HistogramSpec, JsonlExporter, MetricsServer, Registry};
+use fzoo::telemetry::{names, HistogramSpec, JsonlExporter, MetricsServer, Registry, TraceSink};
+use fzoo::util::json;
 use fzoo::util::args::Args;
 
 const USAGE: &str = "\
@@ -38,14 +40,22 @@ USAGE:
              [--log out.jsonl]
   fzoo serve --jobs jobs.json [--artifacts DIR] [--fault-plan plan.json]
              [--metrics-addr HOST:PORT] [--metrics-interval-s N]
+             [--metrics-textfile FILE] [--trace-dir DIR]
              # drive every job in the file concurrently over one runtime
              # (round-robin step multiplexing); per-run JSONL logs, periodic
              # checkpoints (checkpoint_every/resume_from) and a summary
              # table. --fault-plan installs a deterministic fault-injection
              # plan (chaos testing). --metrics-addr serves Prometheus text
              # at /metrics; runs with a log also get a <run>.metrics.jsonl
-             # snapshot stream every N seconds (default 5). See the
-             # README's Observability section for schemas.
+             # snapshot stream every N seconds (default 5).
+             # --metrics-textfile rewrites a Prometheus textfile each tick.
+             # --trace-dir enables step-level tracing: one Chrome-trace
+             # <run>.trace.json per run (open in Perfetto), plus automatic
+             # <run>.stepN.flight.json crash dumps on failure/recovery.
+             # See the README's Observability section for schemas.
+  fzoo trace summarize FILE
+             # per-phase self-time breakdown, slowest steps, and the
+             # probe-σ trail of a .trace.json / .flight.json file
   fzoo eval  [--artifacts DIR] --model M --task T [--eval-batches N]
   fzoo info  [--artifacts DIR]
   fzoo mem
@@ -60,6 +70,7 @@ fn main() -> Result<()> {
     match args.positional[0].as_str() {
         "train" => cmd_train(&args),
         "serve" => cmd_serve(&args),
+        "trace" => cmd_trace(&args),
         "eval" => cmd_eval(&args),
         "info" => cmd_info(&args),
         "mem" => cmd_mem(),
@@ -182,6 +193,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         Some(s) => s,
         None => file.metrics_interval_s,
     };
+    let metrics_textfile = args
+        .get("metrics-textfile")
+        .map(|s| s.to_string())
+        .or_else(|| file.metrics_textfile.clone());
+    let trace_dir = args
+        .get("trace-dir")
+        .map(|s| s.to_string())
+        .or_else(|| file.trace_dir.clone());
     let faults = match args.get("fault-plan") {
         Some(p) => {
             let plan = FaultPlan::from_file(p)?;
@@ -191,6 +210,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
         None => None,
     };
     let telemetry = Arc::new(Registry::new());
+    // Install the trace sink BEFORE the worker boots: the runtime resolves
+    // it (alongside its metric handles) at load time.
+    let trace_sink = match &trace_dir {
+        Some(dir) => {
+            std::fs::create_dir_all(dir)?;
+            let sink = Arc::new(TraceSink::with_dir(dir));
+            telemetry.set_tracer(sink.clone());
+            println!("tracing: {dir}/<run>.trace.json (Chrome trace-event format)");
+            Some(sink)
+        }
+        None => None,
+    };
     let mgr = RunManager::start_with_telemetry(artifacts.as_str(), faults, telemetry.clone())?;
     let client = mgr.client();
     println!("serve: {} jobs from {jobs_path}", file.jobs.len());
@@ -261,11 +292,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
                             eprintln!("[{name}] checkpoint @ step {step} -> {path}");
                             None
                         }
-                        Some(Event::Recovered { step, from_checkpoint, cause }) => {
+                        Some(Event::Recovered { step, from_checkpoint, cause, flight_dump }) => {
                             eprintln!(
                                 "[{name}] recovered @ step {step} (from {}) after: {cause}",
                                 from_checkpoint.as_deref().unwrap_or("scratch"),
                             );
+                            if let Some(d) = flight_dump {
+                                eprintln!("[{name}] flight dump -> {d}");
+                            }
                             None
                         }
                         Some(Event::Finished(h)) => {
@@ -277,7 +311,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
                                 ))),
                             }
                         }
-                        Some(Event::Failed(e)) => bail!("{e}"),
+                        Some(Event::Failed { error, flight_dump }) => {
+                            if let Some(d) = flight_dump {
+                                eprintln!("[{name}] flight dump -> {d}");
+                            }
+                            bail!("{error}")
+                        }
                         None => bail!("event stream closed before completion"),
                     };
                     if let Some(e) = broke {
@@ -290,6 +329,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ));
     }
 
+    if let Some(path) = &metrics_textfile {
+        exporter.export_prometheus_to(path);
+        println!("metrics textfile: {path}");
+    }
     let _flusher = if exporter.is_empty() {
         None
     } else {
@@ -307,8 +350,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let status = client.status()?;
 
     println!(
-        "\n{:<28} {:>6} {:>9} {:>7} {:>7} {:>8} {:>8} {:>8}  log",
-        "run", "steps", "loss", "acc", "f1", "wall_s", "fwd/s", "ms/step"
+        "\n{:<28} {:>6} {:>9} {:>7} {:>7} {:>8} {:>8} {:>8} {:>6} {:>6}  log",
+        "run", "steps", "loss", "acc", "f1", "wall_s", "fwd/s", "ms/step", "ckpt@", "age_s"
     );
     let mut failed = 0usize;
     for (name, id, outcome, log_path) in results {
@@ -316,9 +359,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let st = status.iter().find(|s| s.id == id);
         // release the run's device-resident session/optimizer state
         let _ = client.remove(id);
+        let ckpt_at = st
+            .and_then(|s| s.last_checkpoint_step)
+            .map(|s| s.to_string())
+            .unwrap_or_else(|| "-".into());
+        let ckpt_age = st
+            .and_then(|s| s.last_checkpoint_age_s)
+            .map(|a| format!("{a:.0}"))
+            .unwrap_or_else(|| "-".into());
         match outcome {
             Ok(h) => println!(
-                "{:<28} {:>6} {:>9.4} {:>7} {:>7} {:>8.1} {:>8.1} {:>8.1}  {log}",
+                "{:<28} {:>6} {:>9.4} {:>7} {:>7} {:>8.1} {:>8.1} {:>8.1} {:>6} {:>6}  {log}",
                 name,
                 h.steps_run,
                 h.last_loss(),
@@ -331,6 +382,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 h.total_wall_s,
                 st.map(|s| s.forwards_per_sec).unwrap_or(0.0),
                 st.map(|s| s.mean_step_ms).unwrap_or(0.0),
+                ckpt_at,
+                ckpt_age,
             ),
             Err(e) => {
                 failed += 1;
@@ -362,9 +415,175 @@ fn cmd_serve(args: &Args) -> Result<()> {
             println!("{line}");
         }
     }
+    // Write per-run Chrome traces last: the timelines are complete once
+    // every collector has drained its stream.
+    if let Some(sink) = &trace_sink {
+        println!("\ntraces:");
+        for st in &status {
+            match sink.write_run_trace(&st.name) {
+                Ok(p) => println!("  {:<28} {}", st.name, p.display()),
+                Err(e) => eprintln!("  {:<28} write failed: {e:#}", st.name),
+            }
+            if let Some(d) = &st.flight_dump {
+                println!("  {:<28} flight dump {d}", "");
+            }
+        }
+        if sink.dropped() > 0 {
+            eprintln!("trace: {} event(s) dropped at the buffer cap", sink.dropped());
+        }
+    }
     mgr.shutdown()?;
     if failed > 0 {
         bail!("{failed} run(s) failed");
+    }
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    match (args.positional.get(1).map(String::as_str), args.positional.get(2)) {
+        (Some("summarize"), Some(path)) => summarize_trace(Path::new(path)),
+        _ => bail!("usage: fzoo trace summarize <file.trace.json | file.flight.json>"),
+    }
+}
+
+/// One `ph:"X"` complete event read back from a trace file.
+struct TraceRow {
+    tid: f64,
+    ts: f64,
+    dur: f64,
+    /// `cat/name`, the per-phase aggregation key
+    key: String,
+    name: String,
+    run: Option<String>,
+    step: Option<u64>,
+    loss: Option<f64>,
+    sigma: Option<f64>,
+}
+
+/// Offline readback of a `.trace.json` / `.flight.json` file: per-phase
+/// self-time breakdown (child spans subtracted from their enclosing
+/// span), the slowest steps, and the probe-σ trail.
+fn summarize_trace(path: &Path) -> Result<()> {
+    let text = std::fs::read_to_string(path)?;
+    let v = json::parse(&text)?;
+    if let Some(hdr) = v.get("fzoo") {
+        let s = |k: &str| hdr.get(k).and_then(|x| x.as_str().ok()).unwrap_or("?").to_string();
+        let n = |k: &str| {
+            hdr.get(k)
+                .and_then(|x| x.as_f64().ok())
+                .map(|x| format!("{x}"))
+                .unwrap_or_else(|| "?".into())
+        };
+        println!(
+            "flight dump: run {} | reason {} | steps {}..={} ({} in ring)",
+            s("run"),
+            s("reason"),
+            n("first_step"),
+            n("last_step"),
+            n("steps"),
+        );
+    }
+    let mut rows = Vec::new();
+    for ev in v.req("traceEvents")?.as_arr()? {
+        if ev.get("ph").and_then(|p| p.as_str().ok()) != Some("X") {
+            continue;
+        }
+        let cat = ev.get("cat").and_then(|x| x.as_str().ok()).unwrap_or("?");
+        let name = ev.get("name").and_then(|x| x.as_str().ok()).unwrap_or("?");
+        let args = ev.get("args");
+        let num = |k: &str| args.and_then(|a| a.get(k)).and_then(|x| x.as_f64().ok());
+        rows.push(TraceRow {
+            tid: ev.get("tid").and_then(|x| x.as_f64().ok()).unwrap_or(0.0),
+            ts: ev.get("ts").and_then(|x| x.as_f64().ok()).unwrap_or(0.0),
+            dur: ev.get("dur").and_then(|x| x.as_f64().ok()).unwrap_or(0.0),
+            key: format!("{cat}/{name}"),
+            name: name.to_string(),
+            run: args
+                .and_then(|a| a.get("run"))
+                .and_then(|x| x.as_str().ok())
+                .map(str::to_string),
+            step: num("step").map(|s| s as u64),
+            loss: num("loss"),
+            sigma: num("sigma"),
+        });
+    }
+    anyhow::ensure!(!rows.is_empty(), "{}: no trace events", path.display());
+    println!("{}: {} events", path.display(), rows.len());
+
+    // Self time via a containment stack per thread row: events sorted by
+    // (tid, start asc, duration desc) nest, so an event's children are
+    // exactly the later events starting before it ends.
+    let mut order: Vec<usize> = (0..rows.len()).collect();
+    order.sort_by(|&a, &b| {
+        rows[a]
+            .tid
+            .total_cmp(&rows[b].tid)
+            .then(rows[a].ts.total_cmp(&rows[b].ts))
+            .then(rows[b].dur.total_cmp(&rows[a].dur))
+    });
+    let mut self_us: Vec<f64> = rows.iter().map(|r| r.dur).collect();
+    let mut stack: Vec<usize> = Vec::new();
+    let mut cur_tid: Option<f64> = None;
+    for &i in &order {
+        let r = &rows[i];
+        if cur_tid != Some(r.tid) {
+            stack.clear();
+            cur_tid = Some(r.tid);
+        }
+        while let Some(&top) = stack.last() {
+            if rows[top].ts + rows[top].dur <= r.ts {
+                stack.pop();
+            } else {
+                break;
+            }
+        }
+        if let Some(&top) = stack.last() {
+            self_us[top] -= r.dur;
+        }
+        stack.push(i);
+    }
+    let mut agg: BTreeMap<&str, (u64, f64, f64)> = BTreeMap::new();
+    for (i, r) in rows.iter().enumerate() {
+        let e = agg.entry(r.key.as_str()).or_insert((0, 0.0, 0.0));
+        e.0 += 1;
+        e.1 += r.dur;
+        e.2 += self_us[i];
+    }
+    let mut phases: Vec<_> = agg.into_iter().collect();
+    phases.sort_by(|(_, x), (_, y)| y.2.total_cmp(&x.2));
+    println!("\n{:<20} {:>7} {:>12} {:>12}", "phase", "count", "total_ms", "self_ms");
+    for (key, (count, total, slf)) in &phases {
+        println!("{key:<20} {count:>7} {:>12.2} {:>12.2}", total / 1e3, slf / 1e3);
+    }
+
+    let mut steps: Vec<&TraceRow> = rows.iter().filter(|r| r.name == "step").collect();
+    if !steps.is_empty() {
+        steps.sort_by(|a, b| b.dur.total_cmp(&a.dur));
+        println!("\nslowest steps:");
+        for r in steps.iter().take(5) {
+            println!(
+                "  {:<24} step {:>5} {:>9.2} ms  loss {}",
+                r.run.as_deref().unwrap_or("-"),
+                r.step.map(|s| s.to_string()).unwrap_or_else(|| "?".into()),
+                r.dur / 1e3,
+                r.loss.map(|l| format!("{l:.4}")).unwrap_or_else(|| "-".into()),
+            );
+        }
+    }
+    let mut sig: Vec<&TraceRow> =
+        rows.iter().filter(|r| r.name == "step" && r.sigma.is_some()).collect();
+    if !sig.is_empty() {
+        sig.sort_by(|a, b| a.ts.total_cmp(&b.ts));
+        let skip = sig.len().saturating_sub(16);
+        println!("\nprobe-σ trail (last {} steps):", sig.len() - skip);
+        for r in &sig[skip..] {
+            println!(
+                "  step {:>5}  σ {:>12.6}  loss {}",
+                r.step.map(|s| s.to_string()).unwrap_or_else(|| "?".into()),
+                r.sigma.unwrap_or(0.0),
+                r.loss.map(|l| format!("{l:.4}")).unwrap_or_else(|| "-".into()),
+            );
+        }
     }
     Ok(())
 }

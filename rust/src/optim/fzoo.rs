@@ -23,7 +23,7 @@ use anyhow::Result;
 
 use crate::data::Batch;
 use crate::runtime::{scalar_f32, to_vec_f32, Runtime, Session};
-use crate::telemetry::{names, Counter};
+use crate::telemetry::{names, Counter, TraceSink};
 
 use super::{sample_std, step_seed, Objective, OptState, Optimizer, StepOut};
 
@@ -33,6 +33,10 @@ use super::{sample_std, step_seed, Objective, OptState, Optimizer, StepOut};
 struct FzooMetrics {
     probe_batches: Arc<Counter>,
     probe_losses: Arc<Counter>,
+    /// Trace sink (`None` when tracing is off). Probe/update spans carry
+    /// no run label of their own — inside `TrainLoop`'s step scope they
+    /// inherit the step's (run, step) attribution.
+    tracer: Option<Arc<TraceSink>>,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -102,6 +106,7 @@ impl Fzoo {
                     "Probe losses produced (N+1 per step)",
                     &labels,
                 ),
+                tracer: reg.tracer(),
             });
         }
         self.metrics.as_ref().expect("just resolved")
@@ -239,7 +244,15 @@ impl Optimizer for Fzoo {
     fn step(&mut self, rt: &Runtime, s: &mut Session, batch: &Batch, step: u64)
         -> Result<StepOut> {
         let seed = step_seed(self.run_seed, step);
+        // Clone the sink handle out so the lazy-resolve borrow ends
+        // before `probe` re-borrows self.
+        let tracer = self.metrics(rt).tracer.clone();
+        let mut probe_trace = tracer.as_ref().map(|t| t.span("optim", "probe"));
+        if let Some(t) = probe_trace.as_mut() {
+            t.arg("probes", (self.n + 1) as f64);
+        }
         let losses = self.probe(rt, s, batch, seed, self.n)?;
+        drop(probe_trace);
         anyhow::ensure!(losses.len() == self.n + 1, "probe returned {} losses", losses.len());
         {
             let m = self.metrics(rt);
@@ -278,6 +291,7 @@ impl Optimizer for Fzoo {
             .iter()
             .map(|&li| self.eta * (li - l0) / (self.n as f32 * sigma))
             .collect();
+        let update_trace = tracer.as_ref().map(|t| t.span("optim", "update"));
         let upd = rt.executable(&s.model, &self.update_exe(s))?;
         let theta2 = upd
             .call()
@@ -286,6 +300,7 @@ impl Optimizer for Fzoo {
             .vec_f32("coeffs", &coeffs)?
             .run_device()?;
         s.set_trainable_dev(theta2);
+        drop(update_trace);
 
         Ok(StepOut {
             loss: l0,

@@ -74,11 +74,16 @@ impl DeviceVec {
                 .context(format!("device -> host copy ({} f32s)", self.len)));
         }
         let span = self.metrics.to_host_seconds.span();
+        let mut trace = self.metrics.trace("to_host");
+        if let Some(t) = trace.as_mut() {
+            t.arg("elems", self.len as f64);
+        }
         let lit = self.buf.to_literal_sync().map_err(|e| {
             anyhow::Error::new(Transient)
                 .context(format!("device -> host copy ({} f32s): {e}", self.len))
         })?;
         span.finish();
+        drop(trace);
         to_vec_f32(&lit)
     }
 
@@ -294,6 +299,10 @@ impl<'a> Call<'a> {
         // Stage host-side args as Rust-owned buffers (freed on Drop);
         // device-resident args are borrowed in place.
         let bind_span = exe.metrics.bind_seconds.span();
+        let mut bind_trace = exe.metrics.trace("bind");
+        if let Some(t) = bind_trace.as_mut() {
+            t.detail(exe.name.clone());
+        }
         let mut staged: Vec<Option<xla::PjRtBuffer>> = Vec::with_capacity(self.slots.len());
         for (slot, spec) in self.slots.iter().zip(&exe.spec.inputs) {
             staged.push(match slot.as_ref().unwrap() {
@@ -312,11 +321,16 @@ impl<'a> Call<'a> {
             })
             .collect();
         bind_span.finish();
+        drop(bind_trace);
         if let Some(f) = exe.faults.fire(FaultSite::Execute) {
             exe.metrics.fault_injected(FaultSite::Execute);
             return Err(anyhow::Error::new(f).context(format!("executing {}", exe.name)));
         }
         let exec_span = exe.metrics.execute_seconds.span();
+        let mut exec_trace = exe.metrics.trace("execute");
+        if let Some(t) = exec_trace.as_mut() {
+            t.detail(exe.name.clone());
+        }
         let bufs = exe.exe.execute_b::<&xla::PjRtBuffer>(&args).map_err(|e| {
             // A PJRT execute failure with validated shapes is an
             // environment fault (allocation, runtime), not a logic error:
@@ -324,6 +338,7 @@ impl<'a> Call<'a> {
             anyhow::Error::new(Transient).context(format!("executing {}: {e}", exe.name))
         })?;
         exec_span.finish();
+        drop(exec_trace);
         anyhow::ensure!(
             !bufs.is_empty() && !bufs[0].is_empty(),
             "{}: execution returned no output buffers",

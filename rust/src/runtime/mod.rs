@@ -53,12 +53,14 @@ pub use manifest::{ExeSpec, IoSpec, Manifest, ModelConfig, ModelEntry};
 pub use session::Session;
 use xla::{Literal, PjRtClient};
 
-use crate::telemetry::{names, Counter, Histogram, HistogramSpec, Registry};
+use crate::telemetry::{names, Counter, Histogram, HistogramSpec, Registry, TraceSink, TraceSpan};
 
 /// Pre-resolved runtime-level metric handles, shared — exactly like
 /// [`FaultState`] — by the runtime, every cached [`Executable`] and every
 /// [`DeviceVec`] it creates. Hot-path updates are relaxed atomics on
-/// these `Arc`s; the registry mutex is paid once, here.
+/// these `Arc`s; the registry mutex is paid once, here. Every family
+/// carries a `device=` label (constant today — one PJRT device per
+/// worker — but multi-device failover gets per-device series for free).
 pub struct RuntimeMetrics {
     /// Per-graph `client.compile` wall time.
     pub compile_seconds: Arc<Histogram>,
@@ -72,17 +74,22 @@ pub struct RuntimeMetrics {
     fault_to_host: Arc<Counter>,
     fault_checkpoint: Arc<Counter>,
     fault_nonfinite: Arc<Counter>,
+    /// Device identity behind the `device=` label (`<platform>:<ordinal>`).
+    device: String,
+    /// Trace sink resolved from the registry, like the handles above —
+    /// `None` unless one was installed before the runtime loaded.
+    tracer: Option<Arc<TraceSink>>,
 }
 
 impl RuntimeMetrics {
-    pub fn new(reg: &Registry) -> Self {
+    pub fn new(reg: &Registry, device: &str) -> Self {
         let dur = HistogramSpec::duration();
-        let hist = |name: &str, help: &str| reg.histogram(name, help, &[], dur);
+        let hist = |name: &str, help: &str| reg.histogram(name, help, &[("device", device)], dur);
         let fault = |site: FaultSite| {
             reg.counter(
                 names::FAULTS_INJECTED,
                 "Deterministic fault injections fired, by site",
-                &[("site", site.name())],
+                &[("site", site.name()), ("device", device)],
             )
         };
         Self {
@@ -94,7 +101,14 @@ impl RuntimeMetrics {
             fault_to_host: fault(FaultSite::ToHost),
             fault_checkpoint: fault(FaultSite::CheckpointWrite),
             fault_nonfinite: fault(FaultSite::NonFiniteLoss),
+            device: device.to_string(),
+            tracer: reg.tracer(),
         }
+    }
+
+    /// The `device=` label value these families report under.
+    pub fn device(&self) -> &str {
+        &self.device
     }
 
     /// Count an injected fault at `site`.
@@ -105,6 +119,13 @@ impl RuntimeMetrics {
             FaultSite::CheckpointWrite => self.fault_checkpoint.inc(),
             FaultSite::NonFiniteLoss => self.fault_nonfinite.inc(),
         }
+    }
+
+    /// Open a runtime-category trace span, if a sink is installed. The
+    /// span records on drop, so error paths still leave the phase they
+    /// died in on the timeline.
+    pub(crate) fn trace(&self, name: &'static str) -> Option<TraceSpan> {
+        self.tracer.as_ref().map(|t| t.span("runtime", name))
     }
 }
 
@@ -139,7 +160,13 @@ impl Runtime {
         let root = dir.as_ref().to_path_buf();
         let manifest = Manifest::load(&root)?;
         let client = PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu client: {e}"))?;
-        let metrics = Arc::new(RuntimeMetrics::new(&telemetry));
+        // one PJRT device per worker today; the ordinal is ready for
+        // multi-device failover
+        let device = format!("{}:0", client.platform_name().to_lowercase());
+        if let Some(sink) = telemetry.tracer() {
+            sink.set_device(&device);
+        }
+        let metrics = Arc::new(RuntimeMetrics::new(&telemetry, &device));
         Ok(Self {
             client,
             root,
@@ -221,6 +248,10 @@ impl Runtime {
             .clone();
         let path = self.root.join(&spec.file);
         let compile_span = self.metrics.compile_seconds.span();
+        let mut compile_trace = self.metrics.trace("compile");
+        if let Some(t) = compile_trace.as_mut() {
+            t.detail(format!("{model}/{exe}"));
+        }
         let proto = xla::HloModuleProto::from_text_file(&path)
             .map_err(|e| anyhow::anyhow!("loading HLO text {}: {e}", path.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
@@ -229,6 +260,7 @@ impl Runtime {
             .compile(&comp)
             .map_err(|e| anyhow::anyhow!("compiling {model}/{exe}: {e}"))?;
         compile_span.finish();
+        drop(compile_trace);
         // Root contract: manifest v2 lowers single-output graphs with an
         // array root (device-returnable); v1 artifacts and multi-output
         // graphs are tuple-rooted.

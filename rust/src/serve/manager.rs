@@ -293,7 +293,7 @@ impl RunHandle {
         loop {
             match self.events.recv() {
                 Ok(Event::Finished(h)) => return Ok(h),
-                Ok(Event::Failed(e)) => bail!("{} failed: {e}", self.id),
+                Ok(Event::Failed { error, .. }) => bail!("{} failed: {error}", self.id),
                 Ok(_) => continue,
                 Err(_) => {
                     return Err(anyhow::Error::new(WorkerGone::Disconnected).context(format!(

@@ -63,6 +63,14 @@ pub struct RunStatus {
     pub forwards_per_sec: f64,
     /// mean executed-step duration in milliseconds (telemetry-derived)
     pub mean_step_ms: f64,
+    /// step index of the newest checkpoint written (periodic, requested,
+    /// or the pre-rollback state a recovery restored from)
+    pub last_checkpoint_step: Option<u64>,
+    /// seconds since that checkpoint was written — the at-risk window a
+    /// crash right now would replay
+    pub last_checkpoint_age_s: Option<f64>,
+    /// newest flight-recorder dump written for this run (tracing only)
+    pub flight_dump: Option<String>,
 }
 
 /// Stream items delivered to a [`RunHandle`](super::RunHandle).
@@ -79,12 +87,20 @@ pub enum Event {
         step: u64,
         from_checkpoint: Option<String>,
         cause: String,
+        /// Flight-recorder dump written when the failure was classified
+        /// (`None` unless tracing is on with a trace dir).
+        flight_dump: Option<String>,
     },
     /// Terminal: the run completed (or was stopped early); carries the
     /// full history.
     Finished(History),
     /// Terminal: the run errored. Other runs are unaffected.
-    Failed(String),
+    Failed {
+        error: String,
+        /// Flight-recorder dump of the last steps before the failure
+        /// (`None` unless tracing is on with a trace dir).
+        flight_dump: Option<String>,
+    },
 }
 
 /// Everything needed to build one run on the worker thread. Plain data —

@@ -15,6 +15,7 @@
 use std::path::Path;
 use std::sync::mpsc::Sender;
 use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::{Context, Result};
 
@@ -24,7 +25,7 @@ use crate::coordinator::{
 use crate::data::{Batcher, TaskKind};
 use crate::optim::Optimizer;
 use crate::runtime::{FaultSite, Runtime, Session};
-use crate::telemetry::{names, Counter, Gauge, Histogram, HistogramSpec, Registry};
+use crate::telemetry::{names, Counter, Gauge, Histogram, HistogramSpec, Registry, TraceSink};
 
 use super::checkpoint::{latest_valid_checkpoint, prune_checkpoints, Checkpoint};
 use super::protocol::{Event, RunId, RunPhase, RunSpec, RunStatus};
@@ -39,8 +40,12 @@ struct ServeMetrics {
     queue_depth: Arc<Gauge>,
     checkpoints: Arc<Counter>,
     checkpoint_bytes: Arc<Counter>,
+    last_checkpoint_step: Arc<Gauge>,
     forwards: Arc<Counter>,
     step_seconds: Arc<Histogram>,
+    /// Trace sink (`None` when tracing is off). Serve spans run outside
+    /// the step scope, so each names its run (and step) explicitly.
+    tracer: Option<Arc<TraceSink>>,
 }
 
 impl ServeMetrics {
@@ -68,6 +73,11 @@ impl ServeMetrics {
                 "Bytes written across checkpoint file pairs",
                 &l,
             ),
+            last_checkpoint_step: reg.gauge(
+                names::LAST_CHECKPOINT_STEP,
+                "Step index of the newest checkpoint written",
+                &l,
+            ),
             forwards: reg.counter(
                 names::FORWARD_PASSES,
                 "Forward passes executed",
@@ -79,6 +89,7 @@ impl ServeMetrics {
                 &l,
                 HistogramSpec::duration(),
             ),
+            tracer: reg.tracer(),
         }
     }
 }
@@ -197,6 +208,12 @@ pub(crate) struct RunState {
     pending_cause: Option<String>,
     /// cause of the *first* failure — preserved into the terminal error
     first_cause: Option<String>,
+    /// step index of the newest checkpoint this run wrote (or restored)
+    last_checkpoint_step: Option<u64>,
+    /// when that checkpoint was written — drives the status age column
+    last_checkpoint_at: Option<Instant>,
+    /// newest flight-recorder dump file (tracing with a dir only)
+    last_flight_dump: Option<String>,
     metrics: ServeMetrics,
 }
 
@@ -241,6 +258,9 @@ impl RunState {
             cooldown: 0,
             pending_cause: None,
             first_cause: None,
+            last_checkpoint_step: None,
+            last_checkpoint_at: None,
+            last_flight_dump: None,
             metrics,
         };
         // Zero-step plans and resumes at the plan's end are already done:
@@ -305,7 +325,16 @@ impl RunState {
                 if scoped {
                     rt.faults().scope_run(Some(&self.spec.display_name()));
                 }
+                // The dispatch span outlives the step's trace scope (it
+                // drops after `tick_inner` returns), so it names its run
+                // and step explicitly instead of relying on attribution.
+                let mut dispatch = self.metrics.tracer.as_ref().map(|t| t.span("serve", "dispatch"));
+                if let Some(t) = dispatch.as_mut() {
+                    t.run(self.spec.display_name());
+                    t.step(self.lp.next_step());
+                }
                 let res = self.tick_inner(rt);
+                drop(dispatch);
                 if scoped {
                     rt.faults().scope_run(None);
                 }
@@ -360,6 +389,14 @@ impl RunState {
         let cause = format!("{class}: {e:#}");
         self.failures += 1;
         self.metrics.failures.inc();
+        // Flight recorder: the failed step's partial timeline is the
+        // ring's newest entry (its trace scope closed when `step_once`
+        // unwound), so dump now, while the failure is being classified.
+        if let Some(t) = &self.metrics.tracer {
+            if let Some(path) = t.dump_flight(&self.spec.display_name(), class.name()) {
+                self.last_flight_dump = Some(path);
+            }
+        }
         if self.first_cause.is_none() {
             self.first_cause = Some(cause.clone());
         }
@@ -418,6 +455,13 @@ impl RunState {
             },
         };
         let old_next = self.lp.next_step();
+        let mut restore_trace = self.metrics.tracer.as_ref().map(|t| t.span("serve", "restore"));
+        if let Some(t) = restore_trace.as_mut() {
+            t.run(name.clone());
+            if let Some(p) = &from_checkpoint {
+                t.detail(p.clone());
+            }
+        }
         let (session, optimizer, batcher, lp) = build_parts(rt, &self.spec, ck.as_ref())?;
         self.session = session;
         self.optimizer = optimizer;
@@ -426,6 +470,15 @@ impl RunState {
         self.restarts += 1;
         self.metrics.restarts.inc();
         let step = self.lp.next_step();
+        if let Some(t) = restore_trace.as_mut() {
+            t.step(step);
+        }
+        drop(restore_trace);
+        if from_checkpoint.is_some() {
+            // the restored state *is* the newest checkpoint again
+            self.last_checkpoint_step = Some(step);
+            self.metrics.last_checkpoint_step.set(step as f64);
+        }
         // The steps from `step` to the failure point were already paid for
         // once — re-credit the replay so the original `TrainSteps` budget
         // still carries the run to the same place.
@@ -438,6 +491,7 @@ impl RunState {
             step,
             from_checkpoint,
             cause,
+            flight_dump: self.last_flight_dump.clone(),
         });
         if self.lp.is_finished() {
             self.finish(rt)?;
@@ -488,6 +542,15 @@ impl RunState {
     /// Write a checkpoint to the spec's checkpoint dir, then apply the
     /// `keep_last` retention policy; returns the path.
     pub fn write_checkpoint(&mut self, rt: &Runtime) -> Result<String> {
+        let name = self.spec.display_name();
+        let step = self.lp.next_step();
+        // A write that errors (injected fault, full disk) drops the span
+        // mid-flight and still lands on the timeline.
+        let mut ck_trace = self.metrics.tracer.as_ref().map(|t| t.span("serve", "checkpoint"));
+        if let Some(t) = ck_trace.as_mut() {
+            t.run(name.clone());
+            t.step(step);
+        }
         rt.faults()
             .check(FaultSite::CheckpointWrite)
             .map_err(|f| anyhow::Error::new(f).context("writing checkpoint"))?;
@@ -496,7 +559,6 @@ impl RunState {
             .checkpoint_dir
             .clone()
             .ok_or_else(|| anyhow::anyhow!("{}: no checkpoint_dir in spec", self.id))?;
-        let name = self.spec.display_name();
         let ck = Checkpoint::capture(
             &mut self.session,
             self.optimizer.as_ref(),
@@ -506,8 +568,17 @@ impl RunState {
         let (path, bytes) = ck.write(Path::new(&dir), &name)?;
         self.metrics.checkpoints.inc();
         self.metrics.checkpoint_bytes.add(bytes as f64);
+        self.metrics.last_checkpoint_step.set(step as f64);
+        self.last_checkpoint_step = Some(step);
+        self.last_checkpoint_at = Some(Instant::now());
         prune_checkpoints(Path::new(&dir), &name, self.spec.keep_last)?;
-        Ok(path.to_string_lossy().into_owned())
+        let path = path.to_string_lossy().into_owned();
+        if let Some(t) = ck_trace.as_mut() {
+            t.arg("bytes", bytes as f64);
+            t.detail(path.clone());
+        }
+        drop(ck_trace);
+        Ok(path)
     }
 
     /// Terminal failure: annotate with the restart history so a run that
@@ -523,7 +594,10 @@ impl RunState {
         self.cooldown = 0;
         self.pending_cause = None;
         self.error = Some(msg.clone());
-        let _ = self.events.send(Event::Failed(msg));
+        let _ = self.events.send(Event::Failed {
+            error: msg,
+            flight_dump: self.last_flight_dump.clone(),
+        });
     }
 
     pub fn status(&self) -> RunStatus {
@@ -556,6 +630,9 @@ impl RunState {
             error: self.error.clone(),
             forwards_per_sec,
             mean_step_ms,
+            last_checkpoint_step: self.last_checkpoint_step,
+            last_checkpoint_age_s: self.last_checkpoint_at.map(|t| t.elapsed().as_secs_f64()),
+            flight_dump: self.last_flight_dump.clone(),
         }
     }
 }

@@ -1,0 +1,122 @@
+//! Flight recorder — a fixed-size ring of the most recent step
+//! timelines, kept per run by the [`TraceSink`](super::TraceSink).
+//!
+//! The ring holds [`StepTrace`]s: all trace events that happened inside
+//! one training step's scope, tagged complete (the step returned Ok) or
+//! partial (the step unwound with an error — its timeline ends at the
+//! phase that blew up). When a run fails, recovers or trips the
+//! divergence guard, the supervisor dumps the ring as Chrome trace JSON
+//! (`TraceSink::dump_flight`), so the last N steps before the incident
+//! are always on disk without tracing every step of a long run to a
+//! file.
+
+use std::collections::VecDeque;
+
+use super::trace::TraceEvent;
+
+/// One step's buffered timeline.
+#[derive(Debug, Clone)]
+pub struct StepTrace {
+    pub step: u64,
+    /// `false` when the step errored out mid-flight — its events stop at
+    /// the failing phase, which is exactly what a post-mortem wants.
+    pub complete: bool,
+    pub events: Vec<TraceEvent>,
+}
+
+/// Ring buffer of the last N [`StepTrace`]s (capacity is clamped to at
+/// least 1). Pushing past capacity evicts the oldest entry.
+#[derive(Debug, Clone)]
+pub struct FlightRecorder {
+    cap: usize,
+    steps: VecDeque<StepTrace>,
+}
+
+impl FlightRecorder {
+    pub fn new(cap: usize) -> Self {
+        Self {
+            cap: cap.max(1),
+            steps: VecDeque::new(),
+        }
+    }
+
+    pub fn push(&mut self, t: StepTrace) {
+        if self.steps.len() == self.cap {
+            self.steps.pop_front();
+        }
+        self.steps.push_back(t);
+    }
+
+    pub fn len(&self) -> usize {
+        self.steps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.steps.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &StepTrace> {
+        self.steps.iter()
+    }
+
+    pub fn first_step(&self) -> Option<u64> {
+        self.steps.front().map(|s| s.step)
+    }
+
+    pub fn last_step(&self) -> Option<u64> {
+        self.steps.back().map(|s| s.step)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trace(step: u64, complete: bool) -> StepTrace {
+        StepTrace {
+            step,
+            complete,
+            events: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn eviction_keeps_exactly_n_newest() {
+        let n = 5;
+        let mut fl = FlightRecorder::new(n);
+        for step in 0..(2 * n as u64) {
+            fl.push(trace(step, true));
+            assert!(fl.len() <= n, "ring never exceeds capacity");
+        }
+        assert_eq!(fl.len(), n, "exactly N steps retained");
+        let kept: Vec<u64> = fl.iter().map(|s| s.step).collect();
+        assert_eq!(kept, vec![5, 6, 7, 8, 9], "oldest evicted first");
+        assert_eq!(fl.first_step(), Some(5));
+        assert_eq!(fl.last_step(), Some(9));
+    }
+
+    #[test]
+    fn partial_step_rides_the_ring_like_any_other() {
+        let mut fl = FlightRecorder::new(3);
+        fl.push(trace(1, true));
+        fl.push(trace(2, true));
+        fl.push(trace(3, false)); // the step that failed
+        assert_eq!(fl.last_step(), Some(3));
+        assert!(!fl.iter().last().unwrap().complete);
+    }
+
+    #[test]
+    fn zero_capacity_clamps_to_one() {
+        let mut fl = FlightRecorder::new(0);
+        assert_eq!(fl.capacity(), 1);
+        fl.push(trace(1, true));
+        fl.push(trace(2, true));
+        assert_eq!(fl.len(), 1);
+        assert_eq!(fl.last_step(), Some(2));
+        assert!(!fl.is_empty());
+    }
+}

@@ -27,11 +27,16 @@ use std::time::{Duration, SystemTime, UNIX_EPOCH};
 
 use crate::util::json::Value;
 
-use super::registry::{Registry, SnapshotValue};
+use super::prometheus;
+use super::registry::{FamilySnapshot, Registry, SnapshotValue};
 
 pub struct JsonlExporter {
     registry: Arc<Registry>,
     sinks: Vec<(String, PathBuf)>,
+    /// Optional Prometheus textfile rewritten on every flush, rendered
+    /// from the *same* snapshot as the JSONL lines (one registry walk
+    /// per tick, not two).
+    prom_path: Option<PathBuf>,
 }
 
 impl JsonlExporter {
@@ -39,6 +44,7 @@ impl JsonlExporter {
         Self {
             registry,
             sinks: Vec::new(),
+            prom_path: None,
         }
     }
 
@@ -47,20 +53,32 @@ impl JsonlExporter {
         self.sinks.push((run.into(), path.into()));
     }
 
-    pub fn is_empty(&self) -> bool {
-        self.sinks.is_empty()
+    /// Also rewrite `path` with the full Prometheus text exposition on
+    /// every flush (node-exporter textfile-collector style), sharing the
+    /// JSONL tick's snapshot.
+    pub fn export_prometheus_to(&mut self, path: impl Into<PathBuf>) {
+        self.prom_path = Some(path.into());
     }
 
-    /// Append one snapshot line per registered run.
+    pub fn is_empty(&self) -> bool {
+        self.sinks.is_empty() && self.prom_path.is_none()
+    }
+
+    /// Take one registry snapshot and serialize every output from it.
     pub fn flush(&self) -> std::io::Result<()> {
-        let fams = self.registry.snapshot();
+        self.flush_snapshot(&self.registry.snapshot())
+    }
+
+    /// Serialize all sinks (JSONL lines + optional Prometheus textfile)
+    /// from an already-taken snapshot.
+    pub fn flush_snapshot(&self, fams: &[FamilySnapshot]) -> std::io::Result<()> {
         let ts_ms = SystemTime::now()
             .duration_since(UNIX_EPOCH)
             .map(|d| d.as_millis() as f64)
             .unwrap_or(0.0);
         for (run, path) in &self.sinks {
             let mut metrics = BTreeMap::new();
-            for fam in &fams {
+            for fam in fams {
                 for m in &fam.metrics {
                     if !m.labels.iter().any(|(k, v)| k == "run" && v == run) {
                         continue;
@@ -101,6 +119,17 @@ impl JsonlExporter {
             let encoded = line.to_string();
             let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
             writeln!(f, "{encoded}")?;
+        }
+        if let Some(prom) = &self.prom_path {
+            if let Some(parent) = prom.parent() {
+                if !parent.as_os_str().is_empty() {
+                    std::fs::create_dir_all(parent)?;
+                }
+            }
+            // tmp + rename: scrapers never see a half-written exposition
+            let tmp = prom.with_extension("prom.tmp");
+            std::fs::write(&tmp, prometheus::render_snapshot(fams))?;
+            std::fs::rename(&tmp, prom)?;
         }
         Ok(())
     }
@@ -206,6 +235,42 @@ mod tests {
             let h = m.req("fzoo_step_phase_seconds{phase=optim}").unwrap();
             assert_eq!(h.req("count").unwrap().as_u64().unwrap(), 1);
         }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn one_snapshot_feeds_jsonl_and_prometheus_textfile() {
+        let dir = std::env::temp_dir().join(format!("fzoo-jsonl-prom-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let jsonl = dir.join("a.metrics.jsonl");
+        let prom = dir.join("metrics.prom");
+
+        let reg = Arc::new(Registry::new());
+        let c = reg.counter("fzoo_forward_passes_total", "", &[("run", "a")]);
+        c.add(4.0);
+
+        let mut exp = JsonlExporter::new(reg.clone());
+        exp.add_run("a", &jsonl);
+        exp.export_prometheus_to(&prom);
+        assert!(!exp.is_empty());
+
+        // take the snapshot, then race a counter bump past it: both
+        // outputs must serialize the same pre-bump view (one walk)
+        let snap = reg.snapshot();
+        c.add(100.0);
+        exp.flush_snapshot(&snap).unwrap();
+
+        let line = std::fs::read_to_string(&jsonl).unwrap();
+        let v = json::parse(line.lines().next().unwrap()).unwrap();
+        assert_eq!(
+            v.req("metrics").unwrap().req("fzoo_forward_passes_total").unwrap().as_f64().unwrap(),
+            4.0
+        );
+        let text = std::fs::read_to_string(&prom).unwrap();
+        assert!(
+            text.contains(r#"fzoo_forward_passes_total{run="a"} 4"#),
+            "textfile rendered from the shared snapshot:\n{text}"
+        );
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -32,15 +32,26 @@
 //! Export paths: [`prometheus::render`] (text exposition format 0.0.4),
 //! [`http::MetricsServer`] (tiny blocking listener for `fzoo serve
 //! --metrics-addr`), and [`jsonl::JsonlExporter`] (periodic per-run flush
-//! alongside the run logs).
+//! alongside the run logs; one registry snapshot per tick feeds both the
+//! JSONL lines and the optional Prometheus textfile).
+//!
+//! Metrics answer "how fast on average"; the [`trace`] module answers
+//! "what happened on *this* step": an optional [`TraceSink`] (installed
+//! on the registry with [`Registry::set_tracer`]) collects per-step
+//! Chrome trace-event timelines from the same call-sites the span timers
+//! instrument, with a per-run crash [`flight`] recorder. Same
+//! constraints: deterministically inert, lock-light, `Send + Sync`.
 
+pub mod flight;
 pub mod histogram;
 pub mod http;
 pub mod jsonl;
 pub mod prometheus;
 pub mod registry;
 pub mod span;
+pub mod trace;
 
+pub use flight::{FlightRecorder, StepTrace};
 pub use histogram::{Histogram, HistogramSnapshot, HistogramSpec};
 pub use http::MetricsServer;
 pub use jsonl::{JsonlExporter, JsonlFlusher};
@@ -49,16 +60,34 @@ pub use registry::{
     SnapshotValue,
 };
 pub use span::Span;
+pub use trace::{chrome_trace_json, StepScope, TraceEvent, TraceSink, TraceSpan};
 
 /// Canonical metric names. Every instrumented layer resolves its handles
 /// through these constants so the README table, the Prometheus endpoint
 /// and the JSONL stream never drift apart.
+///
+/// # Label schema
+///
+/// One place for the whole vocabulary — trace events reuse the same keys
+/// as event args:
+///
+/// | label       | on                                   | values |
+/// |-------------|--------------------------------------|--------|
+/// | `device=`   | runtime families (and trace events)  | `<platform>:<ordinal>`, e.g. `cpu:0`; constant today, one series per device under multi-device failover |
+/// | `run=`      | training + serve per-run families    | the run's display name (job `name` or `model-task-sN`) |
+/// | `phase=`    | `fzoo_step_phase_seconds`            | `batch` / `optim` / `eval` |
+/// | `optimizer=`| probe families                       | optimizer display name (`FZOO`, `FZOO-R(m)`, ...) |
+/// | `site=`     | `fzoo_faults_injected_total`         | fault site (`execute`, `to_host`, `checkpoint_write`, `nonfinite_loss`) |
+/// | `le=`       | histogram `_bucket` expansions only  | Prometheus cumulative bucket bound |
 pub mod names {
-    // runtime phases (unlabeled — one PJRT runtime per process/worker)
+    // runtime phases (label: device — single PJRT device today, so the
+    // value is constant, but the plumbing is real: multi-device failover
+    // gets per-device health/latency series with no call-site change)
     pub const COMPILE_SECONDS: &str = "fzoo_compile_seconds";
     pub const BIND_SECONDS: &str = "fzoo_bind_seconds";
     pub const EXECUTE_SECONDS: &str = "fzoo_execute_seconds";
     pub const TO_HOST_SECONDS: &str = "fzoo_to_host_seconds";
+    // labels: site, device
     pub const FAULTS_INJECTED: &str = "fzoo_faults_injected_total";
 
     // per-run training (label: run)
@@ -84,4 +113,7 @@ pub mod names {
     pub const RUN_FAILURES: &str = "fzoo_run_failures_total";
     pub const CHECKPOINTS: &str = "fzoo_checkpoints_total";
     pub const CHECKPOINT_BYTES: &str = "fzoo_checkpoint_bytes_total";
+    /// Step index of the run's newest on-disk checkpoint (gauge; the
+    /// distance to the current step is the run's rollback exposure).
+    pub const LAST_CHECKPOINT_STEP: &str = "fzoo_last_checkpoint_step";
 }

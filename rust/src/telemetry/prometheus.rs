@@ -7,7 +7,7 @@
 
 use std::fmt::Write as _;
 
-use super::registry::{LabelPairs, MetricKind, Registry, SnapshotValue};
+use super::registry::{FamilySnapshot, LabelPairs, MetricKind, Registry, SnapshotValue};
 
 fn escape_label(v: &str) -> String {
     let mut out = String::with_capacity(v.len());
@@ -42,9 +42,18 @@ fn label_block(labels: &LabelPairs, extra: Option<(&str, &str)>) -> String {
     format!("{{{}}}", parts.join(","))
 }
 
+/// Walk the registry once and render. Callers that already hold a
+/// snapshot (e.g. the JSONL exporter's per-tick flush) should use
+/// [`render_snapshot`] instead of paying a second registry walk.
 pub fn render(registry: &Registry) -> String {
+    render_snapshot(&registry.snapshot())
+}
+
+/// Render an already-taken snapshot — the single serialization path
+/// shared by the scrape endpoint and the textfile export.
+pub fn render_snapshot(fams: &[FamilySnapshot]) -> String {
     let mut out = String::new();
-    for fam in registry.snapshot() {
+    for fam in fams {
         if !fam.help.is_empty() {
             let _ = writeln!(out, "# HELP {} {}", fam.name, escape_help(&fam.help));
         }

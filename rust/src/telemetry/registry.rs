@@ -13,6 +13,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use super::histogram::{atomic_f64_add, Histogram, HistogramSnapshot, HistogramSpec};
+use super::trace::TraceSink;
 
 /// Monotone accumulator. `add` takes f64 (forward counts, byte counts);
 /// negative deltas are a caller bug.
@@ -97,6 +98,11 @@ struct Family {
 #[derive(Default)]
 pub struct Registry {
     families: Mutex<BTreeMap<String, Family>>,
+    /// Optional trace sink, riding with the registry so every layer that
+    /// already threads `&Registry` resolves it alongside its metric
+    /// handles (install *before* the runtime loads — resolution is lazy
+    /// and cached, like the handles themselves).
+    tracer: Mutex<Option<Arc<TraceSink>>>,
 }
 
 /// Point-in-time value of one labeled metric.
@@ -194,6 +200,18 @@ impl Registry {
         }
     }
 
+    /// Install a trace sink; later [`Registry::tracer`] calls hand out
+    /// clones of the `Arc`. Layers resolve the sink when they resolve
+    /// their metric handles, so install it before `Runtime::load`.
+    pub fn set_tracer(&self, sink: Arc<TraceSink>) {
+        *self.tracer.lock().unwrap() = Some(sink);
+    }
+
+    /// The installed trace sink, if any.
+    pub fn tracer(&self) -> Option<Arc<TraceSink>> {
+        self.tracer.lock().unwrap().clone()
+    }
+
     /// Deterministically ordered point-in-time copy of every family.
     /// Values are read without a global pause, so concurrent observations
     /// may land between two reads — fine for monitoring, and each
@@ -280,6 +298,16 @@ mod tests {
         let reg = Registry::new();
         reg.counter("m", "", &[]);
         reg.gauge("m", "", &[]);
+    }
+
+    #[test]
+    fn tracer_slot_installs_and_clones_out() {
+        let reg = Registry::new();
+        assert!(reg.tracer().is_none());
+        let sink = Arc::new(TraceSink::new());
+        reg.set_tracer(sink.clone());
+        let got = reg.tracer().expect("installed sink");
+        assert!(Arc::ptr_eq(&got, &sink));
     }
 
     #[test]

@@ -1,0 +1,594 @@
+//! Structured step-level tracing — causal timelines for the metrics layer.
+//!
+//! Counters and histograms answer "how fast on average"; this module
+//! answers "what happened on *this* step". A [`TraceSink`] collects
+//! complete begin/end events from the same call-sites the span timers
+//! instrument (runtime compile/bind/execute/to_host, the train-loop
+//! step/batch/optim/eval phases, the FZOO probe path, serve dispatch and
+//! checkpoint write/restore) and exports them as Chrome trace-event JSON
+//! — the `{"traceEvents": [...]}` format loadable in Perfetto or
+//! `chrome://tracing`.
+//!
+//! Design constraints match the metrics registry:
+//!
+//! * **Deterministically inert** — events carry observations only (wall
+//!   time, loss, σ, counts); nothing feeds back into training math. The
+//!   serve bit-identity test runs fully traced.
+//! * **Lock-light** — one mutex, taken once per *span end* (roughly ten
+//!   times per training step, each holding the lock for a vector push);
+//!   the hot loops inside a phase never touch it.
+//! * **`Send + Sync` plain data** — the sink rides inside the shared
+//!   [`Registry`](super::Registry) across the serve worker-thread
+//!   boundary; install it with [`Registry::set_tracer`] *before* the
+//!   runtime loads so every layer resolves it alongside its metric
+//!   handles.
+//!
+//! On top of the global stream, the sink keeps a per-run
+//! [`FlightRecorder`](super::flight::FlightRecorder): a fixed-size ring
+//! of the last N step timelines (including the in-flight partial step)
+//! that [`TraceSink::dump_flight`] writes out when a run fails, recovers
+//! or trips the divergence guard — every post-mortem comes with the
+//! timeline of the steps that preceded it.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::flight::{FlightRecorder, StepTrace};
+use crate::util::json::Value;
+
+/// Default per-run flight-recorder depth (complete + partial step traces).
+pub const DEFAULT_FLIGHT_STEPS: usize = 16;
+
+/// Cap on the global event stream; beyond it events are counted as
+/// dropped instead of growing without bound.
+pub const DEFAULT_MAX_EVENTS: usize = 1 << 18;
+
+/// One complete (begin/end) trace event. Timestamps are microseconds
+/// since the sink's epoch — relative time is all Perfetto needs.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    /// Category: `runtime`, `train`, `optim` or `serve`.
+    pub cat: &'static str,
+    /// Phase name within the category (`execute`, `step`, `probe`, ...).
+    pub name: &'static str,
+    /// Owning run; `None` for runtime-level work outside any run.
+    pub run: Option<String>,
+    /// Training step index, when the event happened inside one.
+    pub step: Option<u64>,
+    pub ts_us: u64,
+    pub dur_us: u64,
+    /// Numeric args (loss, sigma, forwards, probes, ...).
+    pub args: Vec<(&'static str, f64)>,
+    /// Free-form string arg (executable name, checkpoint path, ...).
+    pub detail: Option<String>,
+}
+
+struct ScopeState {
+    run: String,
+    step: u64,
+    events: Vec<TraceEvent>,
+}
+
+#[derive(Default)]
+struct Inner {
+    device: String,
+    events: Vec<TraceEvent>,
+    dropped: u64,
+    scope: Option<ScopeState>,
+    flights: BTreeMap<String, FlightRecorder>,
+}
+
+/// Collects [`TraceEvent`]s from every instrumented layer. See the
+/// module docs for the threading/installation contract.
+pub struct TraceSink {
+    epoch: Instant,
+    dir: Option<PathBuf>,
+    flight_cap: usize,
+    max_events: usize,
+    inner: Mutex<Inner>,
+}
+
+impl Default for TraceSink {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TraceSink {
+    /// Memory-only sink (no trace dir: `dump_flight` is a no-op,
+    /// `write_run_trace` errors). Used by tests proving inertness.
+    pub fn new() -> Self {
+        Self {
+            epoch: Instant::now(),
+            dir: None,
+            flight_cap: DEFAULT_FLIGHT_STEPS,
+            max_events: DEFAULT_MAX_EVENTS,
+            inner: Mutex::new(Inner::default()),
+        }
+    }
+
+    /// Sink writing `<run>.trace.json` / flight dumps under `dir`
+    /// (`fzoo serve --trace-dir`).
+    pub fn with_dir(dir: impl Into<PathBuf>) -> Self {
+        let mut s = Self::new();
+        s.dir = Some(dir.into());
+        s
+    }
+
+    /// Override the per-run flight-recorder depth (builder style).
+    pub fn flight_steps(mut self, n: usize) -> Self {
+        self.flight_cap = n.max(1);
+        self
+    }
+
+    pub fn dir(&self) -> Option<&Path> {
+        self.dir.as_deref()
+    }
+
+    /// Device identity stamped on exported events (set once by the
+    /// runtime at load, e.g. `cpu:0`).
+    pub fn set_device(&self, device: &str) {
+        self.inner.lock().unwrap().device = device.to_string();
+    }
+
+    pub fn device(&self) -> String {
+        self.inner.lock().unwrap().device.clone()
+    }
+
+    fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Start a span; it records one complete event when finished or
+    /// dropped (so error paths still leave a timeline).
+    pub fn span(self: &Arc<Self>, cat: &'static str, name: &'static str) -> TraceSpan {
+        TraceSpan {
+            sink: Arc::clone(self),
+            cat,
+            name,
+            start_us: self.now_us(),
+            args: Vec::new(),
+            detail: None,
+            run: None,
+            step: None,
+            done: false,
+        }
+    }
+
+    /// Open the per-step scope: until the returned guard drops, events
+    /// without an explicit run are attributed to `(run, step)` and
+    /// buffered into that step's timeline. On drop the buffer moves into
+    /// the run's flight ring — as a *complete* step only if
+    /// [`StepScope::complete`] was called, so a step that errors out
+    /// leaves its partial timeline as the ring's newest entry.
+    pub fn begin_step(self: &Arc<Self>, run: &str, step: u64) -> StepScope {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(old) = inner.scope.take() {
+            // defensive: a scope left open (shouldn't happen on the
+            // single-worker path) is preserved as a partial step
+            let cap = self.flight_cap;
+            inner
+                .flights
+                .entry(old.run.clone())
+                .or_insert_with(|| FlightRecorder::new(cap))
+                .push(StepTrace {
+                    step: old.step,
+                    complete: false,
+                    events: old.events,
+                });
+        }
+        inner.scope = Some(ScopeState {
+            run: run.to_string(),
+            step,
+            events: Vec::new(),
+        });
+        drop(inner);
+        StepScope {
+            sink: Arc::clone(self),
+            run: run.to_string(),
+            step,
+            completed: AtomicBool::new(false),
+        }
+    }
+
+    fn end_step(&self, run: &str, step: u64, complete: bool) {
+        let mut inner = self.inner.lock().unwrap();
+        let Some(scope) = inner.scope.take() else {
+            return;
+        };
+        if scope.run != run || scope.step != step {
+            inner.scope = Some(scope);
+            return;
+        }
+        let cap = self.flight_cap;
+        inner
+            .flights
+            .entry(scope.run)
+            .or_insert_with(|| FlightRecorder::new(cap))
+            .push(StepTrace {
+                step,
+                complete,
+                events: scope.events,
+            });
+    }
+
+    fn push(&self, mut ev: TraceEvent) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(scope) = inner.scope.as_mut() {
+            let belongs = match ev.run.as_deref() {
+                None => true,
+                Some(r) => r == scope.run,
+            };
+            if belongs {
+                if ev.run.is_none() {
+                    ev.run = Some(scope.run.clone());
+                }
+                if ev.step.is_none() {
+                    ev.step = Some(scope.step);
+                }
+                scope.events.push(ev.clone());
+            }
+        }
+        if inner.events.len() < self.max_events {
+            inner.events.push(ev);
+        } else {
+            inner.dropped += 1;
+        }
+    }
+
+    /// Copy of the global event stream, in record (end-time) order.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        self.inner.lock().unwrap().events.clone()
+    }
+
+    /// Events belonging to `run`, plus runtime-level events owned by no
+    /// run (compile at warmup, restores) — one run's full timeline.
+    pub fn events_for_run(&self, run: &str) -> Vec<TraceEvent> {
+        self.inner
+            .lock()
+            .unwrap()
+            .events
+            .iter()
+            .filter(|e| match e.run.as_deref() {
+                None => true,
+                Some(r) => r == run,
+            })
+            .cloned()
+            .collect()
+    }
+
+    /// Events dropped past the global cap.
+    pub fn dropped(&self) -> u64 {
+        self.inner.lock().unwrap().dropped
+    }
+
+    /// Step indices currently held by `run`'s flight ring (tests).
+    pub fn flight_step_indices(&self, run: &str) -> Vec<u64> {
+        self.inner
+            .lock()
+            .unwrap()
+            .flights
+            .get(run)
+            .map(|f| f.iter().map(|s| s.step).collect())
+            .unwrap_or_default()
+    }
+
+    /// Dump `run`'s flight ring as Chrome trace JSON under the sink dir,
+    /// returning the written path. `None` when the sink has no dir, the
+    /// ring is empty, or the write fails — observe-only code must never
+    /// take the run down with it.
+    pub fn dump_flight(&self, run: &str, reason: &str) -> Option<String> {
+        let dir = self.dir.as_ref()?;
+        let (events, first, last, n, device) = {
+            let inner = self.inner.lock().unwrap();
+            let fl = inner.flights.get(run)?;
+            let (first, last) = (fl.first_step()?, fl.last_step()?);
+            let mut evs = Vec::new();
+            for st in fl.iter() {
+                evs.extend(st.events.iter().cloned());
+            }
+            (evs, first, last, fl.len(), inner.device.clone())
+        };
+        let header = Value::obj(vec![
+            ("run", Value::str(run)),
+            ("reason", Value::str(reason)),
+            ("first_step", Value::num(first as f64)),
+            ("last_step", Value::num(last as f64)),
+            ("steps", Value::num(n as f64)),
+        ]);
+        let json = chrome_trace_json(&events, &device, &[("fzoo", header)]);
+        let path = dir.join(format!("{run}.step{last}.flight.json"));
+        std::fs::create_dir_all(dir).ok()?;
+        std::fs::write(&path, json.to_string()).ok()?;
+        Some(path.to_string_lossy().into_owned())
+    }
+
+    /// Write `run`'s full timeline as `<dir>/<run>.trace.json`.
+    pub fn write_run_trace(&self, run: &str) -> Result<PathBuf> {
+        let dir = self
+            .dir
+            .as_ref()
+            .ok_or_else(|| anyhow!("trace sink has no output dir"))?;
+        let events = self.events_for_run(run);
+        let json = chrome_trace_json(&events, &self.device(), &[]);
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{run}.trace.json"));
+        std::fs::write(&path, json.to_string())?;
+        Ok(path)
+    }
+}
+
+/// RAII trace span. Records its complete event when finished *or
+/// dropped* — an error path that unwinds through `?` still leaves the
+/// phases it entered on the timeline. [`TraceSpan::cancel`] discards it.
+pub struct TraceSpan {
+    sink: Arc<TraceSink>,
+    cat: &'static str,
+    name: &'static str,
+    start_us: u64,
+    args: Vec<(&'static str, f64)>,
+    detail: Option<String>,
+    run: Option<String>,
+    step: Option<u64>,
+    done: bool,
+}
+
+impl TraceSpan {
+    /// Attach a numeric arg (loss, sigma, forwards, ...).
+    pub fn arg(&mut self, key: &'static str, v: f64) {
+        self.args.push((key, v));
+    }
+
+    /// Attach a free-form string arg (exe name, checkpoint path, ...).
+    pub fn detail(&mut self, d: impl Into<String>) {
+        self.detail = Some(d.into());
+    }
+
+    /// Attribute explicitly to a run — for spans that outlive or sit
+    /// outside the per-step scope (serve dispatch, checkpoint write).
+    pub fn run(&mut self, run: impl Into<String>) {
+        self.run = Some(run.into());
+    }
+
+    pub fn step(&mut self, step: u64) {
+        self.step = Some(step);
+    }
+
+    /// Record now instead of at drop.
+    pub fn finish(mut self) {
+        self.record();
+    }
+
+    /// Discard without recording.
+    pub fn cancel(mut self) {
+        self.done = true;
+    }
+
+    fn record(&mut self) {
+        if self.done {
+            return;
+        }
+        self.done = true;
+        let end = self.sink.now_us();
+        let ev = TraceEvent {
+            cat: self.cat,
+            name: self.name,
+            run: self.run.take(),
+            step: self.step,
+            ts_us: self.start_us,
+            dur_us: end.saturating_sub(self.start_us),
+            args: std::mem::take(&mut self.args),
+            detail: self.detail.take(),
+        };
+        self.sink.push(ev);
+    }
+}
+
+impl Drop for TraceSpan {
+    fn drop(&mut self) {
+        self.record();
+    }
+}
+
+/// Guard for one step's trace scope; see [`TraceSink::begin_step`].
+pub struct StepScope {
+    sink: Arc<TraceSink>,
+    run: String,
+    step: u64,
+    completed: AtomicBool,
+}
+
+impl StepScope {
+    /// Mark the step as having finished cleanly. Without this, the
+    /// buffered timeline is filed as a *partial* step on drop.
+    pub fn complete(&self) {
+        self.completed.store(true, Ordering::Relaxed);
+    }
+}
+
+impl Drop for StepScope {
+    fn drop(&mut self) {
+        let complete = self.completed.load(Ordering::Relaxed);
+        self.sink.end_step(&self.run, self.step, complete);
+    }
+}
+
+/// Render events as a Chrome trace-event JSON object:
+/// `{"traceEvents": [...], <extra>}`. Complete events use `ph: "X"`
+/// with `ts`/`dur` in microseconds; one pid, one tid per run (tid 0 is
+/// runtime-level work) with `thread_name` metadata so Perfetto labels
+/// the tracks. Extra top-level keys are ignored by viewers.
+pub fn chrome_trace_json(events: &[TraceEvent], device: &str, extra: &[(&str, Value)]) -> Value {
+    use std::collections::BTreeSet;
+    let runs: BTreeSet<&str> = events.iter().filter_map(|e| e.run.as_deref()).collect();
+    let tid_of = |run: Option<&str>| -> f64 {
+        match run {
+            None => 0.0,
+            Some(r) => 1.0 + runs.iter().position(|x| *x == r).unwrap_or(0) as f64,
+        }
+    };
+    let mut arr = Vec::new();
+    let mut thread_name = |tid: f64, name: &str| {
+        arr.push(Value::obj(vec![
+            ("ph", Value::str("M")),
+            ("name", Value::str("thread_name")),
+            ("pid", Value::num(1.0)),
+            ("tid", Value::num(tid)),
+            ("args", Value::obj(vec![("name", Value::str(name))])),
+        ]));
+    };
+    thread_name(0.0, "runtime");
+    for (i, r) in runs.iter().enumerate() {
+        thread_name(1.0 + i as f64, r);
+    }
+    for e in events {
+        let mut args = vec![("device", Value::str(device))];
+        if let Some(r) = &e.run {
+            args.push(("run", Value::str(r.clone())));
+        }
+        if let Some(s) = e.step {
+            args.push(("step", Value::num(s as f64)));
+        }
+        if let Some(d) = &e.detail {
+            args.push(("detail", Value::str(d.clone())));
+        }
+        for (k, v) in &e.args {
+            args.push((k, Value::num(*v)));
+        }
+        arr.push(Value::obj(vec![
+            ("ph", Value::str("X")),
+            ("cat", Value::str(e.cat)),
+            ("name", Value::str(e.name)),
+            ("pid", Value::num(1.0)),
+            ("tid", Value::num(tid_of(e.run.as_deref()))),
+            ("ts", Value::num(e.ts_us as f64)),
+            ("dur", Value::num(e.dur_us as f64)),
+            ("args", Value::obj(args)),
+        ]));
+    }
+    let mut top = vec![("traceEvents", Value::Arr(arr))];
+    for (k, v) in extra {
+        top.push((k, v.clone()));
+    }
+    Value::obj(top)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn names_of(v: &Value) -> Vec<String> {
+        v.req("traceEvents")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .filter(|e| e.req("ph").unwrap().as_str().unwrap() == "X")
+            .map(|e| e.req("name").unwrap().as_str().unwrap().to_string())
+            .collect()
+    }
+
+    #[test]
+    fn chrome_json_round_trips_event_order() {
+        let sink = Arc::new(TraceSink::new());
+        sink.set_device("cpu:0");
+        for name in ["alpha", "beta", "gamma"] {
+            let mut sp = sink.span("train", name);
+            sp.arg("loss", 0.5);
+            sp.finish();
+        }
+        let json_v = chrome_trace_json(&sink.events(), &sink.device(), &[]);
+        let back = json::parse(&json_v.to_string()).unwrap();
+        assert_eq!(names_of(&back), vec!["alpha", "beta", "gamma"]);
+        // args survive the round trip
+        let evs = back.req("traceEvents").unwrap().as_arr().unwrap();
+        let first_x = evs
+            .iter()
+            .find(|e| e.req("ph").unwrap().as_str().unwrap() == "X")
+            .unwrap();
+        let args = first_x.req("args").unwrap();
+        assert_eq!(args.req("device").unwrap().as_str().unwrap(), "cpu:0");
+        assert_eq!(args.req("loss").unwrap().as_f64().unwrap(), 0.5);
+    }
+
+    #[test]
+    fn scope_attributes_run_and_step() {
+        let sink = Arc::new(TraceSink::new());
+        let guard = sink.begin_step("myrun", 7);
+        sink.span("runtime", "execute").finish();
+        guard.complete();
+        drop(guard);
+        let evs = sink.events();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].run.as_deref(), Some("myrun"));
+        assert_eq!(evs[0].step, Some(7));
+        assert_eq!(sink.flight_step_indices("myrun"), vec![7]);
+    }
+
+    #[test]
+    fn dropped_guard_files_partial_step() {
+        let sink = Arc::new(TraceSink::new());
+        {
+            let _guard = sink.begin_step("r", 3);
+            sink.span("train", "batch").finish();
+            // no complete(): the step errored out
+        }
+        let idx = sink.flight_step_indices("r");
+        assert_eq!(idx, vec![3]);
+        // explicit-run span outside any scope stays unscoped in step
+        let mut sp = sink.span("serve", "dispatch");
+        sp.run("r");
+        sp.finish();
+        let evs = sink.events_for_run("r");
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[1].step, None);
+    }
+
+    #[test]
+    fn cancelled_span_records_nothing() {
+        let sink = Arc::new(TraceSink::new());
+        sink.span("train", "step").cancel();
+        assert!(sink.events().is_empty());
+    }
+
+    #[test]
+    fn dump_flight_writes_parseable_chrome_json() {
+        let dir = std::env::temp_dir().join(format!("fzoo-trace-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let sink = Arc::new(TraceSink::with_dir(&dir).flight_steps(2));
+        for step in 0..4u64 {
+            let g = sink.begin_step("r", step);
+            sink.span("train", "optim").finish();
+            if step < 3 {
+                g.complete(); // last step stays partial, like a fault
+            }
+        }
+        let path = sink.dump_flight("r", "failed").expect("dump path");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let v = json::parse(&text).unwrap();
+        let hdr = v.req("fzoo").unwrap();
+        assert_eq!(hdr.req("reason").unwrap().as_str().unwrap(), "failed");
+        // ring depth 2: steps 2 (complete) and 3 (partial)
+        assert_eq!(hdr.req("first_step").unwrap().as_u64().unwrap(), 2);
+        assert_eq!(hdr.req("last_step").unwrap().as_u64().unwrap(), 3);
+        assert_eq!(names_of(&v).len(), 2);
+        // memory-only sinks refuse politely
+        let bare = Arc::new(TraceSink::new());
+        assert!(bare.dump_flight("r", "x").is_none());
+        assert!(bare.write_run_trace("r").is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sink_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<TraceSink>();
+        assert_send_sync::<Arc<TraceSink>>();
+    }
+}

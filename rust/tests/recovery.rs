@@ -282,8 +282,8 @@ fn chaos_transcript(seed: u64) -> Vec<String> {
                 out.push(format!("finished {}", hist.steps_run));
                 break;
             }
-            Some(Event::Failed(e)) => {
-                out.push(format!("failed: {e}"));
+            Some(Event::Failed { error, .. }) => {
+                out.push(format!("failed: {error}"));
                 break;
             }
             None => {

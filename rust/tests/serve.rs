@@ -12,7 +12,7 @@ use fzoo::data::TaskKind;
 use fzoo::optim::{FzooModeCfg, Objective, OptimizerKind};
 use fzoo::runtime::{FaultPlan, Runtime, Session};
 use fzoo::serve::{Checkpoint, Event, RunManager, RunPhase, RunSpec, WorkerGone};
-use fzoo::telemetry::{MetricsServer, Registry};
+use fzoo::telemetry::{MetricsServer, Registry, TraceSink};
 
 /// Minimal HTTP GET against the metrics listener; returns the body.
 fn scrape(addr: std::net::SocketAddr) -> String {
@@ -57,11 +57,14 @@ fn multiplexed_runs_match_sequential_bit_for_bit() {
     // step granularity must produce the exact loss series each produces
     // alone — per-run state is fully isolated, so the scheduler cannot
     // perturb the math. This manager runs FULLY INSTRUMENTED (shared
-    // registry + live Prometheus listener, scraped mid-run) while the
+    // registry + live Prometheus listener, scraped mid-run, and a live
+    // trace sink with flight recorder collecting every step) while the
     // sequential reference below is bare: telemetry must be
     // deterministically inert, so the bit-identity assertions double as
     // the instrumented-vs-uninstrumented determinism check.
     let reg = Arc::new(Registry::new());
+    let sink = Arc::new(TraceSink::new());
+    reg.set_tracer(sink.clone());
     let mgr = RunManager::start_with_telemetry(artifacts(), None, reg.clone()).unwrap();
     let srv = MetricsServer::start("127.0.0.1:0", reg).unwrap();
     let c = mgr.client();
@@ -110,6 +113,20 @@ fn multiplexed_runs_match_sequential_bit_for_bit() {
             assert_eq!(x.forwards, y.forwards);
         }
     }
+
+    // the sink saw both runs' full step timelines (12 steps each in the
+    // flight ring, every step's trace carrying its train phases)
+    for run in ["tiny-enc-sst2-s1", "tiny-dec-boolq-s2"] {
+        assert_eq!(
+            sink.flight_step_indices(run),
+            (0..12).collect::<Vec<u64>>(),
+            "flight ring for {run}"
+        );
+        let ev = sink.events_for_run(run);
+        assert!(ev.iter().any(|e| e.cat == "train" && e.name == "step"), "{run} step spans");
+        assert!(ev.iter().any(|e| e.cat == "serve" && e.name == "dispatch"), "{run} dispatch");
+    }
+    assert_eq!(sink.dropped(), 0);
 
     // on-demand eval works on a finished run's device-resident params;
     // remove releases them and the run stops being addressable
@@ -307,7 +324,7 @@ fn injected_execute_fault_recovers_bit_identical() {
         match hf.next_event() {
             Some(Event::Step(r)) => records.push(r),
             Some(Event::Checkpoint { .. }) => {}
-            Some(Event::Recovered { step, from_checkpoint, cause }) => {
+            Some(Event::Recovered { step, from_checkpoint, cause, .. }) => {
                 recovered = Some((step, from_checkpoint, cause));
             }
             Some(Event::Finished(_)) => break,

@@ -1,0 +1,171 @@
+//! Tracing + flight-recorder integration tests on the tiny artifacts:
+//! a fully-traced serve manager must stay bit-identical to a bare one,
+//! an injected fault must leave a flight dump whose newest entry is the
+//! failed step, and the per-run Chrome trace must be parseable.
+//!
+//! Requires `make artifacts` (the tiny-* models) to have run.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use fzoo::optim::OptimizerKind;
+use fzoo::runtime::FaultPlan;
+use fzoo::serve::{Event, RunManager, RunSpec};
+use fzoo::telemetry::{Registry, TraceSink};
+use fzoo::util::json;
+
+fn artifacts() -> PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[test]
+fn injected_fault_dumps_flight_and_trace_stays_inert() {
+    let kind = OptimizerKind::by_name("zo-adam", 1e-4, 1e-3).unwrap();
+    let dir = std::env::temp_dir().join(format!("fzoo-trace-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let ckpt_dir = dir.join("ckpt");
+    let trace_dir = dir.join("traces");
+    std::fs::create_dir_all(&trace_dir).unwrap();
+
+    // same deterministic fault as tests/serve.rs: 'execute' blows up on
+    // step 6 of the run named "faulted" — the first step after the
+    // 6-step checkpoint exists
+    let plan = FaultPlan::from_json_str(
+        r#"{"seed": 7, "rules": [{"site": "execute", "run": "faulted", "at_step": 6}]}"#,
+    )
+    .unwrap();
+    let reg = Arc::new(Registry::new());
+    let sink = Arc::new(TraceSink::with_dir(&trace_dir));
+    reg.set_tracer(sink.clone());
+    let mgr = RunManager::start_with_telemetry(artifacts(), Some(plan), reg).unwrap();
+    let c = mgr.client();
+
+    let submit = |name: &str, restarts: u64| {
+        let mut s = RunSpec::new("tiny-enc", "sst2", kind.clone(), 10).seed(3);
+        s.name = name.into();
+        s.checkpoint_every = 3;
+        s.checkpoint_dir = Some(ckpt_dir.to_string_lossy().into_owned());
+        s.max_restarts = restarts;
+        c.submit(s).unwrap()
+    };
+    // reference run, untouched by the name-scoped fault rule
+    let hc = submit("clean", 0);
+    c.train_steps(hc.id, 10).unwrap();
+    let clean_hist = hc.wait().unwrap();
+    assert_eq!(clean_hist.steps_run, 10);
+
+    let hf = submit("faulted", 1);
+    c.train_steps(hf.id, 10).unwrap();
+    let mut records = Vec::new();
+    let mut dump = None;
+    loop {
+        match hf.next_event() {
+            Some(Event::Step(r)) => records.push(r),
+            Some(Event::Checkpoint { .. }) => {}
+            Some(Event::Recovered { step, flight_dump, .. }) => {
+                assert_eq!(step, 6, "rollback lands on the newest checkpoint");
+                dump = Some(flight_dump.expect("traced recovery carries a flight dump"));
+            }
+            Some(Event::Finished(_)) => break,
+            other => panic!("unexpected event {other:?}"),
+        }
+    }
+    let dump = dump.expect("a Recovered event");
+
+    // the dump is a parseable Chrome trace whose header names the failed
+    // step — the ring's newest entry is the partial step that died
+    let text = std::fs::read_to_string(Path::new(&dump)).unwrap();
+    let v = json::parse(&text).unwrap();
+    let hdr = v.req("fzoo").unwrap();
+    assert_eq!(hdr.req("run").unwrap().as_str().unwrap(), "faulted");
+    assert_eq!(hdr.req("reason").unwrap().as_str().unwrap(), "transient");
+    assert_eq!(
+        hdr.req("last_step").unwrap().as_u64().unwrap(),
+        6,
+        "newest ring entry is the failed step"
+    );
+    let events = v.req("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty());
+    // the failed step's timeline ends inside the optim phase: the span
+    // dropped on unwind, so the phase it died in is on the record
+    let step6_cats: Vec<&str> = events
+        .iter()
+        .filter(|e| {
+            e.get("args")
+                .and_then(|a| a.get("step"))
+                .and_then(|s| s.as_u64().ok())
+                == Some(6)
+                && e.get("ph").and_then(|p| p.as_str().ok()) == Some("X")
+        })
+        .map(|e| e.get("cat").and_then(|c| c.as_str().ok()).unwrap_or("?"))
+        .collect();
+    assert!(
+        step6_cats.contains(&"train"),
+        "failed step's partial phases present: {step6_cats:?}"
+    );
+
+    // bit-identity with the clean run survived full tracing + recovery
+    assert_eq!(records.len(), clean_hist.records.len());
+    for (f, cl) in records.iter().zip(&clean_hist.records) {
+        assert_eq!(f.step, cl.step);
+        assert_eq!(
+            f.loss.to_bits(),
+            cl.loss.to_bits(),
+            "step {}: traced+faulted {} vs clean {}",
+            f.step,
+            f.loss,
+            cl.loss
+        );
+    }
+
+    // the per-run Chrome trace round-trips: metadata first, then complete
+    // events in recorded order, all attributed to the run
+    let trace_path = sink.write_run_trace("faulted").unwrap();
+    let v = json::parse(&std::fs::read_to_string(&trace_path).unwrap()).unwrap();
+    let events = v.req("traceEvents").unwrap().as_arr().unwrap();
+    let phs: Vec<&str> = events
+        .iter()
+        .map(|e| e.req("ph").unwrap().as_str().unwrap())
+        .collect();
+    let first_x = phs.iter().position(|p| *p == "X").unwrap();
+    assert!(
+        phs[..first_x].iter().all(|p| *p == "M") && phs[first_x..].iter().all(|p| *p == "X"),
+        "thread_name metadata precedes all complete events: {phs:?}"
+    );
+    // the recovery path itself is on the timeline
+    for name in ["dispatch", "restore", "checkpoint", "step", "probe"] {
+        assert!(
+            events.iter().any(|e| e
+                .get("name")
+                .and_then(|n| n.as_str().ok())
+                == Some(name)),
+            "trace misses '{name}' events"
+        );
+    }
+    assert_eq!(sink.dropped(), 0);
+
+    mgr.shutdown().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn flight_ring_keeps_newest_n_steps() {
+    // A memory-only sink with a tiny ring: after 8 steps only the newest
+    // 4 remain, dump_flight without a dir stays None, and the run's
+    // events survive in the global buffer.
+    let reg = Arc::new(Registry::new());
+    let sink = Arc::new(TraceSink::new().flight_steps(4));
+    reg.set_tracer(sink.clone());
+    let mgr = RunManager::start_with_telemetry(artifacts(), None, reg).unwrap();
+    let c = mgr.client();
+    let mut s = RunSpec::new("tiny-enc", "sst2", OptimizerKind::fzoo(1e-3, 1e-3), 8).seed(0);
+    s.name = "ring".into();
+    let h = c.submit(s).unwrap();
+    c.train_steps(h.id, 8).unwrap();
+    h.wait().unwrap();
+
+    assert_eq!(sink.flight_step_indices("ring"), vec![4, 5, 6, 7]);
+    assert_eq!(sink.dump_flight("ring", "test"), None, "no dir, no dump");
+    assert!(sink.events_for_run("ring").iter().any(|e| e.name == "step"));
+    mgr.shutdown().unwrap();
+}

@@ -8,6 +8,8 @@
 #      randomized version is `make chaos` (FZOO_CHAOS_SEED to replay)
 #   5. metrics smoke              — live serve with --metrics-addr, one
 #      Prometheus scrape, fzoo_forward_passes_total must be non-empty
+#   6. trace smoke                — faulted serve with --trace-dir must
+#      leave a Chrome trace + flight dump that `trace summarize` reads
 #
 # The Rust tests need the AOT artifacts (`make artifacts`) for the
 # integration/invariant suites (serve, recovery, invariants); unit tests
@@ -31,5 +33,8 @@ FZOO_CHAOS_SEED="${FZOO_CHAOS_SEED:-51717}" \
 
 echo "== metrics smoke: serve --metrics-addr + live scrape =="
 ./scripts/metrics_smoke.sh
+
+echo "== trace smoke: serve --trace-dir + flight dump + summarize =="
+./scripts/trace_smoke.sh
 
 echo "check: all gates passed"

@@ -1,0 +1,86 @@
+#!/usr/bin/env bash
+# Tracing smoke test (`make trace-smoke`): run a short serve job with an
+# injected execute fault under --trace-dir, then assert the per-run
+# Chrome trace and the flight-recorder crash dump exist, parse, and read
+# back through `fzoo trace summarize`. Needs `target/release/fzoo` and
+# the tiny AOT artifacts.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+BIN=target/release/fzoo
+if [ ! -x "$BIN" ]; then
+    echo "trace-smoke: $BIN not built (run: cargo build --release)" >&2
+    exit 1
+fi
+
+work="$(mktemp -d)"
+cleanup() { rm -rf "$work"; }
+trap cleanup EXIT
+
+# A finite job that faults on step 6 (the first step after the 6-step
+# checkpoint exists), recovers once, and finishes: the run's summary
+# exits 0 while still exercising the flight-recorder dump path.
+cat > "$work/jobs.json" <<EOF
+{
+  "artifacts": "artifacts",
+  "jobs": [
+    {"name": "smoke", "model": "tiny-enc", "task": "sst2", "steps": 8,
+     "eval_batches": 0, "checkpoint_every": 3, "max_restarts": 1,
+     "checkpoint_dir": "$work/ckpt",
+     "optimizer": {"kind": "fzoo", "lr": 1e-3, "eps": 1e-3}}
+  ]
+}
+EOF
+cat > "$work/faults.json" <<EOF
+{"seed": 7, "rules": [{"site": "execute", "run": "smoke", "at_step": 6}]}
+EOF
+
+"$BIN" serve --jobs "$work/jobs.json" --fault-plan "$work/faults.json" \
+    --trace-dir "$work/traces" > "$work/serve.log" 2>&1 || {
+    echo "trace-smoke: serve failed:" >&2
+    cat "$work/serve.log" >&2
+    exit 1
+}
+
+trace="$work/traces/smoke.trace.json"
+if [ ! -s "$trace" ]; then
+    echo "trace-smoke: $trace missing or empty; serve log:" >&2
+    cat "$work/serve.log" >&2
+    exit 1
+fi
+flight="$(ls "$work"/traces/smoke.step*.flight.json 2>/dev/null | head -n1 || true)"
+if [ -z "$flight" ]; then
+    echo "trace-smoke: no flight dump written; trace dir holds:" >&2
+    ls -l "$work/traces" >&2
+    exit 1
+fi
+case "$flight" in
+    *step6*) ;;
+    *)
+        echo "trace-smoke: flight dump is not for the faulted step 6: $flight" >&2
+        exit 1
+        ;;
+esac
+
+summary="$("$BIN" trace summarize "$trace")"
+for phase in train/step train/optim optim/probe serve/dispatch; do
+    if ! grep -q "^$phase " <<<"$summary"; then
+        echo "trace-smoke: summarize misses phase '$phase':" >&2
+        printf '%s\n' "$summary" >&2
+        exit 1
+    fi
+done
+if ! grep -q 'probe-σ trail' <<<"$summary"; then
+    echo "trace-smoke: summarize misses the probe-σ trail:" >&2
+    printf '%s\n' "$summary" >&2
+    exit 1
+fi
+
+flight_summary="$("$BIN" trace summarize "$flight")"
+if ! grep -q 'flight dump: run smoke | reason transient' <<<"$flight_summary"; then
+    echo "trace-smoke: flight summarize misses the dump header:" >&2
+    printf '%s\n' "$flight_summary" >&2
+    exit 1
+fi
+
+echo "trace-smoke: OK — $(basename "$trace") + $(basename "$flight")"
