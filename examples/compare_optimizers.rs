@@ -40,7 +40,7 @@ fn main() -> Result<()> {
             verbose: false,
             ..Default::default()
         };
-        let mut trainer = Trainer::with_opts(&rt, &mut session, task, kind, opts);
+        let mut trainer = Trainer::with_opts(&rt, &mut session, task, kind, opts)?;
         let h = trainer.train(steps)?;
 
         let path = format!("reports/compare_snli_{name}.csv");

@@ -58,7 +58,7 @@ fn main() -> Result<()> {
         task,
         OptimizerKind::fzoo(1e-2, 1e-3),
         opts,
-    );
+    )?;
     let h = trainer.train(steps)?;
 
     // checkpoint boundary: the trained parameters cross device -> host

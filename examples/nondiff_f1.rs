@@ -23,7 +23,7 @@ fn main() -> Result<()> {
     let mut session = Session::open_pretrained(&rt, "opt125-span")?;
     let task = TaskKind::Squad.instantiate(session.model_config(), 0)?;
     let kind = hparams::kind("Adam", false).with_objective(Objective::F1);
-    let mut t = Trainer::new(&rt, &mut session, task.clone(), kind);
+    let mut t = Trainer::new(&rt, &mut session, task.clone(), kind)?;
     match t.train(1) {
         Err(e) => println!("Adam on 1-F1 correctly refused: {e}"),
         Ok(_) => println!("!? Adam accepted a non-differentiable objective"),
@@ -39,7 +39,7 @@ fn main() -> Result<()> {
                 &mut session,
                 task.clone(),
                 OptimizerKind::fzoo(0.0, 1e-3),
-            );
+            )?;
             tr.evaluate()?.f1
         };
         let kind = hparams::kind(method, false).with_objective(Objective::F1);
@@ -50,7 +50,7 @@ fn main() -> Result<()> {
             eval_batches: 12,
             ..Default::default()
         };
-        let mut trainer = Trainer::with_opts(&rt, &mut session, task, kind, opts);
+        let mut trainer = Trainer::with_opts(&rt, &mut session, task, kind, opts)?;
         let h = trainer.train(steps)?;
         println!(
             "{method:>5}: F1 {before:.3} -> {:.3} ({} steps on raw 1-F1, {:.0} forwards)",

@@ -37,7 +37,7 @@ fn main() -> Result<()> {
         task,
         OptimizerKind::fzoo(1e-2, 1e-3),
         opts,
-    );
+    )?;
     let history = trainer.train(800)?;
 
     println!(

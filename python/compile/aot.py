@@ -30,20 +30,22 @@ from jax._src.lib import xla_client as xc
 
 from .configs import CONFIGS, DEFAULT_SET, FULL_SET, config_dict
 from .params import init_params, init_prefix, layout, prefix_dim
-from .steps import executables
+from .steps import executables, make_slice, pack_outputs
 
 DTYPE_NAMES = {"float32": "f32", "int32": "i32", "uint32": "u32"}
 
 
-MANIFEST_VERSION = 2
+MANIFEST_VERSION = 3
 
 
 def to_hlo_text(lowered, n_outputs: int) -> str:
-    """Lower to HLO text. Manifest v2 root contract: single-output graphs
-    get an *array* root (``return_tuple=False``) so the Rust runtime can
-    keep the result on device as a ``DeviceVec`` with no host sync; only
-    multi-output graphs are tuple-rooted (PJRT cannot split a tuple buffer
-    device-side, so those outputs cross the host when read)."""
+    """Lower to HLO text. Manifest v3 root contract: single-output graphs
+    (including packed multi-output graphs, which were rewritten to one flat
+    f32 array before lowering) get an *array* root (``return_tuple=False``)
+    so the Rust runtime can keep the result on device as a ``DeviceVec``
+    with no host sync. Only multi-output graphs that could not be packed
+    (mixed dtypes) are tuple-rooted — PJRT cannot split a tuple buffer
+    device-side, so those outputs cross the host when read."""
     mlir_mod = lowered.compiler_ir("stablehlo")
     comp = xc._xla.mlir.mlir_module_to_xla_computation(
         str(mlir_mod), use_tuple_args=False, return_tuple=n_outputs > 1
@@ -55,6 +57,26 @@ def spec_json(name, sds):
     return {"name": name,
             "dtype": DTYPE_NAMES[str(sds.dtype)],
             "shape": list(sds.shape)}
+
+
+def packed_plan(outs):
+    """Manifest-v3 packing for a multi-output graph: ``None`` when any
+    output is not f32 (tuple-root fallback), else the lowering order
+    (scalar outputs first, then vectors, natural order within each), the
+    per-output offsets into the flat array (indexed by *natural* output
+    position), the total element count, and the scalar count."""
+    if any(str(o.dtype) != "float32" for o in outs):
+        return None
+    sizes = [int(np.prod(o.shape)) if o.shape else 1 for o in outs]
+    scalars = [i for i, o in enumerate(outs) if o.shape == ()]
+    vectors = [i for i, o in enumerate(outs) if o.shape != ()]
+    order = scalars + vectors
+    offsets = [0] * len(outs)
+    off = 0
+    for i in order:
+        offsets[i] = off
+        off += sizes[i]
+    return order, offsets, off, len(scalars)
 
 
 def lower_model(cfg, out_dir: str, manifest: dict, verbose=True):
@@ -78,26 +100,53 @@ def lower_model(cfg, out_dir: str, manifest: dict, verbose=True):
         init_prefix(cfg).tofile(os.path.join(mdir, "init_prefix.bin"))
         entry["init_prefix"] = f"{cfg.name}/init_prefix.bin"
 
-    for exe_name, (fn, specs) in executables(cfg).items():
+    # distinct (total, off, len) device-side splitter graphs the packed
+    # executables below need (run_split's scalar prefix + each vector)
+    slices = set()
+
+    def lower_one(exe_name, fn, specs, outs, packed):
         t0 = time.time()
         args = [s for _, s in specs]
-        lowered = jax.jit(fn).lower(*args)
-        # output specs from the lowered signature (also decides the root
-        # kind: 1 output -> array root, >1 -> tuple root)
-        outs = jax.eval_shape(fn, *args)
-        text = to_hlo_text(lowered, len(outs))
+        lower_fn, n_out = fn, len(outs)
+        if packed is not None:
+            order, offsets, total, n_scalar = packed
+            lower_fn, n_out = pack_outputs(fn, order), 1
+        lowered = jax.jit(lower_fn).lower(*args)
+        text = to_hlo_text(lowered, n_out)
         fname = f"{cfg.name}/{exe_name}.hlo.txt"
         with open(os.path.join(out_dir, fname), "w") as f:
             f.write(text)
-        entry["executables"][exe_name] = {
+        spec = {
             "file": fname,
             "inputs": [spec_json(n, s) for n, s in specs],
             "outputs": [spec_json(f"out{i}", o) for i, o in enumerate(outs)],
             "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
         }
+        if packed is not None:
+            spec["packed"] = {"total": total, "scalars": n_scalar,
+                              "offsets": offsets}
+            if 0 < n_scalar < total:
+                slices.add((total, 0, n_scalar))
+            for i, o in enumerate(outs):
+                if o.shape:
+                    slices.add((total, offsets[i], int(np.prod(o.shape))))
+        entry["executables"][exe_name] = spec
         if verbose:
             print(f"  {cfg.name}/{exe_name}: {len(text)//1024}KB "
                   f"({time.time()-t0:.1f}s)", flush=True)
+
+    for exe_name, (fn, specs) in executables(cfg).items():
+        # output specs from the lowered signature decide the root kind:
+        # 1 output -> array root; >1 all-f32 -> packed array root (v3);
+        # >1 mixed-dtype -> tuple root (legacy fallback)
+        args = [s for _, s in specs]
+        outs = jax.eval_shape(fn, *args)
+        packed = packed_plan(outs) if len(outs) > 1 else None
+        lower_one(exe_name, fn, specs, outs, packed)
+    for total, off, ln in sorted(slices):
+        fn, specs = make_slice(total, off, ln)
+        outs = jax.eval_shape(fn, *[s for _, s in specs])
+        lower_one(f"slice_{off}_{ln}_of_{total}", fn, specs, outs, None)
     manifest["models"][cfg.name] = entry
 
 
@@ -127,10 +176,12 @@ def main() -> None:
         with open(mpath) as f:
             manifest = json.load(f)
         manifest.setdefault("models", {})
-        # v1 artifacts were tuple-rooted everywhere; the root contract
-        # changed, so incremental reuse across versions is unsound.
+        # pre-v3 artifacts tuple-root their multi-output graphs (v1 even
+        # tuple-rooted everything); the root contract changed, so
+        # incremental reuse across versions is unsound.
         if manifest.get("version", 1) < MANIFEST_VERSION:
-            print("manifest is pre-v2 (tuple roots): full rebuild", flush=True)
+            print("manifest is pre-v3 (tuple-rooted multi-output graphs): "
+                  "full rebuild", flush=True)
             manifest = {"version": MANIFEST_VERSION, "models": {}}
         manifest["version"] = MANIFEST_VERSION
 

@@ -3,9 +3,13 @@
 Each function returns ``(fn, input_specs)`` where ``fn`` is the pure JAX
 function to lower and ``input_specs`` is the ordered list of
 ``(name, ShapeDtypeStruct)`` the Rust runtime binds *by name* at execute
-time. Root contract (manifest v2): single-output graphs lower with an
+time. Root contract (manifest v3): single-output graphs lower with an
 array root (``return_tuple=False``) so the Rust runtime can keep the
-result on device; only multi-output graphs are tuple-rooted.
+result on device; multi-output all-f32 graphs lower with a *packed* array
+root — ``concat([scalars…, vectors…])`` flattened, per-output offsets in
+the manifest — so the runtime can slice each output back out on device
+(``pack_outputs``/``make_slice``) and fetch only the O(1) scalar prefix.
+Only multi-output graphs with mixed dtypes fall back to a tuple root.
 
 The contract with the Rust coordinator (rust/src/optim):
 
@@ -60,6 +64,36 @@ def _theta_spec(cfg):
 def _clean_loss(cfg, theta, ids, labels, mask, objective):
     out = forward(cfg, theta, ids, mask)
     return loss_streams(cfg, out, labels, objective)[0]
+
+
+def _trainable_spec(cfg):
+    """(name, d) of the trainable vector: the prefix in PEFT mode, theta
+    otherwise. Graphs shared by both families bind it by this name."""
+    if cfg.n_prefix > 0:
+        return "prefix", prefix_dim(cfg)
+    return "theta", layout(cfg).d
+
+
+def pack_outputs(fn, order):
+    """Wrap a multi-output graph so it returns ONE flat f32 array: the
+    outputs in ``order`` (scalars first), each reshaped to rank 1 and
+    concatenated. This is the manifest-v3 packed-root contract — the Rust
+    runtime slices per-output views back out *on device* (``make_slice``)
+    instead of round-tripping a tuple literal through the host."""
+    def packed(*a):
+        outs = fn(*a)
+        return (jnp.concatenate(
+            [jnp.reshape(outs[i], (-1,)) for i in order]),)
+    return packed
+
+
+def make_slice(total: int, off: int, ln: int):
+    """Device-side splitter ``packed[off:off+ln]``. One graph per distinct
+    (offset, len) slice any packed executable of the model needs; array
+    root, so the slice stays on device as a ``DeviceVec``."""
+    def fn(packed):
+        return (jax.lax.slice(packed, (off,), (off + ln,)),)
+    return fn, [("packed", _sds((total,), F32))]
 
 
 # ---------------------------------------------------------------------------
@@ -295,6 +329,61 @@ def make_sgd_apply(cfg: ModelConfig):
 
 
 # ---------------------------------------------------------------------------
+# first-order moments, in-graph (shared by the FT and prefix families: the
+# trainable vector binds by its family name via _trainable_spec)
+# ---------------------------------------------------------------------------
+
+def make_adam_fo_m(cfg: ModelConfig):
+    """First-order Adam first moment m' = b1*m + (1-b1)*g. Single output,
+    so FO moments live on device like the ZO family's ``adam_zo_m`` —
+    unlocked by ``grad_loss`` keeping the gradient on device (v3)."""
+    _, d = _trainable_spec(cfg)
+
+    def fn(m, g, beta1):
+        return (beta1 * m + (1.0 - beta1) * g,)
+    return fn, [("m", _sds((d,), F32)), ("g", _sds((d,), F32)),
+                ("beta1", _sds((), F32))]
+
+
+def make_adam_fo_v(cfg: ModelConfig):
+    """First-order Adam second moment v' = b2*v + (1-b2)*g^2."""
+    _, d = _trainable_spec(cfg)
+
+    def fn(v, g, beta2):
+        return (beta2 * v + (1.0 - beta2) * g * g,)
+    return fn, [("v", _sds((d,), F32)), ("g", _sds((d,), F32)),
+                ("beta2", _sds((), F32))]
+
+
+def make_adam_fo_step(cfg: ModelConfig):
+    """First-order Adam parameter step from already-updated moments (bias
+    correction in-graph; same math as ``adam_zo_step``)."""
+    pname, d = _trainable_spec(cfg)
+
+    def fn(p, m, v, lr, beta1, beta2, eps_adam, t):
+        mh = m / (1.0 - beta1 ** t)
+        vh = v / (1.0 - beta2 ** t)
+        return (p - lr * mh / (jnp.sqrt(vh) + eps_adam),)
+    return fn, [(pname, _sds((d,), F32)), ("m", _sds((d,), F32)),
+                ("v", _sds((d,), F32)), ("lr", _sds((), F32)),
+                ("beta1", _sds((), F32)), ("beta2", _sds((), F32)),
+                ("eps_adam", _sds((), F32)), ("t", _sds((), F32))]
+
+
+def make_nsgd_apply(cfg: ModelConfig):
+    """Normalized-SGD apply: p' = p - lr * g / ||g||, with the host
+    fallback's guard (an effectively-zero gradient is applied unscaled)."""
+    pname, d = _trainable_spec(cfg)
+
+    def fn(p, g, lr):
+        norm = jnp.sqrt(jnp.sum(g * g))
+        scale = jnp.where(norm <= 1e-12, 1.0, 1.0 / norm)
+        return (p - lr * scale * g,)
+    return fn, [(pname, _sds((d,), F32)), ("g", _sds((d,), F32)),
+                ("lr", _sds((), F32))]
+
+
+# ---------------------------------------------------------------------------
 # prefix-tuning (PEFT) family — trainable prefix, frozen base
 # ---------------------------------------------------------------------------
 
@@ -419,6 +508,10 @@ def executables(cfg: ModelConfig) -> dict:
             "gauss_update": make_prefix_gauss_update(cfg),
             "grad_loss": make_prefix_grad_loss(cfg),
             "sgd_apply": make_prefix_sgd_apply(cfg),
+            "nsgd_apply": make_nsgd_apply(cfg),
+            "adam_fo_m": make_adam_fo_m(cfg),
+            "adam_fo_v": make_adam_fo_v(cfg),
+            "adam_fo_step": make_adam_fo_step(cfg),
         }
         return exes
 
@@ -441,6 +534,10 @@ def executables(cfg: ModelConfig) -> dict:
         "momentum_zo_m": make_momentum_zo_m(cfg),
         "grad_loss": make_grad_loss(cfg),
         "sgd_apply": make_sgd_apply(cfg),
+        "nsgd_apply": make_nsgd_apply(cfg),
+        "adam_fo_m": make_adam_fo_m(cfg),
+        "adam_fo_v": make_adam_fo_v(cfg),
+        "adam_fo_step": make_adam_fo_step(cfg),
     }
     for extra in cfg.extra_n:
         exes[f"fzoo_losses_n{extra}"] = make_fzoo_losses(cfg, extra)

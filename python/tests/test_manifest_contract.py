@@ -71,10 +71,66 @@ class TestManifestOnDisk:
         for name in DEFAULT_SET:
             assert name in manifest["models"], name
 
-    def test_manifest_version_is_v2(self, manifest):
+    def test_manifest_version_is_v3(self, manifest):
         # v2 = single-output graphs are array-rooted (device-resident
-        # outputs); the Rust runtime keys its root handling on this
-        assert manifest.get("version", 1) >= 2
+        # outputs); v3 = all-f32 multi-output graphs pack into a flat
+        # array root with per-output offsets + on-device slicer graphs.
+        # The Rust runtime keys its root handling on this.
+        assert manifest.get("version", 1) >= 3
+
+    def test_packed_specs_tile_exactly(self, manifest):
+        # A packed spec must describe its root completely: offsets in
+        # natural output order, scalars first, vectors covering the rest
+        # of [0, total) without gaps — the same validation the Rust
+        # manifest parser enforces at load time.
+        found = 0
+        for name in DEFAULT_SET:
+            entry = manifest["models"][name]
+            for exe, spec in entry["executables"].items():
+                packed = spec.get("packed")
+                if packed is None:
+                    continue
+                found += 1
+                outs = spec["outputs"]
+                assert len(packed["offsets"]) == len(outs), f"{name}/{exe}"
+                assert all(o["dtype"] == "f32" for o in outs), f"{name}/{exe}"
+                n_scalar = sum(1 for o in outs if o["shape"] == [])
+                assert packed["scalars"] == n_scalar, f"{name}/{exe}"
+                covered = 0
+                for off, out in zip(packed["offsets"], outs):
+                    size = int(np.prod(out["shape"])) if out["shape"] else 1
+                    assert off + size <= packed["total"], f"{name}/{exe}"
+                    covered += size
+                assert covered == packed["total"], f"{name}/{exe}"
+        assert found > 0, "v3 artifacts must carry at least one packed root"
+
+    def test_packed_roots_have_slicer_graphs(self, manifest):
+        # every non-scalar packed output needs its on-device slicer
+        for name in DEFAULT_SET:
+            entry = manifest["models"][name]
+            exes = entry["executables"]
+            for exe, spec in exes.items():
+                packed = spec.get("packed")
+                if packed is None:
+                    continue
+                total = packed["total"]
+                for off, out in zip(packed["offsets"], spec["outputs"]):
+                    if out["shape"] == []:
+                        continue
+                    size = int(np.prod(out["shape"]))
+                    slicer = f"slice_{off}_{size}_of_{total}"
+                    assert slicer in exes, f"{name}/{exe} needs {slicer}"
+                if 0 < packed["scalars"] < total:
+                    prefix = f"slice_0_{packed['scalars']}_of_{total}"
+                    assert prefix in exes, f"{name}/{exe} needs {prefix}"
+
+    def test_mixed_dtype_outputs_are_never_packed(self, manifest):
+        # eval_logits & friends with non-f32 outputs must stay tuple-rooted
+        for name in DEFAULT_SET:
+            entry = manifest["models"][name]
+            for exe, spec in entry["executables"].items():
+                if any(o["dtype"] != "f32" for o in spec["outputs"]):
+                    assert spec.get("packed") is None, f"{name}/{exe}"
 
     def test_d_matches_recomputed_layout(self, manifest):
         for name in DEFAULT_SET:

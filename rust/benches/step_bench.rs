@@ -18,7 +18,9 @@ use fzoo::util::bench::{black_box, Bench};
 use fzoo::util::json::Value;
 
 fn main() {
-    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    // the crate lives in rust/; artifacts and bench baselines sit at the
+    // repo root one level up
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..");
     let rt = match Runtime::load(root.join("artifacts")) {
         Ok(rt) => rt,
         Err(e) => {
@@ -52,7 +54,8 @@ fn main() {
                 ..Default::default()
             };
             let mut trainer =
-                fzoo::coordinator::Trainer::with_opts(&rt, &mut session, task, kind, opts);
+                fzoo::coordinator::Trainer::with_opts(&rt, &mut session, task, kind, opts)
+                    .unwrap();
             let _ = trainer.train(1).unwrap(); // warm executable cache
             let mut step = 1u64;
             b.run(&format!("{model}/{opt}_step"), || {
@@ -92,7 +95,7 @@ fn main() {
             ..Default::default()
         };
         let mut trainer =
-            fzoo::coordinator::Trainer::with_opts(&rt, &mut session, task, kind, opts);
+            fzoo::coordinator::Trainer::with_opts(&rt, &mut session, task, kind, opts).unwrap();
         let _ = trainer.train(1).unwrap();
         let mut step = 1u64;
         b.run(&format!("{model}/fzoo_step_device"), || {
@@ -129,6 +132,63 @@ fn main() {
                 r,
             ));
         }
+
+        // v3 packed-root splitting: the same `grad_loss` executable run
+        // both ways. `run()` fetches the whole packed root — loss plus the
+        // full gradient, O(d) floats — to the host; `run_split()` fetches
+        // only the loss scalar and slices the gradient out on device.
+        let exe = match rt.executable(model, "grad_loss") {
+            Ok(e) => e,
+            Err(_) => continue, // artifact set without the gradient graph
+        };
+        if exe.spec.packed.is_some() {
+            let batch = trainer.batcher.next_train();
+            let (ids, labels, mask) = batch.literals().unwrap();
+            b.run(&format!("{model}/grad_loss_tuple_fetch"), || {
+                let outs = trainer
+                    .session
+                    .bind_params(exe.call())
+                    .unwrap()
+                    .literal("ids", ids)
+                    .unwrap()
+                    .literal("labels", labels)
+                    .unwrap()
+                    .literal("mask", mask)
+                    .unwrap()
+                    .run()
+                    .unwrap();
+                black_box(outs.len());
+            });
+            b.run(&format!("{model}/grad_loss_split"), || {
+                let out = trainer
+                    .session
+                    .bind_params(exe.call())
+                    .unwrap()
+                    .literal("ids", ids)
+                    .unwrap()
+                    .literal("labels", labels)
+                    .unwrap()
+                    .literal("mask", mask)
+                    .unwrap()
+                    .run_split()
+                    .unwrap();
+                black_box(out.scalars[0]);
+            });
+            if let Some(r) = b.ratio(
+                &format!("{model}/grad_loss_tuple_fetch"),
+                &format!("{model}/grad_loss_split"),
+            ) {
+                println!(
+                    "--> {model}: full-root host fetch costs {r:.2}x over \
+                     device-side splitting\n"
+                );
+                ratios.push((
+                    model.to_string(),
+                    "tuple_fetch_vs_split".to_string(),
+                    r,
+                ));
+            }
+        }
     }
 
     // Serve scheduler tax: two concurrent runs interleaved at step
@@ -150,10 +210,12 @@ fn main() {
         // sequential baseline: two trainers, no manager in the path
         let mut s1 = Session::open(&rt, model).unwrap();
         let task1 = TaskKind::Sst2.instantiate(s1.model_config(), 0).unwrap();
-        let mut t1 = fzoo::coordinator::Trainer::with_opts(&rt, &mut s1, task1, kind(), opts(0));
+        let mut t1 = fzoo::coordinator::Trainer::with_opts(&rt, &mut s1, task1, kind(), opts(0))
+            .unwrap();
         let mut s2 = Session::open(&rt, model).unwrap();
         let task2 = TaskKind::Sst2.instantiate(s2.model_config(), 1).unwrap();
-        let mut t2 = fzoo::coordinator::Trainer::with_opts(&rt, &mut s2, task2, kind(), opts(1));
+        let mut t2 = fzoo::coordinator::Trainer::with_opts(&rt, &mut s2, task2, kind(), opts(1))
+            .unwrap();
         let _ = t1.train(1).unwrap(); // warm executable cache
         let _ = t2.train(1).unwrap();
         let mut step = 1u64;

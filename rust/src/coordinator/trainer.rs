@@ -695,26 +695,28 @@ impl<'rt, 's> Trainer<'rt, 's> {
         session: &'s mut Session,
         task: Task,
         kind: OptimizerKind,
-    ) -> Self {
+    ) -> Result<Self> {
         Self::with_opts(rt, session, task, kind, TrainOpts::default())
     }
 
+    /// Errors when the optimizer cannot be built for this session (e.g.
+    /// fzoo-seq on a prefix model — see [`OptimizerKind::build`]).
     pub fn with_opts(
         rt: &'rt Runtime,
         session: &'s mut Session,
         task: Task,
         kind: OptimizerKind,
         opts: TrainOpts,
-    ) -> Self {
-        let optimizer = kind.build(session, opts.run_seed);
+    ) -> Result<Self> {
+        let optimizer = kind.build(session, opts.run_seed)?;
         let batcher = Batcher::new(task, &session.entry.config, opts.run_seed);
-        Self {
+        Ok(Self {
             rt,
             session,
             batcher,
             optimizer,
             opts,
-        }
+        })
     }
 
     pub fn evaluate(&self) -> Result<EvalOut> {

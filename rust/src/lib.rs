@@ -19,7 +19,7 @@
 //! let rt = Runtime::load("artifacts")?;
 //! let mut session = Session::open(&rt, "tiny-enc")?;
 //! let task = TaskKind::Sst2.instantiate(session.model_config(), 0)?;
-//! let mut trainer = Trainer::new(&rt, &mut session, task, OptimizerKind::fzoo(1e-3, 1e-3));
+//! let mut trainer = Trainer::new(&rt, &mut session, task, OptimizerKind::fzoo(1e-3, 1e-3))?;
 //! let history = trainer.train(100)?;
 //! println!("final loss {:.3}", history.last_loss());
 //! # anyhow::Ok(())

@@ -150,7 +150,7 @@ fn run_train(cfg: TrainConfig, pretrained: bool) -> Result<()> {
         session.d_trainable()
     );
     let mut trainer =
-        Trainer::with_opts(&rt, &mut session, task, cfg.optimizer.clone(), cfg.train_opts());
+        Trainer::with_opts(&rt, &mut session, task, cfg.optimizer.clone(), cfg.train_opts())?;
     let history = trainer.train(cfg.steps)?;
     println!(
         "done: {} steps, final loss {:.4}, acc {:?}, {:.1}s ({:.1}ms/step, {:.1}s compile)",

@@ -1,13 +1,17 @@
 //! First-order baselines: SGD, Adam [20] and normalized-SGD [2] (FZOO's
 //! first-order inspiration). Gradients come from the AOT `grad_loss`
-//! executable (jax.value_and_grad on the clean forward); moment math runs
-//! host-side over the gradient vector and the axpy is applied in-graph via
-//! `sgd_apply` against the device-resident parameters (host-side only when
-//! a v1 artifact set lacks the graph).
+//! executable (jax.value_and_grad on the clean forward).
 //!
-//! Boundary traffic per step: the *gradient* crosses device→host (the
-//! moment math is inherently host-side) and the *direction* crosses
-//! host→device; the parameter vector itself stays on device.
+//! With v3 (packed-root) artifacts the whole step is device-resident:
+//! `grad_loss` is split on device (`run_split` fetches only the loss
+//! scalar), the gradient feeds `sgd_apply` / `nsgd_apply` /
+//! `adam_fo_{m,v,step}` directly, and the Adam moments live in
+//! `DeviceVec`s between steps. Boundary traffic per step: one f32.
+//!
+//! With v1/v2 artifacts (or artifact sets missing the apply graphs) the
+//! gradient crosses device→host, moment math runs host-side and the
+//! direction crosses back — the historical O(d) round trip the v3 path
+//! eliminates.
 //!
 //! Accounting: one backward = 3 forwards [Alman & Song 2024], so a
 //! first-order step costs 4 forward-equivalents — the convention behind
@@ -16,7 +20,7 @@
 use anyhow::Result;
 
 use crate::data::Batch;
-use crate::runtime::{scalar_f32, to_vec_f32, Runtime, Session};
+use crate::runtime::{scalar_f32, to_vec_f32, DeviceVec, Runtime, Session};
 
 use super::{Objective, OptState, Optimizer, StepOut};
 
@@ -34,6 +38,10 @@ pub struct FirstOrder {
     objective: Objective,
     m: Vec<f32>,
     v: Vec<f32>,
+    /// Device-resident Adam moments (v3 step path). Authoritative once
+    /// set; the host `m`/`v` then only stage checkpoint imports.
+    dm: Option<DeviceVec>,
+    dv: Option<DeviceVec>,
     t: f32,
     pub beta1: f32,
     pub beta2: f32,
@@ -53,6 +61,8 @@ impl FirstOrder {
             objective,
             m,
             v,
+            dm: None,
+            dv: None,
             t: 0.0,
             beta1: 0.9,
             beta2: 0.999,
@@ -111,7 +121,11 @@ impl Optimizer for FirstOrder {
             scalars: vec![("t".into(), self.t as f64)],
             vectors: Vec::new(),
         };
-        if !self.m.is_empty() {
+        if let (Some(dm), Some(dv)) = (&self.dm, &self.dv) {
+            // device moments are authoritative (v3 step path)
+            st.vectors.push(("m".into(), dm.to_host()?));
+            st.vectors.push(("v".into(), dv.to_host()?));
+        } else if !self.m.is_empty() {
             st.vectors.push(("m".into(), self.m.clone()));
             st.vectors.push(("v".into(), self.v.clone()));
         }
@@ -140,6 +154,10 @@ impl Optimizer for FirstOrder {
             );
             self.v = v;
         }
+        // imported host vectors are now the truth — drop any stale device
+        // copies so the next step re-uploads them
+        self.dm = None;
+        self.dv = None;
         anyhow::ensure!(
             state.is_empty(),
             "{}: unrecognised checkpoint state {:?}",
@@ -158,12 +176,91 @@ impl Optimizer for FirstOrder {
         );
         let exe = rt.executable(&s.model, "grad_loss")?;
         let (ids, labels, mask) = batch.literals()?;
-        let outs = s
+        let call = s
             .bind_params(exe.call())?
             .literal("ids", ids)?
             .literal("labels", labels)?
-            .literal("mask", mask)?
-            .run()?;
+            .literal("mask", mask)?;
+
+        // v3 device-resident path: split (loss, grad) on device, feed the
+        // gradient straight into the per-flavor apply graph.
+        let apply_exe = match self.flavor {
+            FoFlavor::Sgd => "sgd_apply",
+            FoFlavor::NormalizedSgd => "nsgd_apply",
+            FoFlavor::Adam => "adam_fo_step",
+        };
+        if exe.spec.packed.is_some() && s.entry.executables.contains_key(apply_exe) {
+            let out = call.run_split()?;
+            anyhow::ensure!(
+                out.scalars.len() == 1 && out.device.len() == 1,
+                "grad_loss: packed root yielded {} scalars / {} vectors, \
+                 expected 1 / 1",
+                out.scalars.len(),
+                out.device.len()
+            );
+            let loss = out.scalars[0];
+            let grad = &out.device[0];
+            match self.flavor {
+                FoFlavor::Sgd | FoFlavor::NormalizedSgd => {
+                    let theta2 = rt
+                        .executable(&s.model, apply_exe)?
+                        .call()
+                        .device(s.trainable_name(), s.trainable_dev())?
+                        .device("g", grad)?
+                        .scalar_f32("lr", self.lr)?
+                        .run_device()?;
+                    s.set_trainable_dev(theta2);
+                }
+                FoFlavor::Adam => {
+                    self.t += 1.0;
+                    if self.dm.is_none() || self.dv.is_none() {
+                        // first step (or first after a checkpoint import):
+                        // seed the device moments from the host vectors
+                        self.dm = Some(rt.upload_f32(&self.m)?);
+                        self.dv = Some(rt.upload_f32(&self.v)?);
+                    }
+                    let m2 = rt
+                        .executable(&s.model, "adam_fo_m")?
+                        .call()
+                        .device("m", self.dm.as_ref().expect("seeded above"))?
+                        .device("g", grad)?
+                        .scalar_f32("beta1", self.beta1)?
+                        .run_device()?;
+                    let v2 = rt
+                        .executable(&s.model, "adam_fo_v")?
+                        .call()
+                        .device("v", self.dv.as_ref().expect("seeded above"))?
+                        .device("g", grad)?
+                        .scalar_f32("beta2", self.beta2)?
+                        .run_device()?;
+                    let theta2 = rt
+                        .executable(&s.model, "adam_fo_step")?
+                        .call()
+                        .device(s.trainable_name(), s.trainable_dev())?
+                        .device("m", &m2)?
+                        .device("v", &v2)?
+                        .scalar_f32("lr", self.lr)?
+                        .scalar_f32("beta1", self.beta1)?
+                        .scalar_f32("beta2", self.beta2)?
+                        .scalar_f32("eps_adam", self.adam_eps)?
+                        .scalar_f32("t", self.t)?
+                        .run_device()?;
+                    s.set_trainable_dev(theta2);
+                    self.dm = Some(m2);
+                    self.dv = Some(v2);
+                }
+            }
+            return Ok(StepOut {
+                loss,
+                forwards: 1.0,
+                forward_equiv: 4.0,
+                sigma: None,
+            });
+        }
+
+        // v1/v2 fallback: gradient crosses to host, moments advance
+        // host-side, direction crosses back
+        let outs = call.run()?;
         let loss = scalar_f32(&outs[0])?;
         let grad = to_vec_f32(&outs[1])?;
         let dir = self.direction(grad);

@@ -152,7 +152,9 @@ impl Fzoo {
         match self.mode {
             FzooMode::Sequential => {
                 // Algorithm 3: perturb / forward / discard, one stream at a
-                // time. Only exists for FT models (tab5 ablations). Each
+                // time. FT-only (OptimizerKind::build refuses prefix models
+                // — they ship no rad_perturb graph), so the trainable binds
+                // by the session's name, never a hardcoded "theta". Each
                 // perturbed theta is produced and consumed on device.
                 let fwd = rt.executable(
                     &s.model,
@@ -160,9 +162,8 @@ impl Fzoo {
                 )?;
                 let perturb = rt.executable(&s.model, "rad_perturb")?;
                 let mut out = Vec::with_capacity(n_probe + 1);
-                let l0 = fwd
-                    .call()
-                    .device("theta", s.trainable_dev())?
+                let l0 = s
+                    .bind_params(fwd.call())?
                     .literal("ids", ids)?
                     .literal("labels", labels)?
                     .literal("mask", mask)?
@@ -171,14 +172,14 @@ impl Fzoo {
                 for i in 1..=n_probe {
                     let pert = perturb
                         .call()
-                        .device("theta", s.trainable_dev())?
+                        .device(s.trainable_name(), s.trainable_dev())?
                         .scalar_u32("seed", seed)?
                         .scalar_u32("stream", i as u32)?
                         .scalar_f32("eps", self.eps)?
                         .run_device()?;
                     let li = fwd
                         .call()
-                        .device("theta", &pert)?
+                        .device(s.trainable_name(), &pert)?
                         .literal("ids", ids)?
                         .literal("labels", labels)?
                         .literal("mask", mask)?

@@ -50,20 +50,31 @@ impl HiZoo {
         let sfx = self.objective.suffix();
         if s.entry.executables.contains_key(&format!("hizoo_losses{sfx}")) {
             let exe = rt.executable(&s.model, &format!("hizoo_losses{sfx}"))?;
-            let outs = s
+            let call = s
                 .bind_params(exe.call())?
                 .literal("ids", ids)?
                 .literal("labels", labels)?
                 .literal("mask", mask)?
                 .scalar_u32("seed", seed)?
-                .scalar_f32("eps", self.eps)?
-                .run()?;
-            Ok((
-                scalar_f32(&outs[0])?,
-                scalar_f32(&outs[1])?,
-                scalar_f32(&outs[2])?,
-                3.0,
-            ))
+                .scalar_f32("eps", self.eps)?;
+            if exe.spec.packed.is_some() {
+                // v3 packed root: all three losses in one scalar fetch
+                let out = call.run_split()?;
+                anyhow::ensure!(
+                    out.scalars.len() == 3,
+                    "hizoo_losses: packed root yielded {} scalars, expected 3",
+                    out.scalars.len()
+                );
+                Ok((out.scalars[0], out.scalars[1], out.scalars[2], 3.0))
+            } else {
+                let outs = call.run()?;
+                Ok((
+                    scalar_f32(&outs[0])?,
+                    scalar_f32(&outs[1])?,
+                    scalar_f32(&outs[2])?,
+                    3.0,
+                ))
+            }
         } else {
             // compose from fwd_loss + mezo_losses (prefix family)
             let fwd = rt.executable(&s.model, &format!("fwd_loss{sfx}"))?;
@@ -75,15 +86,26 @@ impl HiZoo {
                     .run()?[0],
             )?;
             let mz = rt.executable(&s.model, &format!("mezo_losses{sfx}"))?;
-            let outs = s
+            let call = s
                 .bind_params(mz.call())?
                 .literal("ids", ids)?
                 .literal("labels", labels)?
                 .literal("mask", mask)?
                 .scalar_u32("seed", seed)?
-                .scalar_f32("eps", self.eps)?
-                .run()?;
-            Ok((l0, scalar_f32(&outs[0])?, scalar_f32(&outs[1])?, 3.0))
+                .scalar_f32("eps", self.eps)?;
+            let (lp, lm) = if mz.spec.packed.is_some() {
+                let out = call.run_split()?;
+                anyhow::ensure!(
+                    out.scalars.len() == 2,
+                    "mezo_losses: packed root yielded {} scalars, expected 2",
+                    out.scalars.len()
+                );
+                (out.scalars[0], out.scalars[1])
+            } else {
+                let outs = call.run()?;
+                (scalar_f32(&outs[0])?, scalar_f32(&outs[1])?)
+            };
+            Ok((l0, lp, lm, 3.0))
         }
     }
 }

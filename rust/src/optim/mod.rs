@@ -239,9 +239,12 @@ impl OptimizerKind {
         self
     }
 
-    pub fn build(&self, session: &Session, run_seed: u64) -> Box<dyn Optimizer> {
+    /// Instantiate against an open session. Fails when the artifacts
+    /// cannot serve the requested algorithm (e.g. `fzoo-seq` on a prefix
+    /// model) — at build time, with a clear message, instead of mid-run.
+    pub fn build(&self, session: &Session, run_seed: u64) -> Result<Box<dyn Optimizer>> {
         let d = session.d_trainable();
-        match self.clone() {
+        Ok(match self.clone() {
             OptimizerKind::Fzoo {
                 eta,
                 eps,
@@ -254,6 +257,12 @@ impl OptimizerKind {
                     FzooModeCfg::Sequential => FzooMode::Sequential,
                     FzooModeCfg::Reuse => FzooMode::Reuse,
                 };
+                anyhow::ensure!(
+                    mode != FzooMode::Sequential || !session.is_prefix(),
+                    "fzoo-seq (Algorithm 3) is FT-only: prefix artifacts carry \
+                     no rad_perturb graph — use fzoo or fzoo-r on model '{}'",
+                    session.model
+                );
                 // Algorithm 2 (FZOO-R) halves the probe count and fills the
                 // sigma estimate with the previous step's losses. Use the
                 // half-N graphs when the artifacts carry them; otherwise
@@ -307,7 +316,7 @@ impl OptimizerKind {
                 };
                 Box::new(FirstOrder::new(lr, flavor, objective, d))
             }
-        }
+        })
     }
 
     /// CLI/config shorthand -> kind. Known names: fzoo, fzoo-r, fzoo-seq,

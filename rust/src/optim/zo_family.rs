@@ -4,11 +4,12 @@
 //! trick (directions regenerated inside the update graphs).
 //!
 //! Device residency: theta and the d-vector moments (ZO-MMT's m, ZO-Adam's
-//! m/v) live on device as `DeviceVec`s. On v2 artifacts the moments are
+//! m/v) live on device as `DeviceVec`s. On v2+ artifacts the moments are
 //! advanced through the split single-output graphs (`momentum_zo_m`,
-//! `adam_zo_m/v/step`) so nothing O(d) crosses the host; on v1 artifacts
-//! the fused multi-output graphs are used and their tuple result crosses
-//! the host once per step (documented fallback).
+//! `adam_zo_m/v/step`) so nothing O(d) crosses the host. The fused
+//! multi-output graphs remain as a fallback: packed (v3) they split on
+//! device through `run_split()` — still zero O(d) host traffic — and only
+//! v1/v2 tuple roots pay the documented host round trip.
 
 use anyhow::Result;
 
@@ -88,15 +89,26 @@ impl ZoFamily {
             &format!("mezo_losses{}", self.objective.suffix()),
         )?;
         let (ids, labels, mask) = batch.literals()?;
-        let outs = s
+        let call = s
             .bind_params(exe.call())?
             .literal("ids", ids)?
             .literal("labels", labels)?
             .literal("mask", mask)?
             .scalar_u32("seed", seed)?
-            .scalar_f32("eps", self.eps)?
-            .run()?;
-        Ok((scalar_f32(&outs[0])?, scalar_f32(&outs[1])?))
+            .scalar_f32("eps", self.eps)?;
+        if exe.spec.packed.is_some() {
+            // v3 packed root: both losses come back as the scalar prefix
+            let out = call.run_split()?;
+            anyhow::ensure!(
+                out.scalars.len() == 2,
+                "mezo_losses: {} scalars from run_split, expected 2",
+                out.scalars.len()
+            );
+            Ok((out.scalars[0], out.scalars[1]))
+        } else {
+            let outs = call.run()?;
+            Ok((scalar_f32(&outs[0])?, scalar_f32(&outs[1])?))
+        }
     }
 
     fn fwd_loss(&self, rt: &Runtime, s: &Session, batch: &Batch) -> Result<f32> {
@@ -267,19 +279,33 @@ impl Optimizer for ZoFamily {
                     s.set_trainable_dev(theta2);
                     self.m = Some(m2);
                 } else {
-                    // v1-artifact fallback: fused graph, tuple crosses host
+                    // fused-graph fallback (the fused graphs are FT-only,
+                    // hence the literal "theta" binds)
                     let exe = rt.executable(&s.model, "momentum_zo_update")?;
-                    let outs = exe
+                    let call = exe
                         .call()
                         .device("theta", s.trainable_dev())?
                         .device("m", self.m.as_ref().unwrap())?
                         .scalar_u32("seed", seed)?
                         .scalar_f32("coeff", pg)?
                         .scalar_f32("lr", self.lr)?
-                        .scalar_f32("beta", self.beta1)?
-                        .run()?;
-                    s.set_trainable(rt, to_vec_f32(&outs[0])?)?;
-                    self.m = Some(rt.upload_f32(&to_vec_f32(&outs[1])?)?);
+                        .scalar_f32("beta", self.beta1)?;
+                    if exe.spec.packed.is_some() {
+                        // v3 packed root: (theta', m') split on device
+                        let mut out = call.run_split()?;
+                        anyhow::ensure!(
+                            out.device.len() == 2,
+                            "momentum_zo_update: {} device outputs, expected 2",
+                            out.device.len()
+                        );
+                        self.m = Some(out.device.pop().expect("len checked"));
+                        s.set_trainable_dev(out.device.pop().expect("len checked"));
+                    } else {
+                        // v1/v2 tuple root: the pair crosses the host
+                        let outs = call.run()?;
+                        s.set_trainable(rt, to_vec_f32(&outs[0])?)?;
+                        self.m = Some(rt.upload_f32(&to_vec_f32(&outs[1])?)?);
+                    }
                 }
             }
             ZoFlavor::Adam => {
@@ -319,9 +345,9 @@ impl Optimizer for ZoFamily {
                     self.m = Some(m2);
                     self.v = Some(v2);
                 } else {
-                    // v1-artifact fallback: fused graph, tuple crosses host
+                    // fused-graph fallback (FT-only, literal "theta" binds)
                     let exe = rt.executable(&s.model, "adam_zo_update")?;
-                    let outs = exe
+                    let call = exe
                         .call()
                         .device("theta", s.trainable_dev())?
                         .device("m", self.m.as_ref().unwrap())?
@@ -332,11 +358,25 @@ impl Optimizer for ZoFamily {
                         .scalar_f32("beta1", self.beta1)?
                         .scalar_f32("beta2", self.beta2)?
                         .scalar_f32("eps_adam", self.adam_eps)?
-                        .scalar_f32("t", self.t)?
-                        .run()?;
-                    s.set_trainable(rt, to_vec_f32(&outs[0])?)?;
-                    self.m = Some(rt.upload_f32(&to_vec_f32(&outs[1])?)?);
-                    self.v = Some(rt.upload_f32(&to_vec_f32(&outs[2])?)?);
+                        .scalar_f32("t", self.t)?;
+                    if exe.spec.packed.is_some() {
+                        // v3 packed root: (theta', m', v') split on device
+                        let mut out = call.run_split()?;
+                        anyhow::ensure!(
+                            out.device.len() == 3,
+                            "adam_zo_update: {} device outputs, expected 3",
+                            out.device.len()
+                        );
+                        self.v = Some(out.device.pop().expect("len checked"));
+                        self.m = Some(out.device.pop().expect("len checked"));
+                        s.set_trainable_dev(out.device.pop().expect("len checked"));
+                    } else {
+                        // v1/v2 tuple root: the triple crosses the host
+                        let outs = call.run()?;
+                        s.set_trainable(rt, to_vec_f32(&outs[0])?)?;
+                        self.m = Some(rt.upload_f32(&to_vec_f32(&outs[1])?)?);
+                        self.v = Some(rt.upload_f32(&to_vec_f32(&outs[2])?)?);
+                    }
                 }
             }
         }

@@ -8,18 +8,27 @@
 //! runs with `strict_shape_checking=false` and would SEGFAULT on a
 //! mismatched buffer).
 //!
-//! Root contract (manifest v2, see `python/compile/aot.py`): graphs with a
+//! Root contract (manifest v3, see `python/compile/aot.py`): graphs with a
 //! single output are lowered with an *array* root, so `run_device()` can
 //! hand the result back as a `DeviceVec` without any host sync — this is
 //! what keeps the optimizer hot paths free of per-step O(d) host↔device
-//! round trips. Multi-output graphs keep a tuple root (PJRT cannot split a
-//! tuple buffer device-side) and are read back with `run()`. v1 artifacts
-//! (tuple roots everywhere) still work: `run_device()` transparently falls
-//! back to a fetch/untuple/re-upload round trip.
+//! round trips. Multi-output graphs lower with a *packed* flat-f32 array
+//! root (scalars first, then flattened vectors; offsets in the manifest's
+//! `PackedSpec`): `run_split()` executes the model-shipped slicer graphs
+//! to carve each output back out *on device* and fetches only the O(1)
+//! scalar prefix to the host. Pre-v3 artifacts still work — v2
+//! multi-output graphs keep a tuple root (PJRT cannot split a tuple
+//! buffer device-side) and are read back with `run()`, and v1 artifacts
+//! (tuple roots everywhere) fall back to a fetch/untuple/re-upload round
+//! trip in `run_device()`.
+//!
+//! Every device→host transfer is metered (`RuntimeMetrics::host_fetch`,
+//! labeled by call-site); transfers of `OD_FETCH_MIN_ELEMS`+ elements bump
+//! the O(d)-class counter the zero-host-traffic step-path tests assert on.
 
 use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 use xla::Literal;
 
 use super::fault::{FaultSite, FaultState, Transient};
@@ -37,6 +46,9 @@ use super::{lit_f32, to_vec_f32, RuntimeMetrics};
 pub struct DeviceVec {
     buf: xla::PjRtBuffer,
     len: usize,
+    /// Where this buffer came from (`"upload"` or the producing exe name)
+    /// — the `site=to_host:<origin>` label on the host-fetch counters.
+    origin: String,
     faults: Arc<FaultState>,
     metrics: Arc<RuntimeMetrics>,
 }
@@ -45,12 +57,14 @@ impl DeviceVec {
     pub(crate) fn from_buffer(
         buf: xla::PjRtBuffer,
         len: usize,
+        origin: &str,
         faults: Arc<FaultState>,
         metrics: Arc<RuntimeMetrics>,
     ) -> Self {
         Self {
             buf,
             len,
+            origin: origin.to_string(),
             faults,
             metrics,
         }
@@ -84,6 +98,8 @@ impl DeviceVec {
         })?;
         span.finish();
         drop(trace);
+        self.metrics
+            .host_fetch(&format!("to_host:{}", self.origin), self.len);
         to_vec_f32(&lit)
     }
 
@@ -108,10 +124,13 @@ pub struct Executable {
     pub name: String,
     pub(crate) exe: xla::PjRtLoadedExecutable,
     pub spec: ExeSpec,
-    /// Compiled root is a tuple (manifest v1 artifacts, or any graph with
-    /// more than one output). Array-rooted graphs can return device
-    /// buffers with no host sync.
+    /// Compiled root is a tuple (manifest v1 artifacts, or a multi-output
+    /// graph without a v3 packed spec). Array-rooted graphs can return
+    /// device buffers with no host sync.
     pub(crate) tuple_root: bool,
+    /// Resolved device-side splitter graphs for a packed (v3) root; `None`
+    /// on single-output and tuple-rooted graphs.
+    pub(crate) split: Option<PackedSplit>,
     /// Shared fault hook from the owning `Runtime` — cached executables
     /// outlive plan installation, so they carry the `Arc`, not a snapshot.
     pub(crate) faults: Arc<FaultState>,
@@ -120,10 +139,29 @@ pub struct Executable {
     pub(crate) metrics: Arc<RuntimeMetrics>,
 }
 
+/// The splitter executables a packed (v3) multi-output graph resolves at
+/// compile time: one for the scalar prefix (absent when the graph has no
+/// scalars, or nothing *but* scalars — then the root itself is the O(1)
+/// fetch), and one per vector output, in natural output order.
+pub(crate) struct PackedSplit {
+    pub(crate) scalar_slice: Option<Arc<Executable>>,
+    /// `(logical output index, slicer)` for each non-scalar output.
+    pub(crate) vector_slices: Vec<(usize, Arc<Executable>)>,
+}
+
+/// What `Call::run_split` returns: the graph's scalar outputs fetched to
+/// the host (natural order), and its vector outputs still on device
+/// (natural order). The only host traffic is the O(1) scalar prefix.
+pub struct SplitOut {
+    pub scalars: Vec<f32>,
+    pub device: Vec<DeviceVec>,
+}
+
 impl Executable {
     /// Start a named-binding invocation. Bind every manifest input, then
-    /// finish with `run()` (host outputs) or `run_device()` (single-output
-    /// graphs, result stays on device).
+    /// finish with `run()` (host outputs), `run_device()` (single-output
+    /// graphs, result stays on device) or `run_split()` (packed
+    /// multi-output graphs: scalars to host, vectors stay on device).
     pub fn call(&self) -> Call<'_> {
         Call {
             exe: self,
@@ -347,13 +385,46 @@ impl<'a> Call<'a> {
         Ok((bufs, exe))
     }
 
-    /// Execute and fetch every output to the host as literals.
+    /// Execute and fetch every output to the host as literals. On a
+    /// packed (v3) root the flat array is fetched once and split into the
+    /// logical per-output literals host-side — correct for any caller
+    /// (eval paths), but the whole root crosses the host; step paths that
+    /// only need the scalars should use `run_split()`.
     pub fn run(self) -> Result<Vec<Literal>> {
         let (bufs, exe) = self.execute()?;
-        let outs = if exe.tuple_root {
+        let packed = if exe.tuple_root { None } else { exe.spec.packed.as_ref() };
+        let outs = if let Some(p) = packed {
+            let lit = bufs[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow::anyhow!("fetching {} packed output: {e}", exe.name))?;
+            exe.metrics.host_fetch(&format!("run:{}", exe.name), p.total);
+            let flat = to_vec_f32(&lit)?;
+            anyhow::ensure!(
+                flat.len() == p.total,
+                "{}: packed root holds {} elements, manifest says {}",
+                exe.name,
+                flat.len(),
+                p.total
+            );
+            exe.spec
+                .outputs
+                .iter()
+                .enumerate()
+                .map(|(i, o)| {
+                    let off = p.offsets[i];
+                    if o.shape.is_empty() {
+                        Ok(Literal::scalar(flat[off]))
+                    } else {
+                        lit_f32(&flat[off..off + o.elems()], &o.shape)
+                    }
+                })
+                .collect::<Result<Vec<_>>>()?
+        } else if exe.tuple_root {
             let mut lit = bufs[0][0]
                 .to_literal_sync()
                 .map_err(|e| anyhow::anyhow!("fetching {} output: {e}", exe.name))?;
+            let elems: usize = exe.spec.outputs.iter().map(|o| o.elems()).sum();
+            exe.metrics.host_fetch(&format!("run:{}", exe.name), elems);
             lit.decompose_tuple()
                 .map_err(|e| anyhow::anyhow!("untupling {} output: {e}", exe.name))?
         } else {
@@ -364,6 +435,8 @@ impl<'a> Call<'a> {
                         .map_err(|e| anyhow::anyhow!("fetching {} output: {e}", exe.name))?,
                 );
             }
+            let elems: usize = exe.spec.outputs.iter().map(|o| o.elems()).sum();
+            exe.metrics.host_fetch(&format!("run:{}", exe.name), elems);
             v
         };
         anyhow::ensure!(
@@ -410,10 +483,32 @@ impl<'a> Call<'a> {
                 exe.name,
                 outs.len()
             );
-            let buf = exe.stage(&outs.remove(0), "output")?;
+            let out = outs.remove(0);
+            // A stale or hand-edited artifact can untuple to a literal of
+            // the wrong size; staging it unchecked would mint a DeviceVec
+            // whose `len` lies and defeat Call::device's bind-time guard.
+            let got: usize = out
+                .array_shape()
+                .map_err(|e| {
+                    anyhow::anyhow!("{}: untupled output is not an array: {e}", exe.name)
+                })?
+                .dims()
+                .iter()
+                .map(|&d| d as usize)
+                .product();
+            anyhow::ensure!(
+                got == out_spec.elems(),
+                "{}: untupled output holds {got} elements, manifest says {}",
+                exe.name,
+                out_spec.elems()
+            );
+            exe.metrics
+                .host_fetch(&format!("run_device:{}", exe.name), got);
+            let buf = exe.stage(&out, "output")?;
             Ok(DeviceVec::from_buffer(
                 buf,
                 out_spec.elems(),
+                &exe.name,
                 exe.faults.clone(),
                 exe.metrics.clone(),
             ))
@@ -426,18 +521,90 @@ impl<'a> Call<'a> {
             Ok(DeviceVec::from_buffer(
                 buf,
                 out_spec.elems(),
+                &exe.name,
                 exe.faults.clone(),
                 exe.metrics.clone(),
             ))
         }
     }
+
+    /// Execute a packed (v3) multi-output graph and split its outputs *on
+    /// device*: the scalar prefix is the only host traffic (one O(1)
+    /// fetch, or none when the graph has no scalars); every vector output
+    /// comes back as a `DeviceVec` carved out by the model's slicer
+    /// graphs. Errors on tuple-rooted/pre-v3 graphs — those must use
+    /// `run()` and pay the documented host round trip.
+    pub fn run_split(self) -> Result<SplitOut> {
+        let (bufs, exe) = self.execute()?;
+        let p = exe.spec.packed.as_ref().filter(|_| !exe.tuple_root).ok_or_else(|| {
+            anyhow::anyhow!(
+                "{}: run_split needs a packed (v3) root; this graph has none — \
+                 rebuild artifacts with `make artifacts`, or read it with \
+                 run()/run_device()",
+                exe.name
+            )
+        })?;
+        let split = exe.split.as_ref().ok_or_else(|| {
+            anyhow::anyhow!(
+                "{}: packed root without resolved splitter graphs — rebuild \
+                 artifacts with `make artifacts`",
+                exe.name
+            )
+        })?;
+        let buf = bufs
+            .into_iter()
+            .next()
+            .and_then(|replica| replica.into_iter().next())
+            .expect("non-empty checked in execute");
+        let packed_vec = DeviceVec::from_buffer(
+            buf,
+            p.total,
+            &exe.name,
+            exe.faults.clone(),
+            exe.metrics.clone(),
+        );
+        let scalars = if p.scalars == 0 {
+            Vec::new()
+        } else if p.scalars == p.total {
+            // nothing but scalars — the root itself is the O(1) fetch
+            packed_vec.to_host()?
+        } else {
+            split
+                .scalar_slice
+                .as_ref()
+                .expect("scalar slicer resolved at compile time")
+                .call()
+                .device("packed", &packed_vec)?
+                .run_device()?
+                .to_host()?
+        };
+        let mut device = Vec::with_capacity(split.vector_slices.len());
+        for (i, slicer) in &split.vector_slices {
+            let dv = slicer
+                .call()
+                .device("packed", &packed_vec)?
+                .run_device()
+                .with_context(|| format!("{}: slicing output {i}", exe.name))?;
+            device.push(dv);
+        }
+        Ok(SplitOut { scalars, device })
+    }
 }
 
 fn check_literal_shape(exe: &str, spec: &IoSpec, lit: &Literal) -> Result<()> {
+    // A tuple or unsupported-dtype literal has no array shape; defaulting
+    // it to [] would *equal* a scalar spec and wave exactly the malformed
+    // buffers this guard exists to stop into XLA. Propagate instead.
     let got = lit
         .array_shape()
         .map(|s| s.dims().iter().map(|&d| d as usize).collect::<Vec<_>>())
-        .unwrap_or_default();
+        .map_err(|e| {
+            anyhow::anyhow!(
+                "{exe}: input '{}' is not an array literal (tuple or \
+                 unsupported element type): {e}",
+                spec.name
+            )
+        })?;
     anyhow::ensure!(
         got == spec.shape,
         "{exe}: input '{}' has shape {got:?}, manifest expects {:?}",

@@ -11,6 +11,13 @@ use anyhow::{Context, Result};
 
 use crate::util::json::{self, Value};
 
+/// Newest manifest version this runtime understands. v1 tuple-rooted
+/// everything; v2 array-rooted single-output graphs; v3 packs multi-output
+/// graphs into a flat array root (`PackedSpec`) so outputs split on
+/// device. Older versions still load (with the documented host round trip
+/// on multi-output graphs); newer ones are rejected.
+pub const SUPPORTED_VERSION: u32 = 3;
+
 #[derive(Debug, Clone)]
 pub struct Manifest {
     pub version: u32,
@@ -101,6 +108,9 @@ pub struct ExeSpec {
     pub inputs: Vec<IoSpec>,
     pub outputs: Vec<IoSpec>,
     pub sha256: String,
+    /// v3: multi-output graphs lower with a packed flat-f32 array root;
+    /// `None` on single-output graphs and on pre-v3 tuple roots.
+    pub packed: Option<PackedSpec>,
 }
 
 impl ExeSpec {
@@ -112,6 +122,85 @@ impl ExeSpec {
 
     pub fn input(&self, name: &str) -> Option<&IoSpec> {
         self.input_index(name).map(|i| &self.inputs[i])
+    }
+}
+
+/// Layout of a v3 packed array root: `total` f32 elements, the first
+/// `scalars` of which are the graph's scalar outputs; `offsets[i]` is the
+/// start of logical output `i` (natural output order) in the flat array.
+#[derive(Debug, Clone)]
+pub struct PackedSpec {
+    pub total: usize,
+    pub scalars: usize,
+    pub offsets: Vec<usize>,
+}
+
+impl PackedSpec {
+    /// Name of the device-side splitter graph for `packed[off..off+len]`
+    /// (the AOT pipeline emits one per distinct slice a model needs).
+    pub fn slice_exe(&self, off: usize, len: usize) -> String {
+        format!("slice_{off}_{len}_of_{}", self.total)
+    }
+
+    fn from_json(v: &Value) -> Result<Self> {
+        Ok(Self {
+            total: v.req("total")?.as_usize()?,
+            scalars: v.req("scalars")?.as_usize()?,
+            offsets: v
+                .req("offsets")?
+                .as_arr()?
+                .iter()
+                .map(|x| x.as_usize())
+                .collect::<Result<_>>()?,
+        })
+    }
+
+    /// The packed layout must tile the flat array exactly: one offset per
+    /// logical output, all f32, scalars in the `[0, scalars)` prefix,
+    /// vectors after it, and the element counts summing to `total`. A
+    /// manifest that lies here would produce silently misaligned splits.
+    fn validate(&self, ename: &str, outputs: &[IoSpec]) -> Result<()> {
+        anyhow::ensure!(
+            self.offsets.len() == outputs.len(),
+            "packed exe '{ename}': {} offsets for {} outputs",
+            self.offsets.len(),
+            outputs.len()
+        );
+        let n_scalar = outputs.iter().filter(|o| o.shape.is_empty()).count();
+        anyhow::ensure!(
+            n_scalar == self.scalars,
+            "packed exe '{ename}': scalars={} but {n_scalar} scalar outputs",
+            self.scalars
+        );
+        let mut sum = 0usize;
+        for (i, o) in outputs.iter().enumerate() {
+            anyhow::ensure!(
+                o.dtype == "f32",
+                "packed exe '{ename}': output {i} is {} — packed roots are all-f32",
+                o.dtype
+            );
+            let (off, n) = (self.offsets[i], o.elems());
+            anyhow::ensure!(
+                off + n <= self.total,
+                "packed exe '{ename}': output {i} spans [{off}, {}) past total {}",
+                off + n,
+                self.total
+            );
+            let in_prefix = off < self.scalars;
+            anyhow::ensure!(
+                in_prefix == o.shape.is_empty(),
+                "packed exe '{ename}': output {i} at offset {off} violates the \
+                 scalars-first layout (scalar prefix is [0, {}))",
+                self.scalars
+            );
+            sum += n;
+        }
+        anyhow::ensure!(
+            sum == self.total,
+            "packed exe '{ename}': outputs cover {sum} of {} elements",
+            self.total
+        );
+        Ok(())
     }
 }
 
@@ -151,33 +240,48 @@ impl Manifest {
 
     pub fn parse(data: &str) -> Result<Self> {
         let v = json::parse(data)?;
+        let version = v.req("version")?.as_usize()? as u32;
+        anyhow::ensure!(
+            version <= SUPPORTED_VERSION,
+            "manifest version {version} is newer than this runtime supports \
+             ({SUPPORTED_VERSION}) — update the runtime or rebuild with the \
+             matching `make artifacts`"
+        );
         let mut models = BTreeMap::new();
         for (name, m) in v.req("models")?.as_obj()? {
             let mut executables = BTreeMap::new();
             for (ename, e) in m.req("executables")?.as_obj()? {
-                executables.insert(
-                    ename.clone(),
-                    ExeSpec {
-                        file: e.req("file")?.as_str()?.to_string(),
-                        inputs: e
-                            .req("inputs")?
-                            .as_arr()?
-                            .iter()
-                            .map(IoSpec::from_json)
-                            .collect::<Result<_>>()?,
-                        outputs: e
-                            .req("outputs")?
-                            .as_arr()?
-                            .iter()
-                            .map(IoSpec::from_json)
-                            .collect::<Result<_>>()?,
-                        sha256: e
-                            .get("sha256")
-                            .map(|x| x.as_str().map(|s| s.to_string()))
-                            .transpose()?
-                            .unwrap_or_default(),
-                    },
-                );
+                let spec = ExeSpec {
+                    file: e.req("file")?.as_str()?.to_string(),
+                    inputs: e
+                        .req("inputs")?
+                        .as_arr()?
+                        .iter()
+                        .map(IoSpec::from_json)
+                        .collect::<Result<_>>()?,
+                    outputs: e
+                        .req("outputs")?
+                        .as_arr()?
+                        .iter()
+                        .map(IoSpec::from_json)
+                        .collect::<Result<_>>()?,
+                    sha256: e
+                        .get("sha256")
+                        .map(|x| x.as_str().map(|s| s.to_string()))
+                        .transpose()?
+                        .unwrap_or_default(),
+                    packed: e.get("packed").map(PackedSpec::from_json).transpose()?,
+                };
+                if let Some(p) = &spec.packed {
+                    anyhow::ensure!(
+                        version >= 3,
+                        "exe '{ename}' carries a packed spec but the manifest \
+                         is v{version} — packed roots are a v3 contract"
+                    );
+                    p.validate(ename, &spec.outputs)
+                        .with_context(|| format!("model '{name}'"))?;
+                }
+                executables.insert(ename.clone(), spec);
             }
             let layout = m
                 .req("layout")?
@@ -217,10 +321,7 @@ impl Manifest {
                 },
             );
         }
-        Ok(Manifest {
-            version: v.req("version")?.as_usize()? as u32,
-            models,
-        })
+        Ok(Manifest { version, models })
     }
 
     pub fn model(&self, name: &str) -> Result<&ModelEntry> {
@@ -278,5 +379,81 @@ mod tests {
         let m = Manifest::parse(SAMPLE).unwrap();
         let err = m.model("nope").unwrap_err().to_string();
         assert!(err.contains("make artifacts"));
+    }
+
+    /// A v3 sample with one packed multi-output exe (scalar + d-vector,
+    /// the `grad_loss` shape) — `packed` must parse and round out exactly.
+    fn v3_sample(packed: &str) -> String {
+        format!(
+            r#"{{
+      "version": 3,
+      "models": {{
+        "m": {{
+          "config": {{"name":"m","arch":"encoder","vocab":128,"dim":32,
+                     "layers":2,"heads":2,"seq":16,"n_classes":4,
+                     "head":"cls","batch":4,"n_pert":4,"mlp_ratio":4,
+                     "n_prefix":0,"extra_n":[]}},
+          "d": 1000,
+          "d_prefix": 0,
+          "layout": [{{"name":"tok_emb","shape":[128,32],"offset":0}}],
+          "executables": {{
+            "grad_loss": {{"file":"m/grad_loss.hlo.txt",
+                         "inputs":[{{"name":"theta","dtype":"f32","shape":[1000]}}],
+                         "outputs":[{{"name":"out0","dtype":"f32","shape":[]}},
+                                    {{"name":"out1","dtype":"f32","shape":[1000]}}],
+                         "sha256":"ab",
+                         "packed":{packed}}}
+          }},
+          "init": "m/init.bin"
+        }}
+      }}
+    }}"#
+        )
+    }
+
+    #[test]
+    fn parses_packed_spec() {
+        let m = Manifest::parse(&v3_sample(
+            r#"{"total":1001,"scalars":1,"offsets":[0,1]}"#,
+        ))
+        .unwrap();
+        let p = m.models["m"].executables["grad_loss"].packed.as_ref().unwrap();
+        assert_eq!((p.total, p.scalars), (1001, 1));
+        assert_eq!(p.offsets, vec![0, 1]);
+        assert_eq!(p.slice_exe(1, 1000), "slice_1_1000_of_1001");
+    }
+
+    #[test]
+    fn packed_spec_must_tile_exactly() {
+        // total doesn't match the covered elements
+        let err = Manifest::parse(&v3_sample(
+            r#"{"total":2000,"scalars":1,"offsets":[0,1]}"#,
+        ))
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("cover"), "{err}");
+        // vector offset inside the scalar prefix
+        let err = Manifest::parse(&v3_sample(
+            r#"{"total":1001,"scalars":2,"offsets":[0,1]}"#,
+        ))
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("scalar"), "{err}");
+    }
+
+    #[test]
+    fn packed_spec_rejected_on_pre_v3_manifest() {
+        let doc = v3_sample(r#"{"total":1001,"scalars":1,"offsets":[0,1]}"#)
+            .replace("\"version\": 3", "\"version\": 2");
+        let err = Manifest::parse(&doc).unwrap_err().to_string();
+        assert!(err.contains("v3"), "{err}");
+    }
+
+    #[test]
+    fn future_manifest_version_is_rejected() {
+        let doc = v3_sample(r#"{"total":1001,"scalars":1,"offsets":[0,1]}"#)
+            .replace("\"version\": 3", "\"version\": 99");
+        let err = Manifest::parse(&doc).unwrap_err().to_string();
+        assert!(err.contains("newer"), "{err}");
     }
 }

@@ -21,11 +21,14 @@
 //!   eval/export and checkpoints.
 //!
 //! Artifacts come from `make artifacts` (`python/compile/aot.py`),
-//! following /opt/xla-example/load_hlo. Manifest v2 lowers single-output
-//! graphs with an array root so their results can stay on device;
-//! multi-output graphs return one tuple literal which `run()` decomposes
-//! on the host. v1 (all-tuple) artifacts still execute correctly — the
-//! device-resident fast path just degrades to an explicit round trip.
+//! following /opt/xla-example/load_hlo. Manifest v3 lowers single-output
+//! graphs with an array root so their results can stay on device, and
+//! *packs* multi-output graphs into one flat f32 array root whose
+//! per-output offsets live in the manifest — `Call::run_split` slices the
+//! outputs back out on device and fetches only the O(1) scalar prefix to
+//! the host. Pre-v3 artifacts still execute correctly: v2 multi-output
+//! graphs and v1 (all-tuple) artifacts degrade to the documented
+//! host-round-tripping `run()` path.
 //!
 //! Thread ownership (`Send` audit): `PjRtClient`, compiled executables,
 //! `Literal`s and `DeviceVec`s wrap raw PJRT pointers and are **not**
@@ -47,13 +50,22 @@ use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
-pub use exec::{Call, DeviceVec, Executable};
+pub use exec::{Call, DeviceVec, Executable, SplitOut};
 pub use fault::{FaultPlan, FaultSite, FaultState};
-pub use manifest::{ExeSpec, IoSpec, Manifest, ModelConfig, ModelEntry};
+pub use manifest::{ExeSpec, IoSpec, Manifest, ModelConfig, ModelEntry, PackedSpec};
 pub use session::Session;
 use xla::{Literal, PjRtClient};
 
 use crate::telemetry::{names, Counter, Histogram, HistogramSpec, Registry, TraceSink, TraceSpan};
+
+/// Device→host transfers of at least this many f32 elements count as
+/// O(d)-class on `fzoo_host_od_fetches_total`. The bound separates the
+/// scalar-class traffic a step legitimately pays (losses: at most N+1 ≤ 33
+/// floats for the largest shipped FZOO config) from parameter-sized
+/// traffic (the smallest shipped trainable, tiny-enc-prefix, is 128) —
+/// so "zero O(d) host transfers on the step path" is a counter delta a
+/// test can assert.
+pub const OD_FETCH_MIN_ELEMS: usize = 128;
 
 /// Pre-resolved runtime-level metric handles, shared — exactly like
 /// [`FaultState`] — by the runtime, every cached [`Executable`] and every
@@ -79,10 +91,16 @@ pub struct RuntimeMetrics {
     /// Trace sink resolved from the registry, like the handles above —
     /// `None` unless one was installed before the runtime loaded.
     tracer: Option<Arc<TraceSink>>,
+    /// Registry handle for the per-call-site host-fetch counters (their
+    /// label set is open-ended, so they resolve lazily via `host_fetch`).
+    registry: Arc<Registry>,
+    /// site -> (elems counter, O(d) counter) — resolved once per site so
+    /// the hot path pays a small local lock, not the registry mutex.
+    host_fetch_sites: Mutex<HashMap<String, (Arc<Counter>, Arc<Counter>)>>,
 }
 
 impl RuntimeMetrics {
-    pub fn new(reg: &Registry, device: &str) -> Self {
+    pub fn new(reg: &Arc<Registry>, device: &str) -> Self {
         let dur = HistogramSpec::duration();
         let hist = |name: &str, help: &str| reg.histogram(name, help, &[("device", device)], dur);
         let fault = |site: FaultSite| {
@@ -103,7 +121,48 @@ impl RuntimeMetrics {
             fault_nonfinite: fault(FaultSite::NonFiniteLoss),
             device: device.to_string(),
             tracer: reg.tracer(),
+            registry: reg.clone(),
+            host_fetch_sites: Mutex::new(HashMap::new()),
         }
+    }
+
+    /// Record `elems` f32s crossing device→host at `site`
+    /// (`to_host:<origin>` / `run:<exe>` / `run_device:<exe>`). Transfers
+    /// of [`OD_FETCH_MIN_ELEMS`] or more also bump the O(d)-class counter
+    /// — with v3 artifacts no optimizer step path may do that.
+    pub fn host_fetch(&self, site: &str, elems: usize) {
+        let mut sites = self.host_fetch_sites.lock().unwrap();
+        let (el, od) = sites.entry(site.to_string()).or_insert_with(|| {
+            let labels = [("site", site), ("device", self.device.as_str())];
+            (
+                self.registry.counter(
+                    names::HOST_FETCH_ELEMS,
+                    "f32 elements copied device to host, by call-site",
+                    &labels,
+                ),
+                self.registry.counter(
+                    names::HOST_OD_FETCHES,
+                    "O(d)-class device-to-host transfers (>= 128 elements), by call-site",
+                    &labels,
+                ),
+            )
+        });
+        el.add(elems as f64);
+        if elems >= OD_FETCH_MIN_ELEMS {
+            od.inc();
+        }
+    }
+
+    /// Total O(d)-class device→host transfers across every call-site —
+    /// the invariant the v3 step paths are tested against (delta 0 over a
+    /// training step).
+    pub fn od_fetches_total(&self) -> f64 {
+        self.host_fetch_sites
+            .lock()
+            .unwrap()
+            .values()
+            .map(|(_, od)| od.value())
+            .sum()
     }
 
     /// The `device=` label value these families report under.
@@ -225,7 +284,13 @@ impl Runtime {
             .client
             .buffer_from_host_literal(None, &lit)
             .map_err(|e| anyhow::anyhow!("uploading {} f32s: {e}", data.len()))?;
-        Ok(DeviceVec::from_buffer(buf, data.len(), self.faults.clone(), self.metrics.clone()))
+        Ok(DeviceVec::from_buffer(
+            buf,
+            data.len(),
+            "upload",
+            self.faults.clone(),
+            self.metrics.clone(),
+        ))
     }
 
     /// Compile-on-demand with caching: one `PjRtLoadedExecutable` per
@@ -261,15 +326,47 @@ impl Runtime {
             .map_err(|e| anyhow::anyhow!("compiling {model}/{exe}: {e}"))?;
         compile_span.finish();
         drop(compile_trace);
-        // Root contract: manifest v2 lowers single-output graphs with an
-        // array root (device-returnable); v1 artifacts and multi-output
-        // graphs are tuple-rooted.
-        let tuple_root = self.manifest.version < 2 || spec.outputs.len() > 1;
+        // Root contract: v2+ lowers single-output graphs with an array
+        // root (device-returnable); v3 additionally packs multi-output
+        // graphs into a flat array root. Only v1 artifacts and unpacked
+        // multi-output graphs are tuple-rooted.
+        let tuple_root =
+            self.manifest.version < 2 || (spec.outputs.len() > 1 && spec.packed.is_none());
+        // Resolve the device-side splitter graphs a packed root needs
+        // (depth-1 recursion: slicers are plain single-output graphs).
+        let split = match (&spec.packed, tuple_root) {
+            (Some(p), false) => {
+                let scalar_slice = if p.scalars > 0 && p.scalars < p.total {
+                    Some(self.executable(model, &p.slice_exe(0, p.scalars)).with_context(
+                        || format!("{model}/{exe}: packed scalar-prefix splitter"),
+                    )?)
+                } else {
+                    None
+                };
+                let mut vector_slices = Vec::new();
+                for (i, o) in spec.outputs.iter().enumerate() {
+                    if !o.shape.is_empty() {
+                        let s = self
+                            .executable(model, &p.slice_exe(p.offsets[i], o.elems()))
+                            .with_context(|| {
+                                format!("{model}/{exe}: packed splitter for output {i}")
+                            })?;
+                        vector_slices.push((i, s));
+                    }
+                }
+                Some(exec::PackedSplit {
+                    scalar_slice,
+                    vector_slices,
+                })
+            }
+            _ => None,
+        };
         let wrapped = Arc::new(Executable {
             name: format!("{model}/{exe}"),
             exe: exe_compiled,
             spec,
             tuple_root,
+            split,
             faults: self.faults.clone(),
             metrics: self.metrics.clone(),
         });

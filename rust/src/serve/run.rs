@@ -115,7 +115,7 @@ fn build_parts(rt: &Runtime, spec: &RunSpec, ck: Option<&Checkpoint>) -> Result<
     if let Some(k) = spec.k_shot {
         task = task.with_k_shot(k);
     }
-    let mut optimizer = spec.optimizer.build(&session, spec.run_seed);
+    let mut optimizer = spec.optimizer.build(&session, spec.run_seed)?;
     let mut batcher = Batcher::new(task, &session.entry.config, spec.run_seed);
     let mut lp = TrainLoop::new(
         optimizer.name(),

@@ -78,6 +78,7 @@ pub use trace::{chrome_trace_json, StepScope, TraceEvent, TraceSink, TraceSpan};
 /// | `phase=`    | `fzoo_step_phase_seconds`            | `batch` / `optim` / `eval` |
 /// | `optimizer=`| probe families                       | optimizer display name (`FZOO`, `FZOO-R(m)`, ...) |
 /// | `site=`     | `fzoo_faults_injected_total`         | fault site (`execute`, `to_host`, `checkpoint_write`, `nonfinite_loss`) |
+/// | `site=`     | host-fetch families                  | the call-site that pulled device data to the host: `to_host:<origin>` (a `DeviceVec` sync, e.g. `to_host:trainable`), `run:<model>/<exe>` (a `run()` literal fetch), `run_device:<model>/<exe>` (the v1 tuple fallback) |
 /// | `le=`       | histogram `_bucket` expansions only  | Prometheus cumulative bucket bound |
 pub mod names {
     // runtime phases (label: device — single PJRT device today, so the
@@ -89,6 +90,13 @@ pub mod names {
     pub const TO_HOST_SECONDS: &str = "fzoo_to_host_seconds";
     // labels: site, device
     pub const FAULTS_INJECTED: &str = "fzoo_faults_injected_total";
+    // device->host traffic accounting (labels: site, device). Elements
+    // counts every f32 that crossed to the host; the O(d) counter fires
+    // only for transfers of >= OD_FETCH_MIN_ELEMS elements, so the v3
+    // zero-O(d)-step-path claim is a testable invariant (a scalar loss
+    // fetch never trips it, a parameter-sized fetch always does).
+    pub const HOST_FETCH_ELEMS: &str = "fzoo_host_fetch_elems_total";
+    pub const HOST_OD_FETCHES: &str = "fzoo_host_od_fetches_total";
 
     // per-run training (label: run)
     pub const STEPS: &str = "fzoo_steps_total";

@@ -66,6 +66,7 @@ pub fn run_one(rt: &Runtime, spec: &RunSpec) -> Result<History> {
         schedule: Default::default(),
         run_seed: spec.run_seed,
         diverge_ema_factor: None,
+        run_name: None,
         verbose: false,
     };
     let mut trainer = Trainer::with_opts(
@@ -74,7 +75,7 @@ pub fn run_one(rt: &Runtime, spec: &RunSpec) -> Result<History> {
         task,
         spec.optimizer.clone(),
         opts,
-    );
+    )?;
     trainer.train(spec.steps)
 }
 

@@ -12,7 +12,7 @@ use fzoo::optim::{Fzoo, FzooMode, Objective, Optimizer};
 use fzoo::runtime::{lit_i32, scalar_f32, to_vec_f32, Runtime, Session};
 
 fn runtime() -> Runtime {
-    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../artifacts");
     Runtime::load(dir).expect("run `make artifacts` before cargo test")
 }
 
@@ -238,6 +238,181 @@ fn update_graphs_are_device_resident_on_v2_artifacts() {
     }
     // multi-output graphs are not device-returnable by contract
     assert!(!rt.executable("tiny-enc", "mezo_losses").unwrap().is_device_resident());
+}
+
+// ---------------------------------------------------------------------------
+// v3 packed roots: run_split
+// ---------------------------------------------------------------------------
+
+/// run_split on a scalar+vector packed root (grad_loss): only the loss
+/// scalar crosses the host, the gradient arrives as a `DeviceVec`, and
+/// both agree exactly with the host-fetching run() on the same binds.
+#[test]
+fn run_split_matches_run_on_grad_loss() {
+    let rt = runtime();
+    let exe = rt.executable("tiny-enc", "grad_loss").unwrap();
+    if exe.spec.packed.is_none() {
+        return; // pre-v3 artifact set
+    }
+    let s = Session::open(&rt, "tiny-enc").unwrap();
+    let batch = train_batch(&s, TaskKind::Sst2);
+    let (ids, labels, mask) = batch.literals().unwrap();
+    let bind = || {
+        exe.call()
+            .device("theta", s.trainable_dev())
+            .unwrap()
+            .literal("ids", ids)
+            .unwrap()
+            .literal("labels", labels)
+            .unwrap()
+            .literal("mask", mask)
+            .unwrap()
+    };
+    let split = bind().run_split().unwrap();
+    assert_eq!(split.scalars.len(), 1, "grad_loss has one scalar output");
+    assert_eq!(split.device.len(), 1, "grad_loss has one vector output");
+    assert_eq!(split.device[0].len(), s.entry.d);
+    let outs = bind().run().unwrap();
+    assert_eq!(split.scalars[0], scalar_f32(&outs[0]).unwrap());
+    assert_eq!(
+        split.device[0].to_host().unwrap(),
+        to_vec_f32(&outs[1]).unwrap(),
+        "device-sliced gradient must equal the host-split one bit-for-bit"
+    );
+}
+
+/// An all-scalar packed root (mezo_losses) needs no slicing at all:
+/// run_split returns the scalars and no device vectors.
+#[test]
+fn run_split_on_scalar_only_root() {
+    let rt = runtime();
+    let exe = rt.executable("tiny-enc", "mezo_losses").unwrap();
+    if exe.spec.packed.is_none() {
+        return; // pre-v3 artifact set
+    }
+    let s = Session::open(&rt, "tiny-enc").unwrap();
+    let batch = train_batch(&s, TaskKind::Sst2);
+    let (ids, labels, mask) = batch.literals().unwrap();
+    let bind = || {
+        exe.call()
+            .device("theta", s.trainable_dev())
+            .unwrap()
+            .literal("ids", ids)
+            .unwrap()
+            .literal("labels", labels)
+            .unwrap()
+            .literal("mask", mask)
+            .unwrap()
+            .scalar_u32("seed", 5)
+            .unwrap()
+            .scalar_f32("eps", 1e-3)
+            .unwrap()
+    };
+    let split = bind().run_split().unwrap();
+    assert_eq!(split.scalars.len(), 2, "mezo_losses is (l+, l-)");
+    assert!(split.device.is_empty());
+    let outs = bind().run().unwrap();
+    assert_eq!(split.scalars[0], scalar_f32(&outs[0]).unwrap());
+    assert_eq!(split.scalars[1], scalar_f32(&outs[1]).unwrap());
+}
+
+/// The acceptance criterion behind the whole PR: splitting a fused
+/// multi-vector update on device performs ZERO O(d) host fetches — the
+/// `fzoo_host_od_fetches_total` counter the CI smoke also asserts on.
+/// An explicit to_host afterwards IS counted (positive control).
+#[test]
+fn run_split_performs_no_od_host_fetch() {
+    let rt = runtime();
+    let exe = rt.executable("tiny-enc", "adam_zo_update").unwrap();
+    if exe.spec.packed.is_none() {
+        return; // pre-v3 artifact set
+    }
+    let s = Session::open(&rt, "tiny-enc").unwrap();
+    let d = s.entry.d;
+    let m = rt.upload_f32(&vec![0.0; d]).unwrap();
+    let v = rt.upload_f32(&vec![0.0; d]).unwrap();
+    let before = rt.metrics().od_fetches_total();
+    let out = exe
+        .call()
+        .device("theta", s.trainable_dev())
+        .unwrap()
+        .device("m", &m)
+        .unwrap()
+        .device("v", &v)
+        .unwrap()
+        .scalar_u32("seed", 3)
+        .unwrap()
+        .scalar_f32("coeff", 0.1)
+        .unwrap()
+        .scalar_f32("lr", 1e-3)
+        .unwrap()
+        .scalar_f32("beta1", 0.9)
+        .unwrap()
+        .scalar_f32("beta2", 0.999)
+        .unwrap()
+        .scalar_f32("eps_adam", 1e-8)
+        .unwrap()
+        .scalar_f32("t", 1.0)
+        .unwrap()
+        .run_split()
+        .unwrap();
+    assert_eq!(out.device.len(), 3, "(theta', m', v') all stay on device");
+    assert!(out.scalars.is_empty());
+    assert_eq!(
+        rt.metrics().od_fetches_total(),
+        before,
+        "run_split must not move O(d) data across the host boundary"
+    );
+    // positive control: pulling a vector down is metered
+    assert_eq!(out.device[0].to_host().unwrap().len(), d);
+    assert!(
+        rt.metrics().od_fetches_total() > before,
+        "explicit to_host must be counted as an O(d) fetch"
+    );
+}
+
+/// run_split goes through the same bind validation as run(): unbound
+/// inputs are reported by name before anything executes.
+#[test]
+fn run_split_reports_unbound_inputs() {
+    let rt = runtime();
+    let exe = rt.executable("tiny-enc", "grad_loss").unwrap();
+    if exe.spec.packed.is_none() {
+        return; // pre-v3 artifact set
+    }
+    let s = Session::open(&rt, "tiny-enc").unwrap();
+    let err = exe
+        .call()
+        .device("theta", s.trainable_dev())
+        .unwrap()
+        .run_split()
+        .err()
+        .expect("unbound inputs must fail");
+    let msg = format!("{err}");
+    assert!(msg.contains("unbound") && msg.contains("ids"), "{msg}");
+}
+
+/// run_split is a v3-only contract: a graph without a packed root (any
+/// single-output graph) is refused with a pointer at the rebuild.
+#[test]
+fn run_split_refuses_non_packed_graphs() {
+    let rt = runtime();
+    let s = Session::open(&rt, "tiny-enc").unwrap();
+    let exe = rt.executable("tiny-enc", "gauss_update").unwrap();
+    assert!(exe.spec.packed.is_none(), "single-output graphs are never packed");
+    let err = exe
+        .call()
+        .device("theta", s.trainable_dev())
+        .unwrap()
+        .scalar_u32("seed", 1)
+        .unwrap()
+        .scalar_f32("coeff", 0.1)
+        .unwrap()
+        .run_split()
+        .err()
+        .expect("run_split without a packed root must be refused");
+    let msg = format!("{err}");
+    assert!(msg.contains("packed") && msg.contains("v3"), "{msg}");
 }
 
 /// End-to-end: a probe + update step via the binding API equals the same

@@ -10,7 +10,7 @@ use fzoo::runtime::{scalar_f32, to_vec_f32, Runtime, Session};
 use fzoo::zorng::{rademacher_vec, stream_seed};
 
 fn runtime() -> Runtime {
-    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../artifacts");
     Runtime::load(dir).expect("run `make artifacts` before cargo test")
 }
 

@@ -13,7 +13,8 @@ use fzoo::runtime::{to_vec_f32, Runtime, Session};
 use fzoo::zorng::{rademacher_vec, stream_seed};
 
 fn runtime() -> Runtime {
-    Runtime::load("artifacts").expect("run `make artifacts` first")
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../artifacts");
+    Runtime::load(dir).expect("run `make artifacts` first")
 }
 
 /// Probe the fused losses executable directly (same bindings the
@@ -253,7 +254,8 @@ fn training_is_bit_replayable() {
             task,
             OptimizerKind::fzoo(1e-3, 1e-3),
             opts,
-        );
+        )
+        .unwrap();
         let h = tr.train(6).unwrap();
         drop(tr);
         (
@@ -284,7 +286,7 @@ fn forward_accounting_matches_family() {
             eval_every: 0,
             ..Default::default()
         };
-        let mut tr = Trainer::with_opts(&rt, &mut s, task, kind, opts);
+        let mut tr = Trainer::with_opts(&rt, &mut s, task, kind, opts).unwrap();
         let h = tr.train(4).unwrap();
         let total = h.records.last().unwrap().forwards;
         assert_eq!(total, per * 4.0, "forwards accounting for {per}");
@@ -297,7 +299,7 @@ fn forward_accounting_matches_family() {
         eval_every: 0,
         ..Default::default()
     };
-    let mut tr = Trainer::with_opts(&rt, &mut s, task, OptimizerKind::adam(1e-3), opts);
+    let mut tr = Trainer::with_opts(&rt, &mut s, task, OptimizerKind::adam(1e-3), opts).unwrap();
     let h = tr.train(4).unwrap();
     assert_eq!(h.records.last().unwrap().forward_equiv, 16.0);
 }
@@ -500,7 +502,7 @@ fn fzoo_r_halves_probe_forwards_when_supported() {
         n: None,
         objective: Objective::Ce,
     };
-    let opt = kind.build(&s, 0);
+    let opt = kind.build(&s, 0).unwrap();
     assert_eq!(
         opt.forwards_per_step(),
         (n_pert / 2 + 1) as f64,
@@ -508,6 +510,83 @@ fn fzoo_r_halves_probe_forwards_when_supported() {
     );
     // tiny-enc has no n2 graphs: falls back to full N
     let st = Session::open(&rt, "tiny-enc").unwrap();
-    let opt_t = kind.build(&st, 0);
+    let opt_t = kind.build(&st, 0).unwrap();
     assert_eq!(opt_t.forwards_per_step(), (st.entry.config.n_pert + 1) as f64);
+}
+
+/// FZOO-R's sigma estimate spans two steps (Algorithm 2): a run resumed
+/// from a checkpoint must carry `prev_losses` across the break, so its
+/// first post-resume sigma is bit-identical to the unbroken run's.
+#[test]
+fn fzoo_r_prev_losses_survive_checkpoint_roundtrip() {
+    let rt = runtime();
+    let (eta, eps, run_seed) = (1e-3f32, 1e-3f32, 7u64);
+    let n = Session::open(&rt, "tiny-enc").unwrap().entry.config.n_pert;
+
+    // unbroken run: step 0, checkpoint the optimizer, step 1
+    let mut s1 = Session::open(&rt, "tiny-enc").unwrap();
+    let task = TaskKind::Sst2.instantiate(s1.model_config(), 0).unwrap();
+    let mut b1 = Batcher::new(task, &s1.entry.config, 0);
+    let mut cont = Fzoo::new(eta, eps, n, FzooMode::Reuse, Objective::Ce, run_seed);
+    let batch = b1.next_train();
+    cont.step(&rt, &mut s1, &batch, 0).unwrap();
+    let state = cont.export_state().unwrap();
+    assert!(
+        state.vectors.iter().any(|(k, v)| k == "prev_losses" && v.len() == n),
+        "checkpoint must carry the N previous probe losses"
+    );
+    let batch = b1.next_train();
+    let unbroken = cont.step(&rt, &mut s1, &batch, 1).unwrap();
+
+    // resumed run: identical step 0 on a fresh session, then a *fresh*
+    // optimizer importing the checkpoint takes step 1
+    let mut s2 = Session::open(&rt, "tiny-enc").unwrap();
+    let task = TaskKind::Sst2.instantiate(s2.model_config(), 0).unwrap();
+    let mut b2 = Batcher::new(task, &s2.entry.config, 0);
+    let mut warm = Fzoo::new(eta, eps, n, FzooMode::Reuse, Objective::Ce, run_seed);
+    let batch = b2.next_train();
+    warm.step(&rt, &mut s2, &batch, 0).unwrap();
+    let mut resumed = Fzoo::new(eta, eps, n, FzooMode::Reuse, Objective::Ce, run_seed);
+    resumed.import_state(&rt, state).unwrap();
+    let batch = b2.next_train();
+    let out = resumed.step(&rt, &mut s2, &batch, 1).unwrap();
+
+    assert_eq!(
+        out.sigma.unwrap().to_bits(),
+        unbroken.sigma.unwrap().to_bits(),
+        "first resumed sigma must be bit-identical to the unbroken run"
+    );
+    assert_eq!(
+        s2.trainable_host().unwrap(),
+        s1.trainable_host().unwrap(),
+        "resumed parameters must match the unbroken run"
+    );
+}
+
+/// Algorithm 3 (sequential FZOO) needs the `rad_perturb` graph, which
+/// prefix artifacts do not ship. The old code hardcoded a "theta" bind
+/// and failed mid-step; now `OptimizerKind::build` refuses up front with
+/// a message naming the constraint.
+#[test]
+fn fzoo_seq_is_refused_on_prefix_models_at_build() {
+    let rt = runtime();
+    if rt.manifest.model("tiny-enc-prefix").is_err() {
+        return; // reduced artifact set
+    }
+    let s = Session::open(&rt, "tiny-enc-prefix").unwrap();
+    let kind = fzoo::optim::OptimizerKind::Fzoo {
+        eta: 1e-3,
+        eps: 1e-3,
+        mode: fzoo::optim::FzooModeCfg::Sequential,
+        n: None,
+        objective: Objective::Ce,
+    };
+    let err = kind.build(&s, 0).err().expect("fzoo-seq on prefix must be refused");
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("FT-only") && msg.contains("prefix"),
+        "refusal must explain the FT-only constraint: {msg}"
+    );
+    // parallel FZOO on the same session still builds
+    assert!(OptimizerKind::fzoo(1e-3, 1e-3).build(&s, 0).is_ok());
 }

@@ -12,7 +12,7 @@ use fzoo::runtime::FaultPlan;
 use fzoo::serve::{list_checkpoints, Event, RunManager, RunPhase, RunSpec};
 
 fn artifacts() -> PathBuf {
-    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../artifacts")
 }
 
 fn tmp_dir(tag: &str) -> PathBuf {

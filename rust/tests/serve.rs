@@ -27,7 +27,7 @@ fn scrape(addr: std::net::SocketAddr) -> String {
 }
 
 fn artifacts() -> PathBuf {
-    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../artifacts")
 }
 
 fn spec(model: &str, task: &str, kind: OptimizerKind, steps: u64, seed: u64) -> RunSpec {
@@ -47,7 +47,7 @@ fn sequential(model: &str, task: TaskKind, kind: OptimizerKind, steps: u64, seed
         run_seed: seed,
         ..Default::default()
     };
-    let mut tr = Trainer::with_opts(&rt, &mut session, t, kind, opts);
+    let mut tr = Trainer::with_opts(&rt, &mut session, t, kind, opts).unwrap();
     tr.train(steps).unwrap()
 }
 

@@ -14,7 +14,7 @@ use fzoo::serve::{RunManager, RunSpec};
 use fzoo::telemetry::{names, HistogramSpec, MetricsServer, Registry};
 
 fn artifacts() -> PathBuf {
-    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../artifacts")
 }
 
 /// Minimal HTTP GET against the metrics listener; returns the body.

@@ -15,7 +15,7 @@ use fzoo::telemetry::{Registry, TraceSink};
 use fzoo::util::json;
 
 fn artifacts() -> PathBuf {
-    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../artifacts")
 }
 
 #[test]

@@ -7,7 +7,7 @@ use fzoo::optim::{FzooModeCfg, Objective, OptimizerKind, ZoFlavorCfg};
 use fzoo::runtime::{Runtime, Session};
 
 fn runtime() -> Runtime {
-    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../artifacts");
     Runtime::load(dir).expect("run `make artifacts` before cargo test")
 }
 
@@ -27,7 +27,7 @@ fn train(
         run_seed: 1,
         ..Default::default()
     };
-    let mut tr = Trainer::with_opts(rt, &mut session, t, kind, opts);
+    let mut tr = Trainer::with_opts(rt, &mut session, t, kind, opts).unwrap();
     tr.train(steps).unwrap()
 }
 
@@ -189,7 +189,8 @@ fn prefix_tuning_trains_prefix_only() {
         t,
         OptimizerKind::fzoo(1e-2, 1e-2),
         opts,
-    );
+    )
+    .unwrap();
     tr.train(5).unwrap();
     drop(tr);
     assert_eq!(
@@ -219,7 +220,8 @@ fn eval_accuracy_above_chance_after_zo_training_from_pretrained() {
         run_seed: 3,
         ..Default::default()
     };
-    let mut tr = Trainer::with_opts(&rt, &mut session, t, OptimizerKind::fzoo(1e-2, 1e-3), opts);
+    let mut tr = Trainer::with_opts(&rt, &mut session, t, OptimizerKind::fzoo(1e-2, 1e-3), opts)
+        .unwrap();
     let h = tr.train(1600).unwrap();
     let acc = h.final_accuracy().unwrap();
     assert!(acc > 0.55, "sst2 accuracy after ZO fine-tuning: {acc}");
@@ -236,7 +238,8 @@ fn schedule_hooks_apply() {
         eval_batches: 0,
         ..Default::default()
     };
-    let mut tr = Trainer::with_opts(&rt, &mut session, t, OptimizerKind::fzoo(1e-3, 1e-3), opts);
+    let mut tr = Trainer::with_opts(&rt, &mut session, t, OptimizerKind::fzoo(1e-3, 1e-3), opts)
+        .unwrap();
     let h = tr.train(5).unwrap();
     assert_eq!(h.steps_run, 5);
 }

@@ -26,8 +26,10 @@ cleanup() {
 }
 trap cleanup EXIT
 
-# One long-running tiny job: the step budget is far larger than the poll
-# window, so the scrape below always lands mid-training.
+# Two long-running tiny jobs: the step budgets are far larger than the
+# poll window, so the scrape below always lands mid-training. The
+# first-order Adam job exercises the v3 device-resident gradient path, so
+# the zero-O(d)-fetch assertion below covers both optimizer classes.
 cat > "$work/jobs.json" <<EOF
 {
   "artifacts": "artifacts",
@@ -35,7 +37,10 @@ cat > "$work/jobs.json" <<EOF
   "jobs": [
     {"name": "smoke", "model": "tiny-enc", "task": "sst2", "steps": 100000,
      "eval_batches": 0,
-     "optimizer": {"kind": "fzoo", "lr": 1e-3, "eps": 1e-3}}
+     "optimizer": {"kind": "fzoo", "lr": 1e-3, "eps": 1e-3}},
+    {"name": "smoke-adam", "model": "tiny-enc", "task": "sst2", "steps": 100000,
+     "eval_batches": 0,
+     "optimizer": {"kind": "adam", "lr": 1e-3}}
   ]
 }
 EOF
@@ -48,7 +53,8 @@ serve_pid=$!
 body=""
 for _ in $(seq 1 120); do
     if body="$(curl -sf "http://127.0.0.1:$PORT/metrics" 2>/dev/null)" &&
-        grep -q '^fzoo_forward_passes_total{run="smoke"}' <<<"$body"; then
+        grep -q '^fzoo_forward_passes_total{run="smoke"}' <<<"$body" &&
+        grep -q '^fzoo_forward_passes_total{run="smoke-adam"}' <<<"$body"; then
         break
     fi
     if ! kill -0 "$serve_pid" 2>/dev/null; then
@@ -75,4 +81,16 @@ if ! grep -q '^fzoo_step_duration_seconds_bucket{' <<<"$body"; then
     exit 1
 fi
 
-echo "metrics-smoke: OK — $line"
+# v3 acceptance gate: mid-training (no eval, no checkpoint, no export in
+# flight) the step paths must move ZERO O(d) vectors across the host
+# boundary. Every device->host fetch of >= 128 elements increments
+# fzoo_host_od_fetches_total, so any positive series here is a regression
+# back to tuple-fetching.
+if grep '^fzoo_host_od_fetches_total{' <<<"$body" |
+    awk '{ if ($NF > 0) found = 1 } END { exit !found }'; then
+    echo "metrics-smoke: O(d) host fetches observed on the step path:" >&2
+    grep '^fzoo_host_od_fetches_total{' <<<"$body" >&2
+    exit 1
+fi
+
+echo "metrics-smoke: OK — $line (and zero O(d) host fetches)"
