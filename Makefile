@@ -1,6 +1,6 @@
 PY ?= python3
 
-.PHONY: artifacts check chaos ci metrics-smoke pytest trace-smoke
+.PHONY: artifacts check chaos ci gateway-smoke metrics-smoke pytest trace-smoke
 
 # AOT-compile the model graphs + manifest (python/compile/aot.py).
 # Incremental; use FORCE=1 to rebuild everything.
@@ -36,6 +36,14 @@ metrics-smoke:
 # Needs target/release/fzoo and the tiny artifacts.
 trace-smoke:
 	./scripts/trace_smoke.sh
+
+# Online-inference smoke: `fzoo gateway` with a normal and a
+# zero-capacity lane — concurrent classifies must answer 200 with labels,
+# the closed lane must 503 with Retry-After, and the fzoo_gateway_*
+# metric families must be live on /metrics.
+# Needs target/release/fzoo and the tiny artifacts.
+gateway-smoke:
+	./scripts/gateway_smoke.sh
 
 # Build-time (Python) test suite.
 pytest:

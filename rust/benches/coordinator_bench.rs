@@ -3,10 +3,12 @@
 //! coordinator overhead < 5% of executable time (see DESIGN.md §Perf).
 
 use fzoo::data::{Batcher, TaskKind};
+use fzoo::gateway::{pad_example, pad_micro_batch};
 use fzoo::optim::sample_std;
 use fzoo::runtime::ModelConfig;
 use fzoo::telemetry::{HistogramSpec, Registry};
 use fzoo::util::bench::{black_box, Bench};
+use fzoo::util::json::{self, Value};
 use fzoo::zorng::{rademacher_sign, SplitMix64};
 
 fn cfg() -> ModelConfig {
@@ -115,4 +117,67 @@ fn main() {
             black_box(reg.counter("bench_ops_total", "", &[("run", "bench")]).value());
         }
     });
+
+    // Gateway batch-formation cost: per-request padding plus packing a
+    // micro-batch into the fixed [B*T] buffers, at representative queue
+    // depths. This is the entire host-side overhead a classify request
+    // adds on top of the eval_logits forward — it must stay microseconds
+    // against millisecond forwards.
+    let (gw_b, gw_t) = (64usize, 64usize);
+    let raw: Vec<(Vec<i32>, Vec<f32>)> = (0..gw_b)
+        .map(|r| {
+            let len = 8 + (r % (gw_t - 8));
+            let ids: Vec<i32> = (0..len as i32).map(|i| 2 + (i * 7 + r as i32) % 1000).collect();
+            pad_example(&ids, None, gw_t).unwrap()
+        })
+        .collect();
+    let mut gateway_names = Vec::new();
+    for depth in [1usize, 8, 64] {
+        let name = format!("gateway_pad_batch_b64_depth{depth}");
+        let rows: Vec<(&[i32], &[f32])> = raw[..depth]
+            .iter()
+            .map(|(i, m)| (i.as_slice(), m.as_slice()))
+            .collect();
+        b.run(&name, || {
+            black_box(pad_micro_batch(&rows, gw_b, gw_t).unwrap());
+        });
+        gateway_names.push(name);
+    }
+    b.run("gateway_pad_example_64", || {
+        for r in 0..gw_b {
+            let len = 8 + (r % (gw_t - 8));
+            let ids: Vec<i32> = (0..len as i32).collect();
+            black_box(pad_example(&ids, None, gw_t).unwrap());
+        }
+    });
+    gateway_names.push("gateway_pad_example_64".into());
+
+    // Record the gateway series next to the step-bench baselines: merge
+    // into BENCH_step.json when it exists, else start a fresh doc.
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..");
+    let out = root.join("BENCH_step.json");
+    let gateway_results: Vec<Value> = b
+        .results()
+        .iter()
+        .filter(|r| gateway_names.iter().any(|n| n == &r.name))
+        .map(|r| {
+            Value::obj(vec![
+                ("name", Value::str(r.name.as_str())),
+                ("mean_ms", Value::num(r.mean() * 1e3)),
+                ("median_ms", Value::num(r.median() * 1e3)),
+                ("stddev_ms", Value::num(r.stddev() * 1e3)),
+            ])
+        })
+        .collect();
+    let mut doc = std::fs::read_to_string(&out)
+        .ok()
+        .and_then(|text| json::parse(&text).ok())
+        .and_then(|v| v.as_obj().ok().cloned())
+        .unwrap_or_default();
+    doc.insert("gateway".into(), Value::Arr(gateway_results));
+    doc.entry("bench".into()).or_insert_with(|| Value::str("coordinator_bench"));
+    match std::fs::write(&out, Value::Obj(doc).to_string()) {
+        Ok(()) => println!("gateway baselines merged -> {}", out.display()),
+        Err(e) => eprintln!("could not record {}: {e}", out.display()),
+    }
 }

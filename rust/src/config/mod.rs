@@ -129,7 +129,11 @@ impl TrainConfig {
 /// address, the per-run JSONL flush period, an optional Prometheus
 /// textfile rewritten each tick, and the step-level trace directory; see
 /// the README's "Observability" section) — the matching `--metrics-*` /
-/// `--trace-dir` CLI flags win over the file.
+/// `--trace-dir` CLI flags win over the file. `gateway_addr` (or the
+/// `--gateway-addr` flag, which wins) additionally serves every run's
+/// live parameters over the online-inference HTTP API while it trains;
+/// `max_batch` / `max_wait_us` / `queue_cap` tune its serving lanes
+/// (see the README's "Online inference" section).
 #[derive(Debug, Clone)]
 pub struct JobFile {
     pub artifacts: String,
@@ -142,6 +146,12 @@ pub struct JobFile {
     /// Directory for Chrome-trace timelines and flight-recorder dumps
     /// (None = tracing off).
     pub trace_dir: Option<String>,
+    /// Bind address for the online-inference gateway over the live runs
+    /// (None = off).
+    pub gateway_addr: Option<String>,
+    /// Lane config applied to every run the gateway serves
+    /// (`max_batch` / `max_wait_us` / `queue_cap` file-level keys).
+    pub gateway: crate::gateway::GatewayConfig,
     pub jobs: Vec<crate::serve::RunSpec>,
 }
 
@@ -222,7 +232,86 @@ impl JobFile {
                 .unwrap_or(5),
             metrics_textfile: opt_str(&v, "metrics_textfile")?,
             trace_dir: opt_str(&v, "trace_dir")?,
+            gateway_addr: opt_str(&v, "gateway_addr")?,
+            gateway: crate::gateway::GatewayConfig::default().apply_json(&v)?,
             jobs,
+        })
+    }
+}
+
+/// `fzoo gateway` job file: inference-only models served by a
+/// [`gateway::Gateway`](crate::gateway::Gateway) with no training runs
+/// attached.
+///
+/// ```json
+/// {
+///   "artifacts": "artifacts",
+///   "gateway_addr": "127.0.0.1:8080",
+///   "max_batch": 8,
+///   "max_wait_us": 2000,
+///   "queue_cap": 64,
+///   "models": [
+///     {"name": "sst2-prod", "model": "tiny-enc", "task": "sst2",
+///      "checkpoint": "runs/ckpt/a.step100.ckpt.json"},
+///     {"model": "tiny-dec", "task": "boolq", "pretrained": true,
+///      "max_wait_us": 500}
+///   ]
+/// }
+/// ```
+///
+/// File-level `max_batch` / `max_wait_us` / `queue_cap` are the lane
+/// defaults; the same keys on a model entry override them for that
+/// lane. Serving names (`name`, defaulting to the model name) must be
+/// unique — they key the classify routing and the `model=` metric
+/// label.
+#[derive(Debug, Clone)]
+pub struct GatewayFile {
+    pub artifacts: String,
+    /// Bind address; `--gateway-addr` wins over the file. Defaults to
+    /// `127.0.0.1:0` (kernel-chosen port, printed on startup).
+    pub gateway_addr: Option<String>,
+    /// File-level lane defaults.
+    pub defaults: crate::gateway::GatewayConfig,
+    /// Each model with its resolved (defaults + overrides) lane config.
+    pub models: Vec<(crate::serve::ModelSpec, crate::gateway::GatewayConfig)>,
+}
+
+impl GatewayFile {
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::from_json_str(&text)
+            .with_context(|| format!("parsing {}", path.as_ref().display()))
+    }
+
+    pub fn from_json_str(text: &str) -> Result<Self> {
+        let v = json::parse(text)?;
+        let defaults = crate::gateway::GatewayConfig::default().apply_json(&v)?;
+        let mut models = Vec::new();
+        for (i, m) in v.req("models")?.as_arr()?.iter().enumerate() {
+            let spec = crate::serve::ModelSpec::from_json(m)
+                .with_context(|| format!("models[{i}]"))?;
+            let cfg = defaults
+                .apply_json(m)
+                .with_context(|| format!("models[{i}]"))?;
+            models.push((spec, cfg));
+        }
+        anyhow::ensure!(!models.is_empty(), "gateway file lists no models");
+        // Serving names route classify requests and label the
+        // fzoo_gateway_* metrics — duplicates would be unreachable.
+        let mut names: Vec<String> = models.iter().map(|(s, _)| s.display_name()).collect();
+        names.sort();
+        if let Some(dup) = names.windows(2).find(|w| w[0] == w[1]) {
+            bail!(
+                "duplicate serving name '{}' — give the models distinct 'name's",
+                dup[0]
+            );
+        }
+        Ok(Self {
+            artifacts: opt_str(&v, "artifacts")?.unwrap_or_else(|| "artifacts".into()),
+            gateway_addr: opt_str(&v, "gateway_addr")?,
+            defaults,
+            models,
         })
     }
 }
@@ -347,6 +436,68 @@ mod tests {
         assert_eq!(f.jobs[1].max_restarts, 0);
         assert_eq!(f.jobs[1].restart_backoff, 3);
         assert_eq!(f.jobs[1].keep_last, 1);
+    }
+
+    #[test]
+    fn job_file_gateway_keys() {
+        let f = JobFile::from_json_str(
+            r#"{"gateway_addr":"127.0.0.1:0","max_batch":4,"queue_cap":8,
+                "jobs":[{"model":"tiny-enc","task":"sst2",
+                         "optimizer":{"kind":"fzoo","lr":1e-3,"eps":1e-3},
+                         "steps":10}]}"#,
+        )
+        .unwrap();
+        assert_eq!(f.gateway_addr.as_deref(), Some("127.0.0.1:0"));
+        assert_eq!(f.gateway.max_batch, 4);
+        assert_eq!(f.gateway.queue_cap, 8);
+        assert_eq!(
+            f.gateway.max_wait_us,
+            crate::gateway::GatewayConfig::default().max_wait_us,
+            "unset keys keep defaults"
+        );
+    }
+
+    #[test]
+    fn gateway_file_defaults_and_overrides() {
+        let f = GatewayFile::from_json_str(
+            r#"{"artifacts":"arts","gateway_addr":"127.0.0.1:8080",
+                "max_batch":8,"max_wait_us":900,"queue_cap":32,
+                "models":[
+                  {"name":"prod","model":"tiny-enc","task":"sst2",
+                   "checkpoint":"ck/a.ckpt.json","max_wait_us":500},
+                  {"model":"tiny-dec","task":"boolq","pretrained":true,
+                   "queue_cap":0}
+                ]}"#,
+        )
+        .unwrap();
+        assert_eq!(f.artifacts, "arts");
+        assert_eq!(f.gateway_addr.as_deref(), Some("127.0.0.1:8080"));
+        assert_eq!(f.defaults.max_batch, 8);
+        assert_eq!(f.models.len(), 2);
+        let (spec, cfg) = &f.models[0];
+        assert_eq!(spec.display_name(), "prod");
+        assert_eq!(spec.checkpoint.as_deref(), Some("ck/a.ckpt.json"));
+        // per-model key wins, untouched keys inherit the file level
+        assert_eq!(cfg.max_wait_us, 500);
+        assert_eq!(cfg.max_batch, 8);
+        assert_eq!(cfg.queue_cap, 32);
+        let (spec, cfg) = &f.models[1];
+        assert_eq!(spec.display_name(), "tiny-dec");
+        assert!(spec.pretrained);
+        assert_eq!(cfg.queue_cap, 0, "explicit 0 override sticks");
+        assert_eq!(cfg.max_wait_us, 900);
+    }
+
+    #[test]
+    fn gateway_file_empty_or_duplicate_errors() {
+        assert!(GatewayFile::from_json_str(r#"{"models":[]}"#).is_err());
+        assert!(GatewayFile::from_json_str(r#"{"models":[{"model":"m"}]}"#).is_err());
+        let dup = r#"{"models":[
+            {"model":"tiny-enc","task":"sst2"},
+            {"name":"tiny-enc","model":"tiny-dec","task":"boolq"}
+        ]}"#;
+        let err = GatewayFile::from_json_str(dup).unwrap_err().to_string();
+        assert!(err.contains("duplicate serving name"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,226 @@
+//! Admission control: a bounded MPSC queue with deadline-batch
+//! collection.
+//!
+//! The producer side is HTTP connection threads admitting one example
+//! each; the consumer is a single per-model dispatcher calling
+//! [`BoundedQueue::take_batch`], which blocks for the first example and
+//! then collects until `max` examples are in hand or the first one's
+//! deadline passes — the "flush at `max_batch` or `max_wait_us`,
+//! whichever comes first" rule in one place. Overload is a *fast*
+//! failure: beyond the cap, [`BoundedQueue::push`] returns
+//! [`Rejected::Overloaded`] immediately (the HTTP layer turns it into
+//! `503` + `Retry-After`) instead of queuing unbounded latency.
+//! [`BoundedQueue::close`] starts a graceful drain: queued examples
+//! still come out, new ones are refused, and `take_batch` returns
+//! `None` once empty.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+/// Why an example was not admitted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rejected {
+    /// The queue is at `queue_cap` — the `503` + `Retry-After` path.
+    Overloaded { depth: usize },
+    /// The gateway is shutting down: queued work completes, new work is
+    /// refused.
+    Draining,
+}
+
+impl std::fmt::Display for Rejected {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Rejected::Overloaded { depth } => {
+                write!(f, "queue full ({depth} waiting examples)")
+            }
+            Rejected::Draining => f.write_str("gateway is draining"),
+        }
+    }
+}
+
+struct State<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// Bounded queue + condvar; see the module docs for the protocol.
+pub struct BoundedQueue<T> {
+    cap: usize,
+    state: Mutex<State<T>>,
+    cv: Condvar,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(cap: usize) -> Self {
+        Self {
+            cap,
+            state: Mutex::new(State {
+                items: VecDeque::new(),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Waiting examples right now.
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Admit one example; `Ok` carries the queue depth after the push.
+    pub fn push(&self, item: T) -> Result<usize, Rejected> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return Err(Rejected::Draining);
+        }
+        if st.items.len() >= self.cap {
+            return Err(Rejected::Overloaded { depth: st.items.len() });
+        }
+        st.items.push_back(item);
+        let depth = st.items.len();
+        drop(st);
+        self.cv.notify_one();
+        Ok(depth)
+    }
+
+    /// Start the graceful drain (idempotent).
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Collect the next micro-batch: block until an example arrives,
+    /// then keep collecting until `max` are in hand or `deadline_of`
+    /// (evaluated on the *first* example) has passed. Returns `None`
+    /// only after [`BoundedQueue::close`] with the queue fully drained.
+    pub fn take_batch(&self, max: usize, deadline_of: impl Fn(&T) -> Instant) -> Option<Vec<T>> {
+        let max = max.max(1);
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(first) = st.items.pop_front() {
+                let deadline = deadline_of(&first);
+                let mut batch = vec![first];
+                while batch.len() < max {
+                    if let Some(item) = st.items.pop_front() {
+                        batch.push(item);
+                        continue;
+                    }
+                    if st.closed {
+                        break;
+                    }
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    st = self.cv.wait_timeout(st, deadline - now).unwrap().0;
+                }
+                return Some(batch);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    fn deadline_ms(ms: u64) -> impl Fn(&Instant) -> Instant {
+        move |t: &Instant| *t + Duration::from_millis(ms)
+    }
+
+    #[test]
+    fn cap_zero_rejects_everything() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(0);
+        assert_eq!(q.push(1), Err(Rejected::Overloaded { depth: 0 }));
+    }
+
+    #[test]
+    fn overflow_rejects_with_depth_and_preserves_queue() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(2);
+        assert_eq!(q.push(1), Ok(1));
+        assert_eq!(q.push(2), Ok(2));
+        assert_eq!(q.push(3), Err(Rejected::Overloaded { depth: 2 }));
+        assert_eq!(q.len(), 2, "rejected pushes must not mutate the queue");
+    }
+
+    #[test]
+    fn flushes_at_max_without_waiting_out_the_deadline() {
+        let q: BoundedQueue<Instant> = BoundedQueue::new(16);
+        let now = Instant::now();
+        for _ in 0..5 {
+            q.push(now).unwrap();
+        }
+        // Deadline far away: a full batch must return immediately.
+        let batch = q.take_batch(4, deadline_ms(60_000)).unwrap();
+        assert_eq!(batch.len(), 4);
+        assert_eq!(q.len(), 1, "fifth example stays queued for the next batch");
+    }
+
+    #[test]
+    fn flushes_a_partial_batch_at_the_deadline() {
+        let q: BoundedQueue<Instant> = BoundedQueue::new(16);
+        q.push(Instant::now()).unwrap();
+        let start = Instant::now();
+        let batch = q.take_batch(8, deadline_ms(30)).unwrap();
+        assert_eq!(batch.len(), 1);
+        let waited = start.elapsed();
+        assert!(waited >= Duration::from_millis(20), "returned after {waited:?}");
+    }
+
+    #[test]
+    fn late_arrivals_join_the_forming_batch() {
+        let q = Arc::new(BoundedQueue::<Instant>::new(16));
+        let producer = {
+            let q = q.clone();
+            std::thread::spawn(move || {
+                q.push(Instant::now()).unwrap();
+                std::thread::sleep(Duration::from_millis(20));
+                q.push(Instant::now()).unwrap();
+            })
+        };
+        // Generous deadline: both pushes land inside the window.
+        let batch = q.take_batch(4, deadline_ms(60_000)).map(|b| b.len());
+        // The batch flushes either with both examples, or at max — never
+        // empty and never more than max.
+        assert!(matches!(batch, Some(1..=4)), "got {batch:?}");
+        producer.join().unwrap();
+    }
+
+    #[test]
+    fn close_drains_then_ends() {
+        let q: BoundedQueue<Instant> = BoundedQueue::new(16);
+        let now = Instant::now();
+        q.push(now).unwrap();
+        q.push(now).unwrap();
+        q.close();
+        assert_eq!(q.push(now), Err(Rejected::Draining));
+        // Queued work still flushes (no deadline wait once closed) ...
+        let batch = q.take_batch(8, deadline_ms(60_000)).unwrap();
+        assert_eq!(batch.len(), 2);
+        // ... and a drained closed queue ends the dispatcher loop.
+        assert!(q.take_batch(8, deadline_ms(60_000)).is_none());
+    }
+
+    #[test]
+    fn close_wakes_a_blocked_consumer() {
+        let q = Arc::new(BoundedQueue::<Instant>::new(4));
+        let consumer = {
+            let q = q.clone();
+            std::thread::spawn(move || q.take_batch(4, deadline_ms(10)))
+        };
+        std::thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert!(consumer.join().unwrap().is_none());
+    }
+}

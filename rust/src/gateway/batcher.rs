@@ -1,0 +1,322 @@
+//! Deadline micro-batcher: padding helpers plus the per-model serving
+//! lane (bounded queue + dispatcher thread).
+//!
+//! Padding invariants, because they carry the bit-identity guarantee:
+//!
+//! * A request's tokens are right-padded to the model's fixed `T` with
+//!   `PAD` ids and 0.0 mask — exactly how [`crate::data::Batcher`]
+//!   shapes training/eval rows (task examples arrive pre-padded there).
+//! * Unused micro-batch rows are the canonical [`pad_row`]: `[CLS]`
+//!   followed by `PAD`s, mask `[1, 0, 0, ...]`. One live token keeps
+//!   every attention softmax row well-defined (an all-zero mask row
+//!   would normalize over nothing), and a *fixed* pad row makes padded
+//!   forwards reproducible run-to-run.
+//! * Per-row transformer independence then makes row `i`'s logits
+//!   bit-identical whether the other rows hold real examples or pad
+//!   rows — `rust/tests/gateway.rs` asserts it against one-by-one and
+//!   full offline batches.
+
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::coordinator::metrics::argmax;
+use crate::data::vocab::{CLS, PAD};
+use crate::serve::{Client, ModelInfo};
+use crate::telemetry::{names, Counter, Gauge, Histogram, HistogramSpec, Registry, TraceSink};
+
+use super::admission::BoundedQueue;
+use super::protocol::{Classification, GatewayConfig};
+
+/// Pad one request's tokens/mask to a `[T]` row. The mask defaults to
+/// 1.0 over the provided ids.
+pub fn pad_example(ids: &[i32], mask: Option<&[f32]>, t: usize) -> Result<(Vec<i32>, Vec<f32>)> {
+    anyhow::ensure!(!ids.is_empty(), "empty token sequence");
+    anyhow::ensure!(
+        ids.len() <= t,
+        "{} tokens exceed the model's sequence length {t}",
+        ids.len()
+    );
+    if let Some(m) = mask {
+        anyhow::ensure!(
+            m.len() == ids.len(),
+            "mask has {} entries, ids has {}",
+            m.len(),
+            ids.len()
+        );
+    }
+    let mut row_ids = ids.to_vec();
+    row_ids.resize(t, PAD);
+    let mut row_mask = match mask {
+        Some(m) => m.to_vec(),
+        None => vec![1.0; ids.len()],
+    };
+    row_mask.resize(t, 0.0);
+    Ok((row_ids, row_mask))
+}
+
+/// The canonical row for unused micro-batch slots: a minimal valid
+/// example (`[CLS]` + padding, exactly one live mask token).
+pub fn pad_row(t: usize) -> (Vec<i32>, Vec<f32>) {
+    let mut ids = vec![PAD; t];
+    ids[0] = CLS;
+    let mut mask = vec![0.0; t];
+    mask[0] = 1.0;
+    (ids, mask)
+}
+
+/// Pack `rows` (each a padded `[T]` pair) plus [`pad_row`]s into the
+/// model's fixed `[B*T]` buffers.
+pub fn pad_micro_batch(
+    rows: &[(&[i32], &[f32])],
+    b: usize,
+    t: usize,
+) -> Result<(Vec<i32>, Vec<f32>)> {
+    anyhow::ensure!(
+        !rows.is_empty() && rows.len() <= b,
+        "{} rows for a fixed batch of {b}",
+        rows.len()
+    );
+    let mut ids = Vec::with_capacity(b * t);
+    let mut mask = Vec::with_capacity(b * t);
+    for (rid, rmask) in rows {
+        anyhow::ensure!(
+            rid.len() == t && rmask.len() == t,
+            "row must be [{t}]: got {} ids, {} mask",
+            rid.len(),
+            rmask.len()
+        );
+        ids.extend_from_slice(rid);
+        mask.extend_from_slice(rmask);
+    }
+    let (fill_ids, fill_mask) = pad_row(t);
+    for _ in rows.len()..b {
+        ids.extend_from_slice(&fill_ids);
+        mask.extend_from_slice(&fill_mask);
+    }
+    Ok((ids, mask))
+}
+
+/// One admitted example waiting for its micro-batch: a padded `[T]`
+/// row plus the reply channel its HTTP connection thread blocks on.
+/// The error side carries a rendered message (anyhow errors are not
+/// `Clone`, and one failed batch answers many requests).
+pub(crate) struct Pending {
+    pub ids: Vec<i32>,
+    pub mask: Vec<f32>,
+    pub enqueued: Instant,
+    pub reply: Sender<Result<Classification, String>>,
+}
+
+/// Per-lane metric handles, labeled `model=<serving key>`.
+pub(crate) struct LaneMetrics {
+    pub requests: Arc<Counter>,
+    pub rejected: Arc<Counter>,
+    request_seconds: Arc<Histogram>,
+    batch_seconds: Arc<Histogram>,
+    batch_fill: Arc<Histogram>,
+    batches: Arc<Counter>,
+    pub queue_depth: Arc<Gauge>,
+    tracer: Option<Arc<TraceSink>>,
+}
+
+impl LaneMetrics {
+    fn resolve(reg: &Registry, model: &str) -> Self {
+        let l = [("model", model)];
+        Self {
+            requests: reg.counter(names::GATEWAY_REQUESTS, "Admitted classify requests", &l),
+            rejected: reg.counter(
+                names::GATEWAY_REJECTED,
+                "Requests refused by admission control (queue full or draining)",
+                &l,
+            ),
+            request_seconds: reg.histogram(
+                names::GATEWAY_REQUEST_SECONDS,
+                "Enqueue-to-reply latency per request",
+                &l,
+                HistogramSpec::duration(),
+            ),
+            batch_seconds: reg.histogram(
+                names::GATEWAY_BATCH_SECONDS,
+                "Micro-batch round-trip latency through the serve worker",
+                &l,
+                HistogramSpec::duration(),
+            ),
+            batch_fill: reg.histogram(
+                names::GATEWAY_BATCH_FILL,
+                "Real examples per dispatched micro-batch",
+                &l,
+                // batch sizes, not durations: 1, 2, 4, ... 128
+                HistogramSpec { min: 1.0, growth: 2.0, buckets: 8 },
+            ),
+            batches: reg.counter(
+                names::GATEWAY_BATCHES,
+                "Micro-batches dispatched to the serve worker",
+                &l,
+            ),
+            queue_depth: reg.gauge(
+                names::GATEWAY_QUEUE_DEPTH,
+                "Waiting examples in the admission queue",
+                &l,
+            ),
+            tracer: reg.tracer(),
+        }
+    }
+}
+
+/// One model's serving lane: the admission queue plus the dispatcher
+/// thread that forms micro-batches and round-trips them through the
+/// serve worker. [`Lane::shutdown`] is the graceful drain: close the
+/// queue (new pushes get [`super::admission::Rejected::Draining`]),
+/// let the dispatcher flush what is queued, then join it.
+pub(crate) struct Lane {
+    pub info: ModelInfo,
+    pub cfg: GatewayConfig,
+    pub queue: Arc<BoundedQueue<Pending>>,
+    pub metrics: Arc<LaneMetrics>,
+    join: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl Lane {
+    pub fn start(client: Client, info: ModelInfo, cfg: GatewayConfig, reg: &Registry) -> Self {
+        let queue = Arc::new(BoundedQueue::new(cfg.queue_cap));
+        let metrics = Arc::new(LaneMetrics::resolve(reg, &info.name));
+        let join = {
+            let (queue, metrics, info) = (queue.clone(), metrics.clone(), info.clone());
+            std::thread::Builder::new()
+                .name(format!("fzoo-gw-{}", info.name))
+                .spawn(move || dispatch_loop(client, info, cfg, &queue, &metrics))
+                .ok()
+        };
+        Self {
+            info,
+            cfg,
+            queue,
+            metrics,
+            join: Mutex::new(join),
+        }
+    }
+
+    /// Graceful drain; idempotent, callable through a shared reference.
+    pub fn shutdown(&self) {
+        self.queue.close();
+        if let Some(h) = self.join.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Lane {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Dispatcher body: form → pad → infer → distribute, until the queue
+/// closes and drains.
+fn dispatch_loop(
+    client: Client,
+    info: ModelInfo,
+    cfg: GatewayConfig,
+    queue: &BoundedQueue<Pending>,
+    metrics: &LaneMetrics,
+) {
+    let max_batch = cfg.effective_max_batch(info.batch);
+    let max_wait = Duration::from_micros(cfg.max_wait_us);
+    while let Some(batch) = queue.take_batch(max_batch, |p| p.enqueued + max_wait) {
+        metrics.queue_depth.set(queue.len() as f64);
+        let n = batch.len();
+        let mut sp = metrics.tracer.as_ref().map(|t| t.span("gateway", "dispatch"));
+        if let Some(t) = sp.as_mut() {
+            t.detail(info.name.clone());
+            t.arg("n", n as f64);
+        }
+        metrics.batch_fill.observe(n as f64);
+        metrics.batches.inc();
+        let rows: Vec<(&[i32], &[f32])> = batch
+            .iter()
+            .map(|p| (p.ids.as_slice(), p.mask.as_slice()))
+            .collect();
+        let out = pad_micro_batch(&rows, info.batch, info.seq).and_then(|(ids, mask)| {
+            let timer = metrics.batch_seconds.span();
+            let out = client.infer(&info.name, n, ids, mask);
+            drop(timer);
+            out
+        });
+        drop(sp);
+        match out {
+            Ok(out) => {
+                for (i, p) in batch.iter().enumerate() {
+                    let row = out.row(i);
+                    let latency = p.enqueued.elapsed();
+                    metrics.request_seconds.observe(latency.as_secs_f64());
+                    let _ = p.reply.send(Ok(Classification {
+                        model: info.name.clone(),
+                        label: argmax(row) as i32,
+                        logits: row.to_vec(),
+                        latency_us: latency.as_micros() as u64,
+                        batch_n: n,
+                    }));
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for p in &batch {
+                    let _ = p.reply.send(Err(msg.clone()));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_example_shapes_and_validates() {
+        let (ids, mask) = pad_example(&[1, 7, 9], None, 6).unwrap();
+        assert_eq!(ids, vec![1, 7, 9, PAD, PAD, PAD]);
+        assert_eq!(mask, vec![1.0, 1.0, 1.0, 0.0, 0.0, 0.0]);
+
+        let (_, mask) = pad_example(&[1, 7], Some(&[1.0, 0.5]), 4).unwrap();
+        assert_eq!(mask, vec![1.0, 0.5, 0.0, 0.0]);
+
+        assert!(pad_example(&[], None, 4).is_err(), "empty");
+        assert!(pad_example(&[1; 5], None, 4).is_err(), "too long");
+        assert!(pad_example(&[1, 2], Some(&[1.0]), 4).is_err(), "mask mismatch");
+    }
+
+    #[test]
+    fn pad_row_has_exactly_one_live_token() {
+        let (ids, mask) = pad_row(5);
+        assert_eq!(ids, vec![CLS, PAD, PAD, PAD, PAD]);
+        assert_eq!(mask.iter().sum::<f32>(), 1.0);
+        assert_eq!(mask[0], 1.0);
+    }
+
+    #[test]
+    fn pad_micro_batch_fills_unused_rows() {
+        let (r1, m1) = pad_example(&[1, 2], None, 3).unwrap();
+        let (ids, mask) = pad_micro_batch(&[(&r1, &m1)], 3, 3).unwrap();
+        assert_eq!(ids.len(), 9);
+        assert_eq!(&ids[..3], &[1, 2, PAD]);
+        let (pid, pmask) = pad_row(3);
+        assert_eq!(&ids[3..6], pid.as_slice());
+        assert_eq!(&ids[6..9], pid.as_slice());
+        assert_eq!(&mask[3..6], pmask.as_slice());
+
+        assert!(pad_micro_batch(&[], 3, 3).is_err(), "no rows");
+        let four = [
+            (r1.as_slice(), m1.as_slice()),
+            (r1.as_slice(), m1.as_slice()),
+            (r1.as_slice(), m1.as_slice()),
+            (r1.as_slice(), m1.as_slice()),
+        ];
+        assert!(pad_micro_batch(&four, 3, 3).is_err(), "too many rows");
+        assert!(pad_micro_batch(&[(&r1[..2], &m1[..2])], 3, 3).is_err(), "short row");
+    }
+}

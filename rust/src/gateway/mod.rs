@@ -1,0 +1,60 @@
+//! `gateway` — online inference serving with deadline-based
+//! micro-batching over the serve worker.
+//!
+//! FZOO's premise is that fine-tuning and inference share the *same*
+//! forward graph and memory footprint, so one device can train and
+//! serve concurrently. This module is the serving half: an HTTP/1.1
+//! JSON API that accepts **single-example** classification requests and
+//! answers them from the fixed-shape `eval_logits` graph the training
+//! loop already evaluates with.
+//!
+//! # Request path
+//!
+//! ```text
+//! POST /v1/classify ──► admission (BoundedQueue, 503 on overflow)
+//!        │                       │
+//!        │              per-model dispatcher thread
+//!        │              take_batch(max_batch, max_wait_us deadline)
+//!        │              pad to the model's fixed [B,T] shape
+//!        │                       │
+//!        │              Client::infer ──► serve worker (`Infer`)
+//!        │                       │        eval_logits, rows 0..n
+//!        ◄── {label, logits, latency_us} per request
+//! ```
+//!
+//! * **Micro-batching** ([`batcher`]): requests coalesce until
+//!   `max_batch` examples are waiting or the oldest is `max_wait_us` old
+//!   — whichever comes first. N concurrent clients cost ≈⌈N/max_batch⌉
+//!   forwards, not N.
+//! * **Admission control** ([`admission`]): a bounded queue per model;
+//!   beyond `queue_cap` waiting examples, requests get `503` +
+//!   `Retry-After` instead of unbounded latency. Shutdown drains: queued
+//!   work completes, new work is refused.
+//! * **Two model sources** ([`registry`]): checkpoint-loaded sessions
+//!   (`fzoo gateway --jobs gateway.json`) and live training runs
+//!   (`fzoo serve --gateway-addr`, serving the latest weights between
+//!   steps). Either way inference executes on the serve worker thread —
+//!   nothing device-adjacent is `Send` — which drains requests after
+//!   every training *step*, so request latency wins over training
+//!   throughput.
+//! * **Determinism**: padded rows are a fixed minimal example (`[CLS]`,
+//!   one live mask token) and per-row logits come from the same scoring
+//!   path as offline [`crate::coordinator::evaluate`], so gateway
+//!   predictions are bit-identical to offline evaluation and serving
+//!   never perturbs a training trajectory (`rust/tests/gateway.rs`).
+//! * **Observability**: `fzoo_gateway_*` counters/gauges/histograms
+//!   (see [`crate::telemetry::names`]) plus `gateway.dispatch` /
+//!   `gateway.batch` trace spans; the server also carries `/metrics`
+//!   and the live `/trace` endpoint.
+
+pub mod admission;
+pub mod batcher;
+pub mod protocol;
+pub mod registry;
+pub mod server;
+
+pub use admission::{BoundedQueue, Rejected};
+pub use batcher::{pad_example, pad_micro_batch, pad_row};
+pub use protocol::{Classification, ClassifyRequest, GatewayConfig};
+pub use registry::ModelRegistry;
+pub use server::Gateway;

@@ -1,0 +1,195 @@
+//! Plain-data gateway types: the HTTP API schema (parsed/rendered with
+//! the in-tree [`crate::util::json`] codec) and the per-lane batching
+//! configuration.
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Value;
+
+/// Deadline micro-batching + admission knobs for one serving lane.
+/// File-level keys of a job file set the defaults; per-model keys
+/// override them (see [`crate::config::GatewayFile`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GatewayConfig {
+    /// Flush a forming micro-batch at this many examples. 0 (the
+    /// default) means the model's full fixed batch; larger values are
+    /// clamped to it.
+    pub max_batch: usize,
+    /// ... or when the *oldest* queued example reaches this age in
+    /// microseconds, whichever comes first.
+    pub max_wait_us: u64,
+    /// Admission bound: requests beyond this many waiting examples are
+    /// rejected with `503` + `Retry-After`. 0 rejects everything — a
+    /// drain/test configuration.
+    pub queue_cap: usize,
+}
+
+impl Default for GatewayConfig {
+    fn default() -> Self {
+        Self {
+            max_batch: 0,
+            max_wait_us: 2_000,
+            queue_cap: 64,
+        }
+    }
+}
+
+impl GatewayConfig {
+    /// Overlay the JSON keys `max_batch` / `max_wait_us` / `queue_cap`
+    /// (each optional) on `self`.
+    pub fn apply_json(mut self, v: &Value) -> Result<Self> {
+        if let Some(x) = v.get("max_batch") {
+            self.max_batch = x.as_usize()?;
+        }
+        if let Some(x) = v.get("max_wait_us") {
+            self.max_wait_us = x.as_u64()?;
+        }
+        if let Some(x) = v.get("queue_cap") {
+            self.queue_cap = x.as_usize()?;
+        }
+        Ok(self)
+    }
+
+    /// The flush threshold against a concrete model batch size.
+    pub fn effective_max_batch(&self, model_batch: usize) -> usize {
+        if self.max_batch == 0 {
+            model_batch
+        } else {
+            self.max_batch.min(model_batch)
+        }
+    }
+}
+
+/// One `POST /v1/classify` body:
+/// `{"model": "...", "ids": [...], "mask": [...]}` — `model` may be
+/// omitted when exactly one model is served; `mask` defaults to 1.0
+/// over the provided ids.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClassifyRequest {
+    pub model: Option<String>,
+    pub ids: Vec<i32>,
+    pub mask: Option<Vec<f32>>,
+}
+
+impl ClassifyRequest {
+    pub fn parse(body: &str) -> Result<Self> {
+        let v = crate::util::json::parse(body)?;
+        let model = match v.get("model") {
+            Some(m) => Some(m.as_str()?.to_string()),
+            None => None,
+        };
+        let ids: Vec<i32> = v
+            .req("ids")?
+            .as_arr()?
+            .iter()
+            .map(|x| x.as_f64().map(|f| f as i32))
+            .collect::<Result<_>>()?;
+        if ids.is_empty() {
+            bail!("'ids' must be a non-empty token array");
+        }
+        let mask = match v.get("mask") {
+            Some(m) => Some(
+                m.as_arr()?
+                    .iter()
+                    .map(|x| x.as_f32())
+                    .collect::<Result<Vec<f32>>>()?,
+            ),
+            None => None,
+        };
+        if let Some(m) = &mask {
+            if m.len() != ids.len() {
+                bail!("'mask' has {} entries, 'ids' has {}", m.len(), ids.len());
+            }
+        }
+        Ok(Self { model, ids, mask })
+    }
+}
+
+/// One classification result, rendered as the `/v1/classify` response.
+#[derive(Debug, Clone)]
+pub struct Classification {
+    /// The serving key that answered.
+    pub model: String,
+    /// `argmax` over the task's live classes — exactly the offline
+    /// `evaluate` prediction.
+    pub label: i32,
+    /// The live-class logits row.
+    pub logits: Vec<f32>,
+    /// Enqueue → reply wall time.
+    pub latency_us: u64,
+    /// Examples in the micro-batch this request rode in.
+    pub batch_n: usize,
+}
+
+impl Classification {
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("model", Value::str(self.model.clone())),
+            ("label", Value::num(self.label as f64)),
+            (
+                "logits",
+                Value::Arr(self.logits.iter().map(|&x| Value::num(x as f64)).collect()),
+            ),
+            ("latency_us", Value::num(self.latency_us as f64)),
+            ("batch_n", Value::num(self.batch_n as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn config_overlay_and_clamp() {
+        let base = GatewayConfig::default();
+        assert_eq!(base.effective_max_batch(16), 16, "0 = model batch");
+
+        let v = json::parse(r#"{"max_batch":4,"max_wait_us":500,"queue_cap":2}"#).unwrap();
+        let cfg = base.apply_json(&v).unwrap();
+        assert_eq!(cfg, GatewayConfig { max_batch: 4, max_wait_us: 500, queue_cap: 2 });
+        assert_eq!(cfg.effective_max_batch(16), 4);
+        assert_eq!(cfg.effective_max_batch(2), 2, "clamped to the model batch");
+
+        let partial = json::parse(r#"{"queue_cap":0}"#).unwrap();
+        let cfg = base.apply_json(&partial).unwrap();
+        assert_eq!(cfg.queue_cap, 0);
+        assert_eq!(cfg.max_wait_us, base.max_wait_us, "unset keys keep defaults");
+    }
+
+    #[test]
+    fn classify_request_parses_and_validates() {
+        let r = ClassifyRequest::parse(r#"{"model":"m","ids":[1,5,6],"mask":[1,1,0.5]}"#).unwrap();
+        assert_eq!(r.model.as_deref(), Some("m"));
+        assert_eq!(r.ids, vec![1, 5, 6]);
+        assert_eq!(r.mask, Some(vec![1.0, 1.0, 0.5]));
+
+        let r = ClassifyRequest::parse(r#"{"ids":[1]}"#).unwrap();
+        assert!(r.model.is_none() && r.mask.is_none());
+
+        assert!(ClassifyRequest::parse(r#"{"ids":[]}"#).is_err(), "empty ids");
+        assert!(ClassifyRequest::parse(r#"{"model":"m"}"#).is_err(), "missing ids");
+        assert!(
+            ClassifyRequest::parse(r#"{"ids":[1,2],"mask":[1]}"#).is_err(),
+            "mask length mismatch"
+        );
+        assert!(ClassifyRequest::parse("not json").is_err());
+    }
+
+    #[test]
+    fn classification_renders_json() {
+        let c = Classification {
+            model: "m".into(),
+            label: 1,
+            logits: vec![0.25, 0.75],
+            latency_us: 1234,
+            batch_n: 4,
+        };
+        let s = c.to_json().to_string();
+        let v = json::parse(&s).unwrap();
+        assert_eq!(v.req("label").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(v.req("logits").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(v.req("batch_n").unwrap().as_f64().unwrap(), 4.0);
+    }
+}

@@ -1,0 +1,67 @@
+//! The gateway's routing table: one serving [`Lane`] per servable
+//! model, keyed by serving name.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::serve::{Client, ModelInfo};
+use crate::telemetry::Registry;
+
+use super::batcher::Lane;
+use super::protocol::GatewayConfig;
+
+/// Immutable after construction (handlers look lanes up concurrently
+/// with shared references); [`ModelRegistry::shutdown`] drains every
+/// lane through interior mutability.
+pub struct ModelRegistry {
+    lanes: BTreeMap<String, Lane>,
+}
+
+impl ModelRegistry {
+    /// One lane per `(model, config)` pair, each with its own admission
+    /// queue and dispatcher thread.
+    pub(crate) fn start(
+        client: &Client,
+        models: Vec<(ModelInfo, GatewayConfig)>,
+        reg: &Registry,
+    ) -> Result<Self> {
+        anyhow::ensure!(!models.is_empty(), "gateway has no models to serve");
+        let mut lanes = BTreeMap::new();
+        for (info, cfg) in models {
+            let name = info.name.clone();
+            anyhow::ensure!(!lanes.contains_key(&name), "duplicate serving name '{name}'");
+            lanes.insert(name, Lane::start(client.clone(), info, cfg, reg));
+        }
+        Ok(Self { lanes })
+    }
+
+    pub(crate) fn lane(&self, name: &str) -> Option<&Lane> {
+        self.lanes.get(name)
+    }
+
+    /// The single lane, when exactly one model is served — lets
+    /// classify bodies omit `"model"`.
+    pub(crate) fn sole_lane(&self) -> Option<&Lane> {
+        if self.lanes.len() == 1 {
+            self.lanes.values().next()
+        } else {
+            None
+        }
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.lanes.keys().cloned().collect()
+    }
+
+    pub fn infos(&self) -> Vec<ModelInfo> {
+        self.lanes.values().map(|l| l.info.clone()).collect()
+    }
+
+    /// Graceful drain: close every queue, flush, join every dispatcher.
+    pub fn shutdown(&self) {
+        for lane in self.lanes.values() {
+            lane.shutdown();
+        }
+    }
+}

@@ -1,0 +1,212 @@
+//! The gateway HTTP front end: routes, admission, and lifecycle.
+//!
+//! Endpoints (plus `/metrics` and `/trace` from
+//! [`crate::telemetry::telemetry_routes`]):
+//!
+//! * `POST /v1/classify` — `{"model": "...", "ids": [...], "mask":
+//!   [...]}`; replies `{model, label, logits, latency_us, batch_n}`.
+//!   `503` + `Retry-After` when the model's queue is full or the
+//!   gateway is draining, `404` for unknown models, `400` for malformed
+//!   bodies or oversized sequences.
+//! * `GET /v1/models` — every served model's geometry and provenance.
+//! * `GET /healthz` — `200 {"status":"ok"}` (`503 "draining"` during
+//!   shutdown).
+//!
+//! Connection threads block on the per-request reply channel while the
+//! batcher coalesces; the micro-batching therefore happens *across*
+//! concurrent connections, which is why [`crate::telemetry::HttpServer`]
+//! serves each connection on its own thread.
+
+use std::net::{SocketAddr, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::serve::{Client, ModelInfo};
+use crate::telemetry::{telemetry_routes, HttpRequest, HttpResponse, HttpServer, Registry};
+use crate::util::json::Value;
+
+use super::batcher::{pad_example, Lane, Pending};
+use super::protocol::{ClassifyRequest, GatewayConfig};
+use super::registry::ModelRegistry;
+
+/// Upper bound on one request's wait for its inference reply. Far above
+/// any sane `max_wait_us` + step time; it guards the connection thread
+/// against a wedged worker, answering `504` instead of hanging.
+const REPLY_TIMEOUT: Duration = Duration::from_secs(120);
+
+struct Shared {
+    registry: ModelRegistry,
+    draining: AtomicBool,
+}
+
+/// The running gateway. Dropping it (or calling [`Gateway::shutdown`])
+/// drains gracefully: admission closes first (new classifies get `503`),
+/// queued micro-batches flush through the worker, dispatchers join,
+/// then the listener stops and in-flight connections finish.
+pub struct Gateway {
+    server: Option<HttpServer>,
+    shared: Arc<Shared>,
+    addr: SocketAddr,
+}
+
+impl Gateway {
+    /// Serve `models` (each with its lane config) on `addr`. Inference
+    /// executes on the serve worker behind `client`; `telemetry` backs
+    /// `/metrics`, `/trace` and the `fzoo_gateway_*` families.
+    pub fn start(
+        client: Client,
+        models: Vec<(ModelInfo, GatewayConfig)>,
+        addr: impl ToSocketAddrs,
+        telemetry: Arc<Registry>,
+    ) -> Result<Self> {
+        let registry = ModelRegistry::start(&client, models, &telemetry)?;
+        let shared = Arc::new(Shared {
+            registry,
+            draining: AtomicBool::new(false),
+        });
+        let router = telemetry_routes(telemetry)
+            .route("/healthz", {
+                let s = shared.clone();
+                move |_req| healthz(&s)
+            })
+            .route("/v1/models", {
+                let s = shared.clone();
+                move |req| models_handler(&s, req)
+            })
+            .route("/v1/classify", {
+                let s = shared.clone();
+                move |req| classify(&s, req)
+            });
+        let server = HttpServer::start(addr, "fzoo-gateway", router)?;
+        let addr = server.addr();
+        Ok(Self {
+            server: Some(server),
+            shared,
+            addr,
+        })
+    }
+
+    /// The bound address (with the kernel-chosen port when `:0` was
+    /// requested).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Served model names (serving keys).
+    pub fn models(&self) -> Vec<String> {
+        self.shared.registry.names()
+    }
+
+    /// Graceful drain, explicitly (Drop does the same).
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        // Order matters: refuse new admissions, flush + join the
+        // dispatchers (every queued request gets its reply), then stop
+        // the listener and join connection threads.
+        self.shared.draining.store(true, Ordering::SeqCst);
+        self.shared.registry.shutdown();
+        drop(self.server.take());
+    }
+}
+
+impl Drop for Gateway {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+fn error_json(status: u16, msg: impl std::fmt::Display) -> HttpResponse {
+    let body = Value::obj(vec![("error", Value::str(msg.to_string()))]);
+    HttpResponse::json(status, body.to_string())
+}
+
+fn overloaded(lane: &Lane, msg: impl std::fmt::Display) -> HttpResponse {
+    lane.metrics.rejected.inc();
+    error_json(503, msg).header("Retry-After", "1")
+}
+
+fn healthz(s: &Shared) -> HttpResponse {
+    let draining = s.draining.load(Ordering::SeqCst);
+    let body = Value::obj(vec![
+        ("status", Value::str(if draining { "draining" } else { "ok" })),
+        (
+            "models",
+            Value::Arr(s.registry.names().into_iter().map(Value::Str).collect()),
+        ),
+    ]);
+    HttpResponse::json(if draining { 503 } else { 200 }, body.to_string())
+}
+
+fn models_handler(s: &Shared, req: &HttpRequest) -> HttpResponse {
+    if req.method != "GET" {
+        return error_json(405, "GET only");
+    }
+    let rows = s.registry.infos().iter().map(ModelInfo::to_json).collect();
+    let body = Value::obj(vec![("models", Value::Arr(rows))]);
+    HttpResponse::json(200, body.to_string())
+}
+
+fn classify(s: &Shared, req: &HttpRequest) -> HttpResponse {
+    if req.method != "POST" {
+        return error_json(405, "POST only");
+    }
+    let cr = match ClassifyRequest::parse(&req.body) {
+        Ok(cr) => cr,
+        Err(e) => return error_json(400, format!("{e:#}")),
+    };
+    let lane = match &cr.model {
+        Some(name) => match s.registry.lane(name) {
+            Some(l) => l,
+            None => {
+                return error_json(
+                    404,
+                    format!("no model '{name}'; serving: {}", s.registry.names().join(", ")),
+                )
+            }
+        },
+        None => match s.registry.sole_lane() {
+            Some(l) => l,
+            None => {
+                return error_json(
+                    400,
+                    format!("'model' is required; serving: {}", s.registry.names().join(", ")),
+                )
+            }
+        },
+    };
+    if s.draining.load(Ordering::SeqCst) {
+        return overloaded(lane, "gateway is draining");
+    }
+    let (ids, mask) = match pad_example(&cr.ids, cr.mask.as_deref(), lane.info.seq) {
+        Ok(row) => row,
+        Err(e) => return error_json(400, format!("{e:#}")),
+    };
+    let (reply, rx) = mpsc::channel();
+    let pending = Pending {
+        ids,
+        mask,
+        enqueued: Instant::now(),
+        reply,
+    };
+    match lane.queue.push(pending) {
+        Ok(depth) => {
+            lane.metrics.requests.inc();
+            lane.metrics.queue_depth.set(depth as f64);
+        }
+        Err(rej) => return overloaded(lane, rej),
+    }
+    match rx.recv_timeout(REPLY_TIMEOUT) {
+        Ok(Ok(c)) => HttpResponse::json(200, c.to_json().to_string()),
+        Ok(Err(msg)) => error_json(500, format!("inference failed: {msg}")),
+        // Dispatcher gone mid-drain: the request was admitted but the
+        // lane closed under it before dispatch.
+        Err(mpsc::RecvTimeoutError::Disconnected) => overloaded(lane, "gateway is draining"),
+        Err(mpsc::RecvTimeoutError::Timeout) => error_json(504, "inference timed out"),
+    }
+}

@@ -28,6 +28,7 @@
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod gateway;
 pub mod memmodel;
 pub mod optim;
 pub mod runtime;

@@ -4,6 +4,7 @@
 //! fzoo train --model roberta-prox --task sst2 --optimizer fzoo --lr 1e-3
 //! fzoo train --config train.json
 //! fzoo serve --jobs jobs.json                # N concurrent runs, one device
+//! fzoo gateway --jobs gateway.json           # online inference HTTP API
 //! fzoo eval  --model roberta-prox --task sst2
 //! fzoo info                                  # artifact inventory
 //! fzoo mem                                   # Table-12-style memory model
@@ -16,9 +17,10 @@ use std::time::Duration;
 
 use anyhow::{bail, Result};
 
-use fzoo::config::{JobFile, TrainConfig};
+use fzoo::config::{GatewayFile, JobFile, TrainConfig};
 use fzoo::coordinator::{evaluate, RunLogger, Trainer};
 use fzoo::data::{Batcher, TaskKind};
+use fzoo::gateway::Gateway;
 use fzoo::memmodel;
 use fzoo::optim::OptimizerKind;
 use fzoo::runtime::{FaultPlan, Runtime, Session};
@@ -53,6 +55,19 @@ USAGE:
              # <run>.trace.json per run (open in Perfetto), plus automatic
              # <run>.stepN.flight.json crash dumps on failure/recovery.
              # See the README's Observability section for schemas.
+             [--gateway-addr HOST:PORT]
+             # additionally serve every run's live parameters over the
+             # online-inference HTTP API while training (classifies are
+             # scheduled ahead of training steps; see 'fzoo gateway').
+  fzoo gateway --jobs gateway.json [--artifacts DIR]
+             [--gateway-addr HOST:PORT]
+             # online inference over checkpoint-loaded (or fresh/
+             # pretrained) models: POST /v1/classify with deadline
+             # micro-batching (max_batch / max_wait_us), bounded
+             # admission queues (queue_cap -> 503 + Retry-After),
+             # GET /v1/models, /healthz, /metrics, /trace. The bound
+             # address is printed on startup (use port 0 to auto-pick).
+             # See the README's "Online inference" section for schemas.
   fzoo trace summarize FILE
              # per-phase self-time breakdown, slowest steps, and the
              # probe-σ trail of a .trace.json / .flight.json file
@@ -70,6 +85,7 @@ fn main() -> Result<()> {
     match args.positional[0].as_str() {
         "train" => cmd_train(&args),
         "serve" => cmd_serve(&args),
+        "gateway" => cmd_gateway(&args),
         "trace" => cmd_trace(&args),
         "eval" => cmd_eval(&args),
         "info" => cmd_info(&args),
@@ -339,6 +355,37 @@ fn cmd_serve(args: &Args) -> Result<()> {
         Some(exporter.start(Duration::from_secs(metrics_interval_s.max(1))))
     };
 
+    // Attach the online-inference gateway over the live runs: classify
+    // micro-batches are scheduled ahead of training steps on the worker,
+    // so predictions track the parameters as they train.
+    let gateway_addr = args
+        .get("gateway-addr")
+        .map(|s| s.to_string())
+        .or_else(|| file.gateway_addr.clone());
+    let gateway = match &gateway_addr {
+        Some(addr) => {
+            let models: Vec<_> = client
+                .models()?
+                .into_iter()
+                .filter(|m| !m.span)
+                .map(|m| (m, file.gateway))
+                .collect();
+            if models.is_empty() {
+                eprintln!("gateway: no classification runs to serve; skipping");
+                None
+            } else {
+                let gw = Gateway::start(client.clone(), models, addr.as_str(), telemetry.clone())?;
+                println!(
+                    "gateway: http://{}/v1/classify ({} live run(s))",
+                    gw.addr(),
+                    gw.models().len()
+                );
+                Some(gw)
+            }
+        }
+        None => None,
+    };
+
     // Drain every collector first, then take ONE status snapshot while the
     // runs are still resident — it carries the telemetry-derived
     // throughput numbers for the summary table.
@@ -347,6 +394,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let outcome = join.join().map_err(|_| anyhow::anyhow!("collector panicked"))?;
         results.push((name, id, outcome, log_path));
     }
+    // Drain the gateway while the runs are still device-resident: every
+    // queued classify flushes through before any run is removed.
+    drop(gateway);
     let status = client.status()?;
 
     println!(
@@ -437,6 +487,55 @@ fn cmd_serve(args: &Args) -> Result<()> {
         bail!("{failed} run(s) failed");
     }
     Ok(())
+}
+
+/// Serve inference-only models over the online HTTP API: open each
+/// model on the serve worker (restoring checkpoints where configured),
+/// start the gateway, print the bound address, and serve until killed.
+fn cmd_gateway(args: &Args) -> Result<()> {
+    let jobs_path = args
+        .get("jobs")
+        .ok_or_else(|| anyhow::anyhow!("--jobs gateway.json required"))?
+        .to_string();
+    let file = GatewayFile::from_file(&jobs_path)?;
+    let artifacts = args.get_or("artifacts", &file.artifacts);
+    let addr = args
+        .get("gateway-addr")
+        .map(|s| s.to_string())
+        .or_else(|| file.gateway_addr.clone())
+        .unwrap_or_else(|| "127.0.0.1:0".into());
+    let telemetry = Arc::new(Registry::new());
+    let mgr = RunManager::start_with_telemetry(artifacts.as_str(), None, telemetry.clone())?;
+    let client = mgr.client();
+    println!("gateway: {} model(s) from {jobs_path}", file.models.len());
+    let mut models = Vec::new();
+    for (spec, cfg) in file.models {
+        let info = client.load_model(spec)?;
+        println!(
+            "  {}: {} / {} ({}), batch {} x seq {}, {} classes \
+             [max_batch {} max_wait_us {} queue_cap {}]",
+            info.name,
+            info.model,
+            info.task,
+            info.source,
+            info.batch,
+            info.seq,
+            info.n_classes,
+            cfg.effective_max_batch(info.batch),
+            cfg.max_wait_us,
+            cfg.queue_cap,
+        );
+        models.push((info, cfg));
+    }
+    let gateway = Gateway::start(client, models, addr.as_str(), telemetry)?;
+    // The smoke script and operators parse this line for the bound port.
+    println!(
+        "gateway: http://{}/v1/classify (also /v1/models /healthz /metrics /trace)",
+        gateway.addr()
+    );
+    loop {
+        std::thread::sleep(Duration::from_secs(3600));
+    }
 }
 
 fn cmd_trace(args: &Args) -> Result<()> {

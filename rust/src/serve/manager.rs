@@ -27,8 +27,8 @@ use crate::coordinator::{EvalRecord, History};
 use crate::runtime::{FaultPlan, Runtime};
 use crate::telemetry::{names, Gauge, Registry};
 
-use super::protocol::{Event, Request, RunId, RunSpec, RunStatus};
-use super::run::RunState;
+use super::protocol::{Event, InferOut, ModelInfo, ModelSpec, Request, RunId, RunSpec, RunStatus};
+use super::run::{RunState, ServedModel};
 
 /// Default client deadline. Generous because `submit` compiles step
 /// graphs on the worker (tens of seconds cold) — the deadline guards
@@ -126,6 +126,7 @@ impl RunManager {
                     rt,
                     rx,
                     runs: Vec::new(),
+                    models: Vec::new(),
                     next_id: 1,
                     live_runs,
                     runnable_runs,
@@ -264,6 +265,36 @@ impl Client {
     pub fn remove(&self, id: RunId) -> Result<()> {
         self.roundtrip(|reply| Request::Remove { id, reply })?
     }
+
+    /// Load a device-resident inference-only model for gateway serving.
+    /// The session opens (and the checkpoint restores, validated) before
+    /// this returns.
+    pub fn load_model(&self, spec: ModelSpec) -> Result<ModelInfo> {
+        self.roundtrip(|reply| Request::LoadModel {
+            spec: Box::new(spec),
+            reply,
+        })?
+    }
+
+    /// Everything servable right now: gateway-loaded models first, then
+    /// live runs (which serve their latest weights between steps).
+    pub fn models(&self) -> Result<Vec<ModelInfo>> {
+        self.roundtrip(|reply| Request::Models { reply })
+    }
+
+    /// Execute one padded inference micro-batch on the worker (the
+    /// gateway batcher's dispatch path). `ids`/`mask` are the model's
+    /// full fixed-shape `[batch*seq]` buffers with the `n` real examples
+    /// in the leading rows.
+    pub fn infer(&self, model: &str, n: usize, ids: Vec<i32>, mask: Vec<f32>) -> Result<InferOut> {
+        self.roundtrip(|reply| Request::Infer {
+            model: model.to_string(),
+            n,
+            ids,
+            mask,
+            reply,
+        })?
+    }
 }
 
 /// Client-side view of one submitted run: its id plus the event stream.
@@ -314,6 +345,8 @@ struct Worker {
     rt: Runtime,
     rx: Receiver<Request>,
     runs: Vec<RunState>,
+    /// Gateway-loaded inference-only models, load order.
+    models: Vec<ServedModel>,
     next_id: u64,
     live_runs: Arc<Gauge>,
     runnable_runs: Arc<Gauge>,
@@ -350,8 +383,27 @@ impl Worker {
                 }
             }
             // Fair slice: one step per runnable run, submission order.
-            for run in &mut self.runs {
-                run.tick(&self.rt);
+            // Requests are drained again after *every* step — not once
+            // per pass — so a queued inference micro-batch waits at most
+            // one training step: request latency wins over training
+            // throughput. Handlers may mutate `self.runs` (Submit/
+            // Remove), so the pass iterates over an id snapshot.
+            let ids: Vec<RunId> = self.runs.iter().map(|r| r.id).collect();
+            for id in ids {
+                if let Some(run) = self.runs.iter_mut().find(|r| r.id == id) {
+                    run.tick(&self.rt);
+                }
+                loop {
+                    match self.rx.try_recv() {
+                        Ok(req) => {
+                            if self.handle(req) {
+                                return;
+                            }
+                        }
+                        Err(TryRecvError::Empty) => break,
+                        Err(TryRecvError::Disconnected) => return,
+                    }
+                }
             }
         }
     }
@@ -432,6 +484,47 @@ impl Worker {
             Request::Shutdown { reply } => {
                 let _ = reply.send(());
                 return true;
+            }
+            Request::LoadModel { spec, reply } => {
+                let name = spec.display_name();
+                let out = if self.models.iter().any(|m| m.info.name == name) {
+                    Err(anyhow!("model '{name}' is already loaded"))
+                } else {
+                    ServedModel::open(&self.rt, &spec)
+                };
+                let _ = reply.send(out.map(|m| {
+                    let info = m.info.clone();
+                    self.models.push(m);
+                    info
+                }));
+            }
+            Request::Models { reply } => {
+                let mut out: Vec<ModelInfo> =
+                    self.models.iter().map(|m| m.info.clone()).collect();
+                out.extend(self.runs.iter().map(|r| r.model_info()));
+                let _ = reply.send(out);
+            }
+            Request::Infer {
+                model,
+                n,
+                ids,
+                mask,
+                reply,
+            } => {
+                // Loaded models first, then live runs by display name —
+                // a live run serves whatever its parameters are *right
+                // now*, i.e. the latest completed step's weights.
+                let rt = &self.rt;
+                let out = if let Some(m) = self.models.iter().find(|m| m.info.name == model) {
+                    m.infer(rt, n, &ids, &mask)
+                } else if let Some(r) =
+                    self.runs.iter().find(|r| r.spec.display_name() == model)
+                {
+                    r.infer(rt, n, &ids, &mask)
+                } else {
+                    Err(anyhow!("no served model or run named '{model}'"))
+                };
+                let _ = reply.send(out);
             }
         }
         false

@@ -37,6 +37,13 @@
 //!   ([`FaultPlan`](crate::runtime::FaultPlan), via
 //!   [`RunManager::start_with_faults`]) make every one of those paths
 //!   testable.
+//! * **Online inference** (the [`crate::gateway`] subsystem rides on
+//!   this): `LoadModel` opens inference-only [`ModelSpec`] sessions
+//!   (checkpoint-restored, no optimizer), `Models` lists everything
+//!   servable (loaded models + live runs), and `Infer` runs a padded
+//!   `eval_logits` micro-batch on the worker. The scheduler drains
+//!   requests after every *step* (not every pass), so a queued
+//!   micro-batch waits at most one training step.
 //!
 //! ```no_run
 //! use fzoo::optim::OptimizerKind;
@@ -59,4 +66,4 @@ pub mod run;
 
 pub use checkpoint::{latest_valid_checkpoint, list_checkpoints, prune_checkpoints, Checkpoint};
 pub use manager::{Client, RunHandle, RunManager, WorkerGone, DEFAULT_CLIENT_TIMEOUT};
-pub use protocol::{Event, RunId, RunPhase, RunSpec, RunStatus};
+pub use protocol::{Event, InferOut, ModelInfo, ModelSpec, RunId, RunPhase, RunSpec, RunStatus};

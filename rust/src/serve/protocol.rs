@@ -271,6 +271,118 @@ impl RunSpec {
     }
 }
 
+/// An inference-only model served by the gateway: a device-resident
+/// session restored from a checkpoint (or freshly initialized) with no
+/// optimizer attached. Plain data — the session itself is built
+/// worker-side (`serve::run::ServedModel`).
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    /// Serving key (the `"model"` field of `POST /v1/classify` bodies);
+    /// defaults to the graph/model name.
+    pub name: String,
+    pub model: String,
+    pub task: String,
+    /// `.ckpt.json` to restore trainable parameters from, validated
+    /// against the model the way `resume_from` is. `None` serves the
+    /// freshly initialized (or pretrained) parameters.
+    pub checkpoint: Option<String>,
+    /// Open from the cached multi-task pretrained checkpoint.
+    pub pretrained: bool,
+}
+
+impl ModelSpec {
+    pub fn new(model: &str, task: &str) -> Self {
+        Self {
+            name: String::new(),
+            model: model.to_string(),
+            task: task.to_string(),
+            checkpoint: None,
+            pretrained: false,
+        }
+    }
+
+    /// The serving key, defaulting to the model name when unset.
+    pub fn display_name(&self) -> String {
+        if self.name.is_empty() {
+            self.model.clone()
+        } else {
+            self.name.clone()
+        }
+    }
+
+    /// Parse one model object of a `fzoo gateway` job file. See
+    /// [`crate::config::GatewayFile`] for the file-level schema.
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let mut spec = Self::new(v.req("model")?.as_str()?, v.req("task")?.as_str()?);
+        if let Some(n) = v.get("name") {
+            spec.name = n.as_str()?.to_string();
+        }
+        spec.checkpoint = opt_str(v, "checkpoint")?;
+        spec.pretrained = v
+            .get("pretrained")
+            .map(|x| x.as_bool())
+            .transpose()?
+            .unwrap_or(false);
+        Ok(spec)
+    }
+}
+
+/// One servable model's geometry and provenance — everything the
+/// gateway needs to validate, pad and route requests against it.
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    /// Serving key: a loaded model's name or a live run's display name.
+    pub name: String,
+    pub model: String,
+    pub task: String,
+    /// Fixed micro-batch rows of the `eval_logits` graph.
+    pub batch: usize,
+    /// Fixed sequence length (requests are padded to this).
+    pub seq: usize,
+    /// Live class count of the task head (logits rows are truncated to
+    /// this, exactly like offline `coordinator::evaluate`).
+    pub n_classes: usize,
+    /// Span-extraction head — not servable via `/v1/classify`.
+    pub span: bool,
+    /// `"checkpoint:<path>"`, `"fresh"`, `"pretrained"` or `"run"`.
+    pub source: String,
+    /// Checkpoint step (loaded models) / executed steps (live runs).
+    pub step: u64,
+}
+
+impl ModelInfo {
+    /// The `/v1/models` row for this model.
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("name", Value::str(self.name.clone())),
+            ("model", Value::str(self.model.clone())),
+            ("task", Value::str(self.task.clone())),
+            ("batch", Value::num(self.batch as f64)),
+            ("seq", Value::num(self.seq as f64)),
+            ("n_classes", Value::num(self.n_classes as f64)),
+            ("span", Value::Bool(self.span)),
+            ("source", Value::str(self.source.clone())),
+            ("step", Value::num(self.step as f64)),
+        ])
+    }
+}
+
+/// Logits for one inference micro-batch, row-major `[n, n_classes]`,
+/// already truncated to the task's live classes.
+#[derive(Debug, Clone)]
+pub struct InferOut {
+    pub logits: Vec<f32>,
+    pub n: usize,
+    pub n_classes: usize,
+}
+
+impl InferOut {
+    /// Logits row `i` (`i < n`).
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.logits[i * self.n_classes..(i + 1) * self.n_classes]
+    }
+}
+
 /// Requests the worker thread serves. Each carries a reply channel; the
 /// worker never blocks on a reply send (a dropped receiver is fine).
 pub(crate) enum Request {
@@ -312,6 +424,27 @@ pub(crate) enum Request {
     },
     Shutdown {
         reply: Sender<()>,
+    },
+    /// Open a device-resident inference-only model for the gateway
+    /// (session + optional checkpoint restore happen before the reply).
+    LoadModel {
+        spec: Box<ModelSpec>,
+        reply: Sender<Result<ModelInfo>>,
+    },
+    /// Everything servable right now: loaded models, then live runs.
+    Models {
+        reply: Sender<Vec<ModelInfo>>,
+    },
+    /// Run `eval_logits` over one padded micro-batch. `ids`/`mask` are
+    /// the full fixed-shape `[batch*seq]` buffers with the `n` real
+    /// examples in the leading rows. Resolution order: loaded models by
+    /// name, then live runs by display name.
+    Infer {
+        model: String,
+        n: usize,
+        ids: Vec<i32>,
+        mask: Vec<f32>,
+        reply: Sender<Result<InferOut>>,
     },
 }
 
@@ -370,5 +503,37 @@ mod tests {
     fn run_spec_missing_fields_error() {
         let v = json::parse(r#"{"model":"m","task":"t"}"#).unwrap();
         assert!(RunSpec::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn model_spec_from_json() {
+        let v = json::parse(r#"{"model":"tiny-enc","task":"sst2"}"#).unwrap();
+        let s = ModelSpec::from_json(&v).unwrap();
+        assert_eq!(s.display_name(), "tiny-enc");
+        assert!(s.checkpoint.is_none() && !s.pretrained);
+
+        let v = json::parse(
+            r#"{"name":"sst2-prod","model":"tiny-enc","task":"sst2",
+                "checkpoint":"ckpt/a.step100.ckpt.json","pretrained":true}"#,
+        )
+        .unwrap();
+        let s = ModelSpec::from_json(&v).unwrap();
+        assert_eq!(s.display_name(), "sst2-prod");
+        assert_eq!(s.checkpoint.as_deref(), Some("ckpt/a.step100.ckpt.json"));
+        assert!(s.pretrained);
+
+        let v = json::parse(r#"{"model":"tiny-enc"}"#).unwrap();
+        assert!(ModelSpec::from_json(&v).is_err(), "task is required");
+    }
+
+    #[test]
+    fn infer_out_rows() {
+        let out = InferOut {
+            logits: vec![1.0, 2.0, 3.0, 4.0],
+            n: 2,
+            n_classes: 2,
+        };
+        assert_eq!(out.row(0), &[1.0, 2.0]);
+        assert_eq!(out.row(1), &[3.0, 4.0]);
     }
 }

@@ -24,11 +24,11 @@ use crate::coordinator::{
 };
 use crate::data::{Batcher, TaskKind};
 use crate::optim::Optimizer;
-use crate::runtime::{FaultSite, Runtime, Session};
+use crate::runtime::{lit_f32, lit_i32, to_vec_f32, FaultSite, Runtime, Session};
 use crate::telemetry::{names, Counter, Gauge, Histogram, HistogramSpec, Registry, TraceSink};
 
 use super::checkpoint::{latest_valid_checkpoint, prune_checkpoints, Checkpoint};
-use super::protocol::{Event, RunId, RunPhase, RunSpec, RunStatus};
+use super::protocol::{Event, InferOut, ModelInfo, ModelSpec, RunId, RunPhase, RunSpec, RunStatus};
 
 /// Per-run serve-layer metric handles, labeled `run=<display name>`.
 /// `forwards`/`step_seconds` resolve the *same* registry instances the
@@ -634,5 +634,199 @@ impl RunState {
             last_checkpoint_age_s: self.last_checkpoint_at.map(|t| t.elapsed().as_secs_f64()),
             flight_dump: self.last_flight_dump.clone(),
         }
+    }
+
+    /// This run's row in the gateway's model table: the serving key is
+    /// the run's display name, the source is `"run"`.
+    pub fn model_info(&self) -> ModelInfo {
+        let cfg = self.session.model_config();
+        ModelInfo {
+            name: self.spec.display_name(),
+            model: self.spec.model.clone(),
+            task: self.spec.task.clone(),
+            batch: cfg.batch,
+            seq: cfg.seq,
+            n_classes: self.batcher.task.n_classes,
+            span: self.batcher.task.is_span(),
+            source: "run".to_string(),
+            step: self.lp.next_step(),
+        }
+    }
+
+    /// Gateway inference against this run's *current* device-resident
+    /// parameters. Read-only — it binds the session exactly like `eval`
+    /// does, so serving requests mid-training cannot perturb the
+    /// training trajectory (the serve bit-identity test runs with a
+    /// gateway attached to prove it).
+    pub fn infer(&self, rt: &Runtime, n: usize, ids: &[i32], mask: &[f32]) -> Result<InferOut> {
+        let mut sp = self.metrics.tracer.as_ref().map(|t| t.span("gateway", "batch"));
+        if let Some(t) = sp.as_mut() {
+            t.run(self.spec.display_name());
+            t.step(self.lp.next_step());
+            t.arg("n", n as f64);
+        }
+        infer_logits(
+            rt,
+            &self.session,
+            self.batcher.task.n_classes,
+            self.batcher.task.is_span(),
+            n,
+            ids,
+            mask,
+        )
+    }
+}
+
+/// Shared classify forward for gateway inference: run pre-padded
+/// fixed-shape `[B*T]` buffers through `eval_logits` and truncate each
+/// of the `n` real rows to the task's live classes. This is exactly the
+/// scoring path [`crate::coordinator::evaluate`] takes (`C_model`-wide
+/// head, leading `n_classes` columns), so gateway predictions are
+/// bit-identical to offline evaluation of the same examples.
+pub(crate) fn infer_logits(
+    rt: &Runtime,
+    session: &Session,
+    n_classes: usize,
+    span: bool,
+    n: usize,
+    ids: &[i32],
+    mask: &[f32],
+) -> Result<InferOut> {
+    anyhow::ensure!(
+        !span,
+        "model '{}' has a span head; /v1/classify serves classification heads only",
+        session.model
+    );
+    let cfg = session.model_config();
+    let (b, t) = (cfg.batch, cfg.seq);
+    anyhow::ensure!(n >= 1 && n <= b, "micro-batch of {n} rows, model batch is {b}");
+    anyhow::ensure!(
+        ids.len() == b * t && mask.len() == b * t,
+        "padded buffers must be [{b}x{t}]: got {} ids, {} mask",
+        ids.len(),
+        mask.len()
+    );
+    let exe = rt.executable(&session.model, "eval_logits")?;
+    let ids_l = lit_i32(ids, &[b, t])?;
+    let mask_l = lit_f32(mask, &[b, t])?;
+    let outs = session
+        .bind_params(exe.call())?
+        .literal("ids", &ids_l)?
+        .literal("mask", &mask_l)?
+        .run()?;
+    let logits = to_vec_f32(&outs[0])?; // [B, C_model]
+    let c_model = logits.len() / b;
+    anyhow::ensure!(
+        c_model >= n_classes,
+        "model head is {c_model} wide, task scores {n_classes} classes"
+    );
+    let mut rows = Vec::with_capacity(n * n_classes);
+    for r in 0..n {
+        rows.extend_from_slice(&logits[r * c_model..r * c_model + n_classes]);
+    }
+    Ok(InferOut { logits: rows, n, n_classes })
+}
+
+/// A gateway-loaded, inference-only model: a device-resident session
+/// restored from a checkpoint (or fresh/pretrained init) with no
+/// optimizer, batcher or training loop attached. Lives on the worker
+/// thread next to the [`RunState`]s and is served through the same
+/// `Infer` request.
+pub(crate) struct ServedModel {
+    pub info: ModelInfo,
+    session: Session,
+    tracer: Option<Arc<TraceSink>>,
+}
+
+impl ServedModel {
+    /// Open the session, instantiate the task head, and (when the spec
+    /// names a checkpoint) validate provenance and restore trainable
+    /// parameters — the inference-relevant subset of the `resume_from`
+    /// checks in [`build_parts`]. Optimizer state is ignored: nothing
+    /// here ever steps.
+    pub fn open(rt: &Runtime, spec: &ModelSpec) -> Result<Self> {
+        let mut session = if spec.pretrained {
+            Session::open_pretrained(rt, &spec.model)?
+        } else {
+            Session::open(rt, &spec.model)?
+        };
+        let kind = TaskKind::from_name(&spec.task)
+            .ok_or_else(|| anyhow::anyhow!("unknown task '{}'", spec.task))?;
+        let task = kind.instantiate(session.model_config(), 0)?;
+        anyhow::ensure!(
+            !task.is_span(),
+            "{}: task '{}' has a span head; the gateway serves classification only",
+            spec.display_name(),
+            spec.task
+        );
+        let mut source = if spec.pretrained { "pretrained" } else { "fresh" }.to_string();
+        let mut step = 0u64;
+        if let Some(path) = &spec.checkpoint {
+            let ck = Checkpoint::load(Path::new(path)).with_context(|| {
+                format!("{}: loading serving checkpoint", spec.display_name())
+            })?;
+            anyhow::ensure!(
+                ck.model == spec.model,
+                "serving checkpoint is for model '{}', spec says '{}'",
+                ck.model,
+                spec.model
+            );
+            anyhow::ensure!(
+                ck.task == spec.task,
+                "serving checkpoint is for task '{}', spec says '{}'",
+                ck.task,
+                spec.task
+            );
+            anyhow::ensure!(
+                ck.pretrained == spec.pretrained,
+                "serving checkpoint was trained with pretrained = {}, spec says {}",
+                ck.pretrained,
+                spec.pretrained
+            );
+            anyhow::ensure!(
+                ck.trainable.len() == session.d_trainable(),
+                "serving checkpoint holds {} trainable f32s, model '{}' trains {}",
+                ck.trainable.len(),
+                spec.model,
+                session.d_trainable()
+            );
+            step = ck.step;
+            source = format!("checkpoint:{path}");
+            session.set_trainable(rt, ck.trainable)?;
+        }
+        let cfg = session.model_config();
+        let info = ModelInfo {
+            name: spec.display_name(),
+            model: spec.model.clone(),
+            task: spec.task.clone(),
+            batch: cfg.batch,
+            seq: cfg.seq,
+            n_classes: task.n_classes,
+            span: task.is_span(),
+            source,
+            step,
+        };
+        Ok(Self {
+            info,
+            session,
+            tracer: rt.telemetry().tracer(),
+        })
+    }
+
+    pub fn infer(&self, rt: &Runtime, n: usize, ids: &[i32], mask: &[f32]) -> Result<InferOut> {
+        let mut sp = self.tracer.as_ref().map(|t| t.span("gateway", "batch"));
+        if let Some(t) = sp.as_mut() {
+            t.detail(self.info.name.clone());
+            t.arg("n", n as f64);
+        }
+        infer_logits(
+            rt,
+            &self.session,
+            self.info.n_classes,
+            self.info.span,
+            n,
+            ids,
+            mask,
+        )
     }
 }

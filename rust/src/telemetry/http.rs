@@ -1,50 +1,202 @@
-//! Tiny blocking HTTP listener for the Prometheus endpoint.
+//! Small routed HTTP/1.1 server shared by the observability endpoints
+//! and the inference gateway.
 //!
-//! One `std::net::TcpListener` accept loop on a dedicated thread, one
-//! connection at a time — a scrape is a point read of atomics and a
-//! ~10 KiB write, so there is nothing to parallelize. Every request gets
-//! the full exposition (path ignored). Bind `127.0.0.1:0` in tests and
-//! read the real port back from [`MetricsServer::addr`]. Dropping the
-//! server stops the thread (a self-connect unblocks `accept`).
+//! One `std::net::TcpListener` accept loop on a dedicated thread; each
+//! connection is served on its own short-lived thread so a slow request
+//! (a gateway classify waiting on a micro-batch flush) never blocks a
+//! concurrent `/metrics` scrape — and so concurrent classify requests
+//! can actually coalesce into one micro-batch. Routing is an exact
+//! path→handler map ([`Router`]): unknown paths get `404`, not the
+//! Prometheus exposition. Bind `127.0.0.1:0` in tests and read the real
+//! port back from [`HttpServer::addr`]. Dropping the server stops the
+//! accept thread (a self-connect unblocks `accept`) and joins every
+//! in-flight connection thread.
 
+use std::collections::BTreeMap;
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
 use super::prometheus;
 use super::registry::Registry;
 
-pub struct MetricsServer {
-    addr: SocketAddr,
-    stop: Arc<AtomicBool>,
-    handle: Option<JoinHandle<()>>,
+/// Cap on the request head (request line + headers).
+const MAX_HEAD: usize = 16 * 1024;
+/// Cap on a request body (`413` beyond this).
+const MAX_BODY: usize = 1024 * 1024;
+
+/// A parsed request: method, path (query string stripped), UTF-8 body.
+#[derive(Debug, Clone)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    pub body: String,
 }
 
-impl MetricsServer {
-    pub fn start(addr: impl ToSocketAddrs, registry: Arc<Registry>) -> std::io::Result<Self> {
+/// A response under construction. Build with the constructors, add
+/// extra headers (e.g. `Retry-After`) with [`HttpResponse::header`].
+#[derive(Debug, Clone)]
+pub struct HttpResponse {
+    pub status: u16,
+    pub content_type: String,
+    pub headers: Vec<(String, String)>,
+    pub body: String,
+}
+
+impl HttpResponse {
+    pub fn text(status: u16, body: impl Into<String>) -> Self {
+        Self {
+            status,
+            content_type: "text/plain; charset=utf-8".into(),
+            headers: Vec::new(),
+            body: body.into(),
+        }
+    }
+
+    pub fn json(status: u16, body: impl Into<String>) -> Self {
+        Self {
+            status,
+            content_type: "application/json".into(),
+            headers: Vec::new(),
+            body: body.into(),
+        }
+    }
+
+    pub fn header(mut self, name: &str, value: impl Into<String>) -> Self {
+        self.headers.push((name.into(), value.into()));
+        self
+    }
+
+    fn write_to(&self, stream: &mut TcpStream) -> std::io::Result<()> {
+        let mut head = format!(
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n",
+            self.status,
+            reason(self.status),
+            self.content_type,
+            self.body.len()
+        );
+        for (k, v) in &self.headers {
+            head.push_str(k);
+            head.push_str(": ");
+            head.push_str(v);
+            head.push_str("\r\n");
+        }
+        head.push_str("\r\n");
+        stream.write_all(head.as_bytes())?;
+        stream.write_all(self.body.as_bytes())
+    }
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+pub type Handler = Arc<dyn Fn(&HttpRequest) -> HttpResponse + Send + Sync>;
+
+/// Exact path→handler map. Unknown paths answer `404`.
+#[derive(Default, Clone)]
+pub struct Router {
+    routes: BTreeMap<String, Handler>,
+}
+
+impl Router {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register `path` (builder-style; later registrations win).
+    pub fn route(
+        mut self,
+        path: &str,
+        handler: impl Fn(&HttpRequest) -> HttpResponse + Send + Sync + 'static,
+    ) -> Self {
+        self.routes.insert(path.to_string(), Arc::new(handler));
+        self
+    }
+
+    /// Registered paths, sorted (the 404 body lists them).
+    pub fn paths(&self) -> Vec<String> {
+        self.routes.keys().cloned().collect()
+    }
+
+    pub fn dispatch(&self, req: &HttpRequest) -> HttpResponse {
+        match self.routes.get(&req.path) {
+            Some(h) => h(req),
+            None => HttpResponse::text(
+                404,
+                format!("no route {}; routes: {}\n", req.path, self.paths().join(" ")),
+            ),
+        }
+    }
+}
+
+/// Threaded HTTP server around a [`Router`].
+pub struct HttpServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl HttpServer {
+    pub fn start(
+        addr: impl ToSocketAddrs,
+        thread_name: &str,
+        router: Router,
+    ) -> std::io::Result<Self> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
         let flag = stop.clone();
-        let handle = std::thread::Builder::new()
-            .name("fzoo-metrics".into())
+        let track = conns.clone();
+        let router = Arc::new(router);
+        let accept = std::thread::Builder::new()
+            .name(thread_name.to_string())
             .spawn(move || {
                 for conn in listener.incoming() {
                     if flag.load(Ordering::SeqCst) {
                         break;
                     }
-                    if let Ok(stream) = conn {
-                        let _ = serve_one(stream, &registry);
+                    let Ok(stream) = conn else { continue };
+                    let r = router.clone();
+                    let spawned = std::thread::Builder::new()
+                        .name("fzoo-http-conn".into())
+                        .spawn(move || {
+                            let _ = serve_conn(stream, &r);
+                        });
+                    let mut held = track.lock().unwrap();
+                    // Reap finished connection threads so the vec stays
+                    // bounded by the number of *live* connections.
+                    let (done, live): (Vec<_>, Vec<_>) =
+                        held.drain(..).partition(|h| h.is_finished());
+                    *held = live;
+                    for h in done {
+                        let _ = h.join();
+                    }
+                    if let Ok(h) = spawned {
+                        held.push(h);
                     }
                 }
             })?;
         Ok(Self {
             addr: local,
             stop,
-            handle: Some(handle),
+            accept: Some(accept),
+            conns,
         })
     }
 
@@ -55,54 +207,148 @@ impl MetricsServer {
     }
 }
 
-impl Drop for MetricsServer {
+impl Drop for HttpServer {
     fn drop(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
         // unblock accept() so the thread observes the flag
         let _ = TcpStream::connect(self.addr);
-        if let Some(h) = self.handle.take() {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let held = std::mem::take(&mut *self.conns.lock().unwrap());
+        for h in held {
             let _ = h.join();
         }
     }
 }
 
-fn serve_one(mut stream: TcpStream, registry: &Registry) -> std::io::Result<()> {
-    stream.set_read_timeout(Some(Duration::from_secs(2)))?;
-    // Drain the request head (request line + headers); bodies are not
-    // expected on a scrape and are ignored.
-    let mut head = Vec::new();
+fn serve_conn(mut stream: TcpStream, router: &Router) -> std::io::Result<()> {
+    // Liberal read timeout: a classify request legitimately idles while
+    // its micro-batch waits out `max_wait_us` plus a training step.
+    stream.set_read_timeout(Some(Duration::from_secs(5)))?;
+    match read_request(&mut stream) {
+        Ok(Some(req)) => router.dispatch(&req).write_to(&mut stream),
+        Ok(None) => Ok(()), // peer closed without sending anything
+        Err(resp) => resp.write_to(&mut stream),
+    }
+}
+
+/// Parse one request off the stream. `Err` carries the error response
+/// to send (`400`/`413`); `Ok(None)` means the peer sent nothing.
+fn read_request(stream: &mut TcpStream) -> Result<Option<HttpRequest>, HttpResponse> {
+    let bad = |m: &str| HttpResponse::text(400, format!("{m}\n"));
+    let mut raw = Vec::new();
     let mut buf = [0u8; 1024];
-    loop {
-        let n = stream.read(&mut buf)?;
-        if n == 0 {
-            break;
+    let head_end = loop {
+        if let Some(i) = raw.windows(4).position(|w| w == b"\r\n\r\n") {
+            break i + 4;
         }
-        head.extend_from_slice(&buf[..n]);
-        if head.windows(4).any(|w| w == b"\r\n\r\n") || head.len() > 8192 {
-            break;
+        if raw.len() > MAX_HEAD {
+            return Err(bad("request head too large"));
+        }
+        match stream.read(&mut buf) {
+            Ok(0) => {
+                if raw.is_empty() {
+                    return Ok(None);
+                }
+                return Err(bad("truncated request head"));
+            }
+            Ok(n) => raw.extend_from_slice(&buf[..n]),
+            Err(_) => return Err(bad("read error or timeout on request head")),
+        }
+    };
+    let head = String::from_utf8_lossy(&raw[..head_end]).into_owned();
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_uppercase();
+    let target = parts.next().unwrap_or("");
+    if method.is_empty() || target.is_empty() {
+        return Err(bad("malformed request line"));
+    }
+    // Query strings are accepted but not routed on.
+    let path = target.split('?').next().unwrap_or(target).to_string();
+    let mut content_len = 0usize;
+    for line in lines {
+        if let Some((name, value)) = line.split_once(':') {
+            if name.trim().eq_ignore_ascii_case("content-length") {
+                content_len = value
+                    .trim()
+                    .parse()
+                    .map_err(|_| bad("unparseable Content-Length"))?;
+            }
         }
     }
-    let body = prometheus::render(registry);
-    let resp = format!(
-        "HTTP/1.1 200 OK\r\n\
-         Content-Type: text/plain; version=0.0.4; charset=utf-8\r\n\
-         Content-Length: {}\r\n\
-         Connection: close\r\n\r\n{body}",
-        body.len()
-    );
-    stream.write_all(resp.as_bytes())
+    if content_len > MAX_BODY {
+        return Err(HttpResponse::text(413, "request body too large\n"));
+    }
+    let mut body = raw[head_end..].to_vec();
+    while body.len() < content_len {
+        match stream.read(&mut buf) {
+            Ok(0) => return Err(bad("truncated request body")),
+            Ok(n) => body.extend_from_slice(&buf[..n]),
+            Err(_) => return Err(bad("read error or timeout on request body")),
+        }
+    }
+    body.truncate(content_len);
+    let body = String::from_utf8(body).map_err(|_| bad("request body is not UTF-8"))?;
+    Ok(Some(HttpRequest { method, path, body }))
+}
+
+/// The standard observability routes every fzoo HTTP server carries:
+/// `/metrics` (Prometheus text exposition) and `/trace` (the live
+/// flight-recorder ring as Chrome-trace JSON, so Perfetto can attach to
+/// a running job instead of waiting for end-of-serve). Build on the
+/// returned router with [`Router::route`].
+pub fn telemetry_routes(registry: Arc<Registry>) -> Router {
+    let metrics_reg = registry.clone();
+    Router::new()
+        .route("/metrics", move |_req| {
+            let body = prometheus::render(&metrics_reg);
+            let mut resp = HttpResponse::text(200, body);
+            resp.content_type = "text/plain; version=0.0.4; charset=utf-8".into();
+            resp
+        })
+        .route("/trace", move |_req| match registry.tracer() {
+            None => HttpResponse::text(404, "tracing is not enabled (no trace sink installed)\n"),
+            Some(sink) => HttpResponse::json(200, sink.live_flight_json().to_string()),
+        })
+}
+
+/// The Prometheus (+ live trace) endpoint: a [`HttpServer`] carrying
+/// exactly [`telemetry_routes`].
+pub struct MetricsServer {
+    server: HttpServer,
+}
+
+impl MetricsServer {
+    pub fn start(addr: impl ToSocketAddrs, registry: Arc<Registry>) -> std::io::Result<Self> {
+        let server = HttpServer::start(addr, "fzoo-metrics", telemetry_routes(registry))?;
+        Ok(Self { server })
+    }
+
+    /// The bound address (with the kernel-chosen port when `:0` was
+    /// requested).
+    pub fn addr(&self) -> SocketAddr {
+        self.server.addr()
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::telemetry::trace::TraceSink;
 
-    fn scrape(addr: SocketAddr) -> String {
+    fn request(addr: SocketAddr, raw: &str) -> String {
         let mut s = TcpStream::connect(addr).unwrap();
-        s.write_all(b"GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        s.write_all(raw.as_bytes()).unwrap();
         let mut out = String::new();
         s.read_to_string(&mut out).unwrap();
         out
+    }
+
+    fn scrape(addr: SocketAddr) -> String {
+        request(addr, "GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n")
     }
 
     #[test]
@@ -123,5 +369,53 @@ mod tests {
         // Drop joins the listener thread, which closes the socket.
         drop(server);
         assert!(TcpStream::connect(addr).is_err(), "listener must be closed after drop");
+    }
+
+    #[test]
+    fn unknown_paths_get_404() {
+        let reg = Arc::new(Registry::new());
+        let server = MetricsServer::start("127.0.0.1:0", reg).unwrap();
+        let resp = request(server.addr(), "GET /nope HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(resp.starts_with("HTTP/1.1 404"), "got: {resp}");
+        assert!(resp.contains("/metrics"), "404 should list routes: {resp}");
+    }
+
+    #[test]
+    fn router_dispatches_posts_with_bodies() {
+        let router = Router::new().route("/echo", |req| {
+            HttpResponse::text(200, format!("{} {}", req.method, req.body))
+        });
+        let server = HttpServer::start("127.0.0.1:0", "fzoo-test-http", router).unwrap();
+        let resp = request(
+            server.addr(),
+            "POST /echo HTTP/1.1\r\nHost: x\r\nContent-Length: 5\r\n\r\nhello",
+        );
+        assert!(resp.starts_with("HTTP/1.1 200"), "got: {resp}");
+        assert!(resp.ends_with("POST hello"), "got: {resp}");
+
+        let bad = request(server.addr(), "POST /echo HTTP/1.1\r\nContent-Length: zz\r\n\r\n");
+        assert!(bad.starts_with("HTTP/1.1 400"), "got: {bad}");
+    }
+
+    #[test]
+    fn trace_route_serves_live_flight_ring() {
+        let reg = Arc::new(Registry::new());
+        let server = MetricsServer::start("127.0.0.1:0", reg.clone()).unwrap();
+        let off = request(server.addr(), "GET /trace HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(off.starts_with("HTTP/1.1 404"), "no sink installed: {off}");
+
+        let sink = Arc::new(TraceSink::new());
+        sink.set_device("test-dev");
+        {
+            let scope = sink.begin_step("r1", 3);
+            sink.span("step", "forward").finish();
+            scope.complete();
+        }
+        reg.set_tracer(sink);
+        let on = request(server.addr(), "GET /trace HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(on.starts_with("HTTP/1.1 200"), "got: {on}");
+        assert!(on.contains("application/json"), "got: {on}");
+        assert!(on.contains("traceEvents"), "got: {on}");
+        assert!(on.contains("forward"), "flight ring event missing: {on}");
     }
 }

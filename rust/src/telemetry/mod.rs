@@ -53,7 +53,7 @@ pub mod trace;
 
 pub use flight::{FlightRecorder, StepTrace};
 pub use histogram::{Histogram, HistogramSnapshot, HistogramSpec};
-pub use http::MetricsServer;
+pub use http::{telemetry_routes, Handler, HttpRequest, HttpResponse, HttpServer, MetricsServer, Router};
 pub use jsonl::{JsonlExporter, JsonlFlusher};
 pub use registry::{
     Counter, FamilySnapshot, Gauge, LabelPairs, MetricKind, MetricSnapshot, Registry,
@@ -75,6 +75,7 @@ pub use trace::{chrome_trace_json, StepScope, TraceEvent, TraceSink, TraceSpan};
 /// |-------------|--------------------------------------|--------|
 /// | `device=`   | runtime families (and trace events)  | `<platform>:<ordinal>`, e.g. `cpu:0`; constant today, one series per device under multi-device failover |
 /// | `run=`      | training + serve per-run families    | the run's display name (job `name` or `model-task-sN`) |
+/// | `model=`    | gateway families                     | the serving key: a loaded model's `name` or a live run's display name |
 /// | `phase=`    | `fzoo_step_phase_seconds`            | `batch` / `optim` / `eval` |
 /// | `optimizer=`| probe families                       | optimizer display name (`FZOO`, `FZOO-R(m)`, ...) |
 /// | `site=`     | `fzoo_faults_injected_total`         | fault site (`execute`, `to_host`, `checkpoint_write`, `nonfinite_loss`) |
@@ -124,4 +125,21 @@ pub mod names {
     /// Step index of the run's newest on-disk checkpoint (gauge; the
     /// distance to the current step is the run's rollback exposure).
     pub const LAST_CHECKPOINT_STEP: &str = "fzoo_last_checkpoint_step";
+
+    // inference gateway (label: model — the serving key, i.e. a loaded
+    // model's name or a live run's display name)
+    /// Admitted classify requests.
+    pub const GATEWAY_REQUESTS: &str = "fzoo_gateway_requests_total";
+    /// Requests refused by admission control (queue full or draining).
+    pub const GATEWAY_REJECTED: &str = "fzoo_gateway_rejected_total";
+    /// Enqueue→reply latency per request (queue wait + batch forward).
+    pub const GATEWAY_REQUEST_SECONDS: &str = "fzoo_gateway_request_seconds";
+    /// Micro-batch round-trip latency through the serve worker.
+    pub const GATEWAY_BATCH_SECONDS: &str = "fzoo_gateway_batch_seconds";
+    /// Real examples per dispatched micro-batch (coalescing quality).
+    pub const GATEWAY_BATCH_FILL: &str = "fzoo_gateway_batch_fill";
+    /// Micro-batches dispatched to the worker.
+    pub const GATEWAY_BATCHES: &str = "fzoo_gateway_batches_total";
+    /// Waiting examples in the admission queue (gauge).
+    pub const GATEWAY_QUEUE_DEPTH: &str = "fzoo_gateway_queue_depth";
 }

@@ -308,6 +308,39 @@ impl TraceSink {
         Some(path.to_string_lossy().into_owned())
     }
 
+    /// Snapshot of *every* run's flight ring as one Chrome-trace JSON
+    /// object — the live counterpart of [`TraceSink::dump_flight`],
+    /// served over HTTP (`GET /trace` on the metrics/gateway server) so
+    /// Perfetto can attach to a running job instead of waiting for
+    /// end-of-serve. The `fzoo` header lists each ring's step window.
+    pub fn live_flight_json(&self) -> Value {
+        let (events, device, runs, dropped) = {
+            let inner = self.inner.lock().unwrap();
+            let mut events = Vec::new();
+            let mut runs = Vec::new();
+            for (run, fl) in &inner.flights {
+                for st in fl.iter() {
+                    events.extend(st.events.iter().cloned());
+                }
+                if let (Some(first), Some(last)) = (fl.first_step(), fl.last_step()) {
+                    runs.push(Value::obj(vec![
+                        ("run", Value::str(run.clone())),
+                        ("first_step", Value::num(first as f64)),
+                        ("last_step", Value::num(last as f64)),
+                        ("steps", Value::num(fl.len() as f64)),
+                    ]));
+                }
+            }
+            (events, inner.device.clone(), runs, inner.dropped)
+        };
+        let header = Value::obj(vec![
+            ("live", Value::Bool(true)),
+            ("runs", Value::Arr(runs)),
+            ("dropped", Value::num(dropped as f64)),
+        ]);
+        chrome_trace_json(&events, &device, &[("fzoo", header)])
+    }
+
     /// Write `run`'s full timeline as `<dir>/<run>.trace.json`.
     pub fn write_run_trace(&self, run: &str) -> Result<PathBuf> {
         let dir = self

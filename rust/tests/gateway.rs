@@ -1,0 +1,375 @@
+//! Gateway-subsystem tests on the tiny artifacts: padded-micro-batch
+//! bit-identity against offline `coordinator::evaluate` scoring, the
+//! HTTP end-to-end path (concurrent clients, coalescing, admission
+//! `503`s, graceful drain), and inference over a live training run
+//! without perturbing its loss series.
+//!
+//! Requires `make artifacts` (the tiny-* models) to have run.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use fzoo::coordinator::metrics::argmax;
+use fzoo::coordinator::{TrainOpts, Trainer};
+use fzoo::data::{Batcher, TaskKind};
+use fzoo::gateway::{pad_micro_batch, Gateway, GatewayConfig};
+use fzoo::optim::OptimizerKind;
+use fzoo::runtime::{lit_f32, lit_i32, to_vec_f32, Runtime, Session};
+use fzoo::serve::{Checkpoint, ModelSpec, RunManager, RunSpec};
+use fzoo::telemetry::{names, Registry};
+use fzoo::util::json;
+
+fn artifacts() -> PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../artifacts")
+}
+
+/// Minimal HTTP/1.1 request; returns (status, raw head, body).
+fn http(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, String, String) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\
+         Content-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    s.write_all(req.as_bytes()).unwrap();
+    let mut text = String::new();
+    s.read_to_string(&mut text).unwrap();
+    let (head, body) = text.split_once("\r\n\r\n").expect("HTTP header/body split");
+    let status: u16 = head
+        .split_whitespace()
+        .nth(1)
+        .expect("status line")
+        .parse()
+        .expect("numeric status");
+    (status, head.to_string(), body.to_string())
+}
+
+/// JSON array text for a classify body.
+fn arr_i32(xs: &[i32]) -> String {
+    let items: Vec<String> = xs.iter().map(|x| x.to_string()).collect();
+    format!("[{}]", items.join(","))
+}
+
+fn arr_f32(xs: &[f32]) -> String {
+    let items: Vec<String> = xs.iter().map(|x| format!("{x}")).collect();
+    format!("[{}]", items.join(","))
+}
+
+/// Offline reference: run `eval_logits` on one fixed-shape batch and
+/// slice out the live-class logits rows, exactly like
+/// `coordinator::evaluate`.
+fn offline_rows(
+    rt: &Runtime,
+    session: &Session,
+    ids: &[i32],
+    mask: &[f32],
+    b: usize,
+    n_classes: usize,
+) -> Vec<Vec<f32>> {
+    let t = ids.len() / b;
+    let exe = rt.executable(&session.model, "eval_logits").unwrap();
+    let ids_l = lit_i32(ids, &[b, t]).unwrap();
+    let mask_l = lit_f32(mask, &[b, t]).unwrap();
+    let outs = session
+        .bind_params(exe.call())
+        .unwrap()
+        .literal("ids", &ids_l)
+        .unwrap()
+        .literal("mask", &mask_l)
+        .unwrap()
+        .run()
+        .unwrap();
+    let logits = to_vec_f32(&outs[0]).unwrap();
+    let c_model = logits.len() / b;
+    (0..b)
+        .map(|r| logits[r * c_model..r * c_model + n_classes].to_vec())
+        .collect()
+}
+
+#[test]
+fn padded_micro_batches_match_offline_eval_bit_for_bit() {
+    // The padding invariant that makes online serving trustworthy: a row's
+    // logits are bit-identical whether it rides alone (padded with the
+    // canonical pad row), in a partial micro-batch, or in the full offline
+    // eval batch. The worker-side path (`client.infer`) is compared
+    // against an independent in-process runtime.
+    let mgr = RunManager::start(artifacts()).unwrap();
+    let client = mgr.client();
+    let info = client.load_model(ModelSpec::new("tiny-enc", "sst2")).unwrap();
+    let (b, t) = (info.batch, info.seq);
+
+    // independent reference: same model freshly opened in-process (session
+    // init is deterministic), same eval batch the offline evaluator uses
+    let rt = Runtime::load(artifacts()).unwrap();
+    let session = Session::open(&rt, "tiny-enc").unwrap();
+    let task = TaskKind::Sst2.instantiate(session.model_config(), 0).unwrap();
+    let n_classes = task.n_classes;
+    let batcher = Batcher::new(task, &session.entry.config, 0);
+    let batch = batcher.eval_batch(0);
+    assert_eq!((batch.b, batch.t), (b, t));
+    let reference = offline_rows(&rt, &session, &batch.ids, &batch.mask, b, n_classes);
+
+    let row = |r: usize| (&batch.ids[r * t..(r + 1) * t], &batch.mask[r * t..(r + 1) * t]);
+
+    // one-by-one: each example alone in a pad-row-filled micro-batch
+    for r in 0..b {
+        let (rid, rmask) = row(r);
+        let (ids, mask) = pad_micro_batch(&[(rid, rmask)], b, t).unwrap();
+        let out = client.infer(&info.name, 1, ids, mask).unwrap();
+        assert_eq!(out.n_classes, n_classes);
+        for (c, (x, y)) in out.row(0).iter().zip(&reference[r]).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "row {r} class {c}: solo {x} vs offline {y}"
+            );
+        }
+    }
+
+    // partial micro-batch: the first k examples together
+    let k = b.min(3);
+    let rows: Vec<(&[i32], &[f32])> = (0..k).map(row).collect();
+    let (ids, mask) = pad_micro_batch(&rows, b, t).unwrap();
+    let out = client.infer(&info.name, k, ids, mask).unwrap();
+    for r in 0..k {
+        for (c, (x, y)) in out.row(r).iter().zip(&reference[r]).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "row {r} class {c}: micro-batch {x} vs offline {y}"
+            );
+        }
+    }
+    mgr.shutdown().unwrap();
+}
+
+#[test]
+fn gateway_serves_checkpointed_model_end_to_end() {
+    // The full online path: train briefly, checkpoint, release the run,
+    // serve the checkpoint through the HTTP gateway, and hit it with
+    // concurrent clients. Predictions must match the offline evaluator on
+    // the restored parameters bit-for-bit, concurrent requests must
+    // coalesce into micro-batches, a zero-capacity lane must 503 without
+    // killing the worker, and the drain must answer everything admitted.
+    let dir = std::env::temp_dir().join(format!("fzoo-gateway-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let reg = Arc::new(Registry::new());
+    let mgr = RunManager::start_with_telemetry(artifacts(), None, reg.clone()).unwrap();
+    let client = mgr.client();
+
+    // train a few steps, export the parameters, release the run
+    let mut spec = RunSpec::new("tiny-enc", "sst2", OptimizerKind::fzoo(2e-3, 1e-3), 6).seed(1);
+    spec.checkpoint_dir = Some(dir.to_string_lossy().into_owned());
+    let h = client.submit(spec).unwrap();
+    client.train_steps(h.id, 6).unwrap();
+    h.wait().unwrap();
+    let ckpt_path = client.checkpoint(h.id).unwrap();
+    client.remove(h.id).unwrap();
+
+    // serve the checkpoint (+ a zero-capacity lane for admission tests)
+    let mut served = ModelSpec::new("tiny-enc", "sst2");
+    served.name = "m".into();
+    served.checkpoint = Some(ckpt_path.clone());
+    let info = client.load_model(served).unwrap();
+    assert!(info.source.starts_with("checkpoint:"), "source: {}", info.source);
+    assert_eq!(info.step, 6);
+    let (b, t) = (info.batch, info.seq);
+    let max_batch = b.min(4);
+
+    let mut reject = ModelSpec::new("tiny-enc", "sst2");
+    reject.name = "reject".into();
+    let reject_info = client.load_model(reject).unwrap();
+
+    let cfg = GatewayConfig {
+        max_batch,
+        max_wait_us: 500_000, // generous window: the clients below all land inside it
+        queue_cap: 64,
+    };
+    let closed = GatewayConfig { queue_cap: 0, ..GatewayConfig::default() };
+    let gw = Gateway::start(
+        client.clone(),
+        vec![(info.clone(), cfg), (reject_info, closed)],
+        "127.0.0.1:0",
+        reg.clone(),
+    )
+    .unwrap();
+    let addr = gw.addr();
+
+    // offline reference on the restored parameters
+    let rt = Runtime::load(artifacts()).unwrap();
+    let mut session = Session::open(&rt, "tiny-enc").unwrap();
+    let ck = Checkpoint::load(Path::new(&ckpt_path)).unwrap();
+    session.set_trainable(&rt, ck.trainable).unwrap();
+    let task = TaskKind::Sst2.instantiate(session.model_config(), 0).unwrap();
+    let n_classes = task.n_classes;
+    let batcher = Batcher::new(task, &session.entry.config, 0);
+    let batch = batcher.eval_batch(0);
+    let reference = offline_rows(&rt, &session, &batch.ids, &batch.mask, b, n_classes);
+    let preds: Vec<i32> = reference.iter().map(|r| argmax(r) as i32).collect();
+
+    // N concurrent clients, one eval row each (cycling if N > b)
+    let n_req = 2 * max_batch;
+    let workers: Vec<_> = (0..n_req)
+        .map(|i| {
+            let r = i % b;
+            let ids = arr_i32(&batch.ids[r * t..(r + 1) * t]);
+            let mask = arr_f32(&batch.mask[r * t..(r + 1) * t]);
+            std::thread::spawn(move || {
+                let body = format!(r#"{{"model":"m","ids":{ids},"mask":{mask}}}"#);
+                let (status, _, resp) = http(addr, "POST", "/v1/classify", &body);
+                (r, status, resp)
+            })
+        })
+        .collect();
+    for w in workers {
+        let (r, status, resp) = w.join().unwrap();
+        assert_eq!(status, 200, "row {r}: {resp}");
+        let v = json::parse(&resp).unwrap();
+        let label = v.req("label").unwrap().as_f64().unwrap() as i32;
+        assert_eq!(label, preds[r], "row {r} label vs offline evaluate");
+        let logits = v.req("logits").unwrap().as_arr().unwrap();
+        assert_eq!(logits.len(), n_classes);
+        // JSON round-trips f32 exactly through f64 formatting
+        for (c, (x, y)) in logits.iter().zip(&reference[r]).enumerate() {
+            let x = x.as_f32().unwrap();
+            assert_eq!(x.to_bits(), y.to_bits(), "row {r} class {c}: {x} vs {y}");
+        }
+        assert!(v.req("batch_n").unwrap().as_usize().unwrap() >= 1);
+    }
+
+    // coalescing: the N requests rode in far fewer worker round-trips
+    let l = [("model", "m")];
+    let batches = reg.counter(names::GATEWAY_BATCHES, "", &l).value();
+    let requests = reg.counter(names::GATEWAY_REQUESTS, "", &l).value();
+    assert_eq!(requests, n_req as f64, "every client was admitted");
+    assert!(
+        batches < n_req as f64,
+        "no coalescing: {batches} batches for {n_req} requests"
+    );
+
+    // admission control: the zero-capacity lane 503s with Retry-After...
+    let body = format!(r#"{{"model":"reject","ids":{}}}"#, arr_i32(&[1, 2, 3]));
+    let (status, head, resp) = http(addr, "POST", "/v1/classify", &body);
+    assert_eq!(status, 503, "{resp}");
+    assert!(head.contains("Retry-After"), "503 without Retry-After:\n{head}");
+    let rejected = reg.counter(names::GATEWAY_REJECTED, "", &[("model", "reject")]).value();
+    assert!(rejected >= 1.0);
+
+    // ...and the worker survives: the healthy lane still answers
+    let body = format!(
+        r#"{{"model":"m","ids":{},"mask":{}}}"#,
+        arr_i32(&batch.ids[..t]),
+        arr_f32(&batch.mask[..t])
+    );
+    let (status, _, resp) = http(addr, "POST", "/v1/classify", &body);
+    assert_eq!(status, 200, "{resp}");
+
+    // discovery + health + observability endpoints
+    let (status, _, resp) = http(addr, "GET", "/v1/models", "");
+    assert_eq!(status, 200);
+    let v = json::parse(&resp).unwrap();
+    let models = v.req("models").unwrap().as_arr().unwrap();
+    assert_eq!(models.len(), 2);
+    assert!(resp.contains("checkpoint:"), "{resp}");
+    let (status, _, resp) = http(addr, "GET", "/healthz", "");
+    assert_eq!(status, 200, "{resp}");
+    assert!(resp.contains("\"ok\""), "{resp}");
+    let (status, _, resp) = http(addr, "GET", "/metrics", "");
+    assert_eq!(status, 200);
+    assert!(
+        resp.contains(r#"fzoo_gateway_requests_total{model="m"}"#),
+        "metrics missing gateway series:\n{resp}"
+    );
+    let (status, _, _) = http(addr, "GET", "/nope", "");
+    assert_eq!(status, 404);
+
+    // malformed and unknown-model requests fail fast, not 500
+    let (status, _, _) = http(addr, "POST", "/v1/classify", "not json");
+    assert_eq!(status, 400);
+    let (status, _, _) =
+        http(addr, "POST", "/v1/classify", r#"{"model":"ghost","ids":[1]}"#);
+    assert_eq!(status, 404);
+    let too_long = arr_i32(&vec![1; t + 1]);
+    let (status, _, _) =
+        http(addr, "POST", "/v1/classify", &format!(r#"{{"model":"m","ids":{too_long}}}"#));
+    assert_eq!(status, 400);
+
+    // graceful drain: shutdown answers everything admitted, then the
+    // listener goes away
+    gw.shutdown();
+    assert!(TcpStream::connect(addr).is_err(), "listener still up after shutdown");
+    mgr.shutdown().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn live_run_inference_leaves_training_bit_identical() {
+    // Attach the gateway to a live training run, classify against it
+    // mid-run, and require the run's loss series to remain bit-identical
+    // to the same run trained bare — inference is scheduled between steps
+    // and must not touch training state.
+    let reg = Arc::new(Registry::new());
+    let mgr = RunManager::start_with_telemetry(artifacts(), None, reg.clone()).unwrap();
+    let client = mgr.client();
+    let spec = RunSpec::new("tiny-enc", "sst2", OptimizerKind::fzoo(2e-3, 1e-3), 12).seed(1);
+    let run_name = spec.display_name();
+    let h = client.submit(spec).unwrap();
+    client.train_steps(h.id, 12).unwrap();
+
+    let infos = client.models().unwrap();
+    let info = infos.iter().find(|m| m.name == run_name).expect("live run is servable");
+    assert_eq!(info.source, "run");
+    let gw = Gateway::start(
+        client.clone(),
+        vec![(info.clone(), GatewayConfig::default())],
+        "127.0.0.1:0",
+        reg,
+    )
+    .unwrap();
+    let addr = gw.addr();
+
+    // classify against the live parameters while steps execute; the
+    // model name may be omitted (single-model gateway)
+    for _ in 0..3 {
+        let (status, _, resp) = http(addr, "POST", "/v1/classify", r#"{"ids":[1,2,3]}"#);
+        assert_eq!(status, 200, "{resp}");
+        assert!(json::parse(&resp).unwrap().req("label").is_ok());
+    }
+
+    let live = h.wait().unwrap();
+    gw.shutdown();
+    mgr.shutdown().unwrap();
+
+    // bare reference: same run, no gateway, no telemetry
+    let rt = Runtime::load(artifacts()).unwrap();
+    let mut session = Session::open(&rt, "tiny-enc").unwrap();
+    let task = TaskKind::Sst2.instantiate(session.model_config(), 1).unwrap();
+    let opts = TrainOpts {
+        steps: 12,
+        eval_every: 0,
+        eval_batches: 0,
+        run_seed: 1,
+        ..Default::default()
+    };
+    let mut tr =
+        Trainer::with_opts(&rt, &mut session, task, OptimizerKind::fzoo(2e-3, 1e-3), opts)
+            .unwrap();
+    let bare = tr.train(12).unwrap();
+
+    assert_eq!(live.records.len(), bare.records.len());
+    for (x, y) in live.records.iter().zip(&bare.records) {
+        assert_eq!(
+            x.loss.to_bits(),
+            y.loss.to_bits(),
+            "step {}: with-gateway {} vs bare {}",
+            x.step,
+            x.loss,
+            y.loss
+        );
+        assert_eq!(x.forwards, y.forwards);
+    }
+}

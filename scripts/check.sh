@@ -10,6 +10,8 @@
 #      Prometheus scrape, fzoo_forward_passes_total must be non-empty
 #   6. trace smoke                — faulted serve with --trace-dir must
 #      leave a Chrome trace + flight dump that `trace summarize` reads
+#   7. gateway smoke              — live `fzoo gateway`: HTTP classifies
+#      answer with labels, the zero-capacity lane 503s, metrics are live
 #
 # The Rust tests need the AOT artifacts (`make artifacts`) for the
 # integration/invariant suites (serve, recovery, invariants); unit tests
@@ -36,5 +38,8 @@ echo "== metrics smoke: serve --metrics-addr + live scrape =="
 
 echo "== trace smoke: serve --trace-dir + flight dump + summarize =="
 ./scripts/trace_smoke.sh
+
+echo "== gateway smoke: online classify + admission 503 + metrics =="
+./scripts/gateway_smoke.sh
 
 echo "check: all gates passed"

@@ -1,0 +1,125 @@
+#!/usr/bin/env bash
+# Gateway smoke test (`make gateway-smoke`): launch `fzoo gateway` with a
+# normal lane and a zero-capacity "reject" lane, classify against the
+# normal one over HTTP, assert admission control 503s on the closed lane,
+# and check the fzoo_gateway_* metric families are live. Needs
+# `target/release/fzoo` and the tiny AOT artifacts.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+BIN=target/release/fzoo
+if [ ! -x "$BIN" ]; then
+    echo "gateway-smoke: $BIN not built (run: cargo build --release)" >&2
+    exit 1
+fi
+
+work="$(mktemp -d)"
+gw_pid=""
+cleanup() {
+    if [ -n "$gw_pid" ]; then
+        kill "$gw_pid" 2>/dev/null || true
+        wait "$gw_pid" 2>/dev/null || true
+    fi
+    rm -rf "$work"
+}
+trap cleanup EXIT
+
+# Two lanes over the same tiny model: "m" serves normally with a short
+# batching window; "reject" has queue_cap 0, so every classify against it
+# must be refused deterministically with 503 + Retry-After.
+cat > "$work/gateway.json" <<EOF
+{
+  "artifacts": "artifacts",
+  "gateway_addr": "127.0.0.1:0",
+  "max_wait_us": 2000,
+  "models": [
+    {"name": "m", "model": "tiny-enc", "task": "sst2"},
+    {"name": "reject", "model": "tiny-enc", "task": "sst2", "queue_cap": 0}
+  ]
+}
+EOF
+
+"$BIN" gateway --jobs "$work/gateway.json" > "$work/gateway.log" 2>&1 &
+gw_pid=$!
+
+# The CLI prints the kernel-chosen port as
+#   gateway: http://127.0.0.1:PORT/v1/classify ...
+base=""
+for _ in $(seq 1 120); do
+    base="$(sed -n 's#^gateway: \(http://[0-9.]*:[0-9]*\)/v1/classify.*#\1#p' \
+        "$work/gateway.log" | head -n1)"
+    [ -n "$base" ] && break
+    if ! kill -0 "$gw_pid" 2>/dev/null; then
+        echo "gateway-smoke: gateway exited before binding:" >&2
+        cat "$work/gateway.log" >&2
+        exit 1
+    fi
+    sleep 0.5
+done
+if [ -z "$base" ]; then
+    echo "gateway-smoke: bound address never printed:" >&2
+    cat "$work/gateway.log" >&2
+    exit 1
+fi
+
+# Health + discovery.
+curl -sf "$base/healthz" | grep -q '"ok"' || {
+    echo "gateway-smoke: /healthz not ok" >&2; exit 1; }
+curl -sf "$base/v1/models" | grep -q '"reject"' || {
+    echo "gateway-smoke: /v1/models misses the reject lane" >&2; exit 1; }
+
+# A few concurrent classifies against the normal lane must all answer 200
+# with a label (they also exercise the micro-batcher across connections).
+for i in 1 2 3 4; do
+    curl -sf -X POST "$base/v1/classify" \
+        -d '{"model":"m","ids":[1,2,3,4]}' > "$work/resp.$i" &
+done
+wait
+for i in 1 2 3 4; do
+    grep -q '"label"' "$work/resp.$i" || {
+        echo "gateway-smoke: classify $i returned no label:" >&2
+        cat "$work/resp.$i" >&2
+        exit 1
+    }
+done
+
+# The zero-capacity lane must 503 with Retry-After, without killing the
+# worker (checked by the healthy classify after it).
+code_headers="$(curl -s -D - -o "$work/reject.body" -X POST "$base/v1/classify" \
+    -d '{"model":"reject","ids":[1,2,3]}')"
+grep -q "^HTTP/1.1 503" <<<"$code_headers" || {
+    echo "gateway-smoke: reject lane did not 503:" >&2
+    printf '%s\n' "$code_headers" >&2
+    exit 1
+}
+grep -qi "^Retry-After:" <<<"$code_headers" || {
+    echo "gateway-smoke: 503 without Retry-After:" >&2
+    printf '%s\n' "$code_headers" >&2
+    exit 1
+}
+curl -sf -X POST "$base/v1/classify" -d '{"model":"m","ids":[9,8,7]}' |
+    grep -q '"label"' || {
+    echo "gateway-smoke: healthy lane broken after a rejection" >&2
+    exit 1
+}
+
+# Metric families: requests admitted, batches dispatched, rejections.
+body="$(curl -sf "$base/metrics")"
+for series in \
+    'fzoo_gateway_requests_total{model="m"}' \
+    'fzoo_gateway_batches_total{model="m"}' \
+    'fzoo_gateway_rejected_total{model="reject"}'; do
+    grep -qF "$series" <<<"$body" || {
+        echo "gateway-smoke: metrics missing $series; scrape:" >&2
+        printf '%s\n' "$body" >&2
+        exit 1
+    }
+done
+requests_line="$(grep -F 'fzoo_gateway_requests_total{model="m"}' <<<"$body" | head -n1)"
+value="${requests_line##* }"
+if ! awk -v v="$value" 'BEGIN { exit !(v >= 5) }'; then
+    echo "gateway-smoke: expected >= 5 admitted requests: $requests_line" >&2
+    exit 1
+fi
+
+echo "gateway-smoke: OK — $requests_line (503 + Retry-After on the closed lane)"
